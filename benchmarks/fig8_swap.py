@@ -1,0 +1,43 @@
+"""Fig. 8 analogue: Unbounded vs OS Swapping vs MAGE on all ten workloads
+(scaled memory budget ~40% of working set; calibration in common.py).
+
+Validated claims (§1/§8.4, scaled):
+  * MAGE outperforms OS swapping on all 10 workloads;
+  * >=4x speedup on >=7 of them (paper: 4-12x on 7);
+  * within 60% of Unbounded on all 10; within 15% on >=7;
+  * mvmul shows the LOWEST improvement (§8.4: high compute intensity).
+"""
+
+from __future__ import annotations
+
+from common import fmt_row, run_workload
+
+CASES = [("merge", 16384), ("sort", 16384), ("ljoin", 256), ("mvmul", 384),
+         ("binfclayer", 2048), ("rsum", 256), ("rstats", 128),
+         ("rmvmul", 24), ("n_rmatmul", 8), ("t_rmatmul", 8)]
+
+
+def run(budget_frac: float = 0.4, check: bool = True):
+    rows = {}
+    for name, n in CASES:
+        rows[name] = run_workload(name, n, budget_frac=budget_frac)
+        print("fig8:", fmt_row(name, rows[name]), flush=True)
+    sp4 = sum(r.speedup_vs_os >= 4 for r in rows.values())
+    ov15 = sum(r.pct_of_unbounded <= 0.15 for r in rows.values())
+    ov60 = sum(r.pct_of_unbounded <= 0.60 for r in rows.values())
+    beats = sum(r.os_s > r.mage_s for r in rows.values())
+    print(f"fig8 CLAIMS: beats-OS {beats}/10 | >=4x {sp4}/10 | "
+          f"<=15% {ov15}/10 | <=60% {ov60}/10")
+    if check:
+        assert beats == 10, "MAGE must beat OS on all workloads"
+        assert sp4 >= 7, f"expected >=4x on >=7 workloads, got {sp4}"
+        assert ov15 >= 7, f"expected <=15% overhead on >=7, got {ov15}"
+        assert ov60 == 10, f"expected <=60% overhead on all, got {ov60}"
+        mv = rows["mvmul"].speedup_vs_os
+        assert all(mv <= r.speedup_vs_os + 1e-9 for r in rows.values()), \
+            "mvmul should show the lowest improvement (§8.4)"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Harness roofline report: reads experiments/dryrun/*.json and prints the
+per-(arch x shape x mesh) three-term table that EXPERIMENTS.md §Roofline
+embeds."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_all() -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def table(rows: list[dict], mesh: str = "pod256") -> str:
+    out = [f"{'arch':24s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+           f"{'coll(ms)':>9s} {'dominant':>10s} {'useful':>7s} {'roofl':>6s} "
+           f"{'temp(GiB)':>10s}"]
+    for r in rows:
+        if r.get("mesh") != mesh or not r.get("ok") or r.get("seq_shard") \
+                or r.get("variant"):
+            continue  # variants are §Perf artifacts, not baseline cells
+        rf = r["roofline"]
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{1e3*rf['compute_s']:9.2f} {1e3*rf['memory_s']:9.2f} "
+            f"{1e3*rf['collective_s']:9.2f} {rf['dominant']:>10s} "
+            f"{rf['useful_flops_ratio']:7.2f} "
+            f"{rf['roofline_fraction']:6.3f} "
+            f"{r['memory']['temp_bytes']/2**30:10.2f}")
+    return "\n".join(out)
+
+
+def run(check: bool = True):
+    rows = load_all()
+    for mesh in ("pod256", "pod512"):
+        got = [r for r in rows if r.get("mesh") == mesh
+               and not r.get("seq_shard") and not r.get("variant")]
+        ok = [r for r in got if r.get("ok")]
+        print(f"\n=== {mesh}: {len(ok)}/{len(got)} baseline cells compile ===")
+        print(table(rows, mesh))
+        if check and got:
+            assert len(ok) == len(got), \
+                f"{mesh}: {len(got)-len(ok)} cells failed to compile"
+    variants = [r for r in rows if r.get("variant") and r.get("ok")]
+    if variants:
+        print("\n--- §Perf variants ---")
+        for r in variants:
+            rf = r["roofline"]
+            print(f"{r['arch']:24s} {r['shape']:12s} [{r['variant']:14s}] "
+                  f"dom={rf['dominant']:10s} "
+                  f"roofline={rf['roofline_fraction']:.3f} "
+                  f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig8,...] [--no-check]
+
+Prints each benchmark's rows plus a final name,seconds,claims CSV summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, "src")
+
+ALL = ["fig8", "fig9", "table1", "fig10", "fig11", "fig67", "fig1213",
+       "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else ALL
+    check = not args.no_check
+
+    import fig8_swap, fig9_swap_large, table1_planning, fig10_parallel  # noqa
+    import fig11_wan, fig67_frameworks, fig1213_apps, roofline  # noqa
+    mods = {"fig8": fig8_swap, "fig9": fig9_swap_large,
+            "table1": table1_planning, "fig10": fig10_parallel,
+            "fig11": fig11_wan, "fig67": fig67_frameworks,
+            "fig1213": fig1213_apps, "roofline": roofline}
+
+    rows = []
+    failed = []
+    for name in names:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            mods[name].run(check=check)
+            status = "pass"
+        except AssertionError as e:
+            status = f"CLAIM-FAIL: {e}"
+            failed.append(name)
+            traceback.print_exc()
+        except Exception as e:  # noqa: BLE001
+            status = f"ERROR: {type(e).__name__}: {e}"
+            failed.append(name)
+            traceback.print_exc()
+        rows.append((name, time.time() - t0, status))
+
+    print("\nname,seconds,status")
+    for name, secs, status in rows:
+        print(f"{name},{secs:.1f},{status}")
+    if failed:
+        print(f"FAILED: {failed}")
+        raise SystemExit(1)
+    print("ALL BENCHMARKS PASS")
+
+
+if __name__ == "__main__":
+    main()

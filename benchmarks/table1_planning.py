@@ -1,0 +1,47 @@
+"""Table 1 analogue: planning time and planner peak memory per workload.
+
+Claims (§8.5): planning time and memory-program size are linear in the
+COMPUTATION size (we check near-linear scaling across 2x problem sizes);
+CKKS planning is much cheaper than GC planning (coarser instructions); and
+the planner's own memory stays far below the runtime budget.
+"""
+
+from __future__ import annotations
+
+from common import run_workload
+
+CASES = [("merge", 8192), ("sort", 8192), ("ljoin", 256), ("mvmul", 256),
+         ("binfclayer", 2048), ("rsum", 256), ("rstats", 128),
+         ("rmvmul", 16), ("n_rmatmul", 8), ("t_rmatmul", 8)]
+
+
+def run(check: bool = True):
+    rows = {}
+    print(f"{'workload':12s} {'instrs':>8s} {'plan (s)':>9s} "
+          f"{'peak (MiB)':>11s} {'s / 10k instr':>14s}")
+    for name, n in CASES:
+        r = run_workload(name, n)
+        rows[name] = r
+        print(f"{name:12s} {r.instructions:8d} {r.plan_s:9.3f} "
+              f"{r.plan_peak_mb:11.2f} {1e4 * r.plan_s / r.instructions:14.4f}")
+    # linearity: doubling the problem ~doubles planning time (within 3x)
+    lin = {}
+    for name, n in [("merge", 16384), ("rsum", 512)]:
+        r2 = run_workload(name, n)
+        base = rows[name]
+        ratio = (r2.plan_s / max(base.plan_s, 1e-9)) / \
+            (r2.instructions / base.instructions)
+        lin[name] = ratio
+        print(f"linearity {name}: time-ratio/instr-ratio = {ratio:.2f}")
+    if check:
+        for name, ratio in lin.items():
+            assert 0.3 < ratio < 3.0, f"{name} planning not ~linear: {ratio}"
+        gc_rate = rows["merge"].plan_s / rows["merge"].instructions
+        ck_rate = rows["rsum"].plan_s / rows["rsum"].instructions
+        print(f"per-instr plan cost: gc={gc_rate*1e6:.1f}us "
+              f"ckks={ck_rate*1e6:.1f}us")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

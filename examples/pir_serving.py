@@ -1,0 +1,42 @@
+"""Computational PIR over CKKS (§8.8.2) + the serving-side memory program:
+a private database query executed homomorphically under a bounded budget,
+and the paged-KV decode schedule the same planner produces for LM serving.
+
+    PYTHONPATH=src python examples/pir_serving.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.core import PlanConfig  # noqa: E402
+from repro.serve.paged_kv import plan_kv_schedule  # noqa: E402
+from repro.workloads import get  # noqa: E402
+from repro.workloads.runner import check_against_oracle, run  # noqa: E402
+
+
+def main():
+    # --- private information retrieval, for real (CKKS) ---
+    n = 64
+    w = get("pir")
+    cfg = PlanConfig(num_frames=8, lookahead=50, prefetch_pages=2)
+    outs = run(w, n, cfg=cfg)
+    check_against_oracle(w, n, outs)
+    print(f"PIR over a {n}-element encrypted-query database: "
+          f"retrieved row decodes correctly under an 8-page budget")
+
+    # --- the same planner on an LM decode's KV page schedule ---
+    mem, rep = plan_kv_schedule(total_tokens=4096, page_size=64,
+                                hbm_pages=24, lookahead=8, prefetch=4)
+    rs, ss = rep.replacement, rep.schedule
+    print(f"paged-KV decode plan (4096 tokens, 24-page HBM budget): "
+          f"{rs.swap_ins} swap-ins, {ss.prefetched} prefetched, "
+          f"{ss.sync_fallbacks} stalls")
+    print("decode's KV access pattern is oblivious -> the MAGE planner "
+          "prefetches every page before the attention step that reads it")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""MAGE (OSDI'21) in JAX: memory programming for secure computation, built
+out as a multi-pod training/serving framework.  See DESIGN.md for the map:
+
+  repro.core        planner (placement / Belady MIN / prefetch scheduling),
+                    engine, storage, timing simulator, workers, jaxpr offload
+  repro.protocols   garbled circuits + CKKS drivers and DSLs
+  repro.kernels     Pallas TPU kernels (garble, ntt, paged_attn)
+  repro.workloads   the paper's ten workloads + §8.8 applications
+  repro.models/...  the LM framework (10 assigned architectures)
+  repro.launch      mesh, multi-pod dryrun, train, serve entry points
+"""
+
+__version__ = "1.0.0"

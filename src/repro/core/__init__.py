@@ -1,0 +1,35 @@
+"""MAGE core: memory programming for oblivious computations.
+
+Pipeline (paper §6): DSL trace → placement → replacement (Belady MIN) →
+scheduling (lookahead prefetch) → memory program → engine.
+"""
+
+from .bytecode import DIRECTIVES, INF, Instr, Op, Program
+from .dsl import Builder, Value, current_builder, trace
+from .engine import Channels, Engine, EngineStats, ProtocolDriver
+from .placement import PageAllocator
+from .planner import PlanConfig, PlanReport, plan, plan_unbounded
+from .replacement import (POLICIES, MinCleanPolicy, MinPolicy,
+                          ReplacementStats, plan_replacement)
+from .scheduling import ScheduleStats, plan_schedule
+from .simulator import (DeviceModel, SimResult, simulate_memory_program,
+                        simulate_os_paging, simulate_unbounded)
+from .storage import AsyncIO, MemmapStorage, RamStorage
+from .workers import (ProgramOptions, plan_workers, recv_into, run_workers,
+                      send_value, trace_workers)
+
+__all__ = [
+    "DIRECTIVES", "INF", "Instr", "Op", "Program",
+    "Builder", "Value", "current_builder", "trace",
+    "Channels", "Engine", "EngineStats", "ProtocolDriver",
+    "PageAllocator",
+    "PlanConfig", "PlanReport", "plan", "plan_unbounded",
+    "POLICIES", "MinCleanPolicy", "MinPolicy", "ReplacementStats",
+    "plan_replacement",
+    "ScheduleStats", "plan_schedule",
+    "DeviceModel", "SimResult", "simulate_memory_program",
+    "simulate_os_paging", "simulate_unbounded",
+    "AsyncIO", "MemmapStorage", "RamStorage",
+    "ProgramOptions", "plan_workers", "recv_into", "run_workers",
+    "send_value", "trace_workers",
+]

@@ -1,0 +1,152 @@
+"""MAGE bytecode: the instruction stream the planner operates on.
+
+Following §4.2 of the paper, each instruction is a *high-level* DSL operation
+(integer add, ciphertext multiply, ...), not a gate and not a raw memory
+access.  Operands are spans in a MAGE-virtual (during placement) or
+MAGE-physical (after replacement) address space measured in *slots* — the
+protocol driver defines what a slot is (a 128-bit wire label for garbled
+circuits; an 8-byte word for CKKS).
+
+Invariant inherited from the paper (§6.2.2): a value never straddles a page
+boundary, so every operand span touches exactly one page.  The planner code
+nevertheless computes page ranges generally, so relaxing the invariant later
+only costs planner generality, not correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterator, Sequence
+
+INF = 1 << 62  # "never used again" sentinel for next-use times
+
+
+class Op(enum.IntEnum):
+    # ---- generic data movement -------------------------------------------
+    INPUT = 1          # obtain (secret) input into outs[0]
+    OUTPUT = 2         # reveal / externalize ins[0]
+    COPY = 3           # outs[0] = ins[0]
+
+    # ---- garbled-circuit style integer ops (AND-XOR engine) ---------------
+    ADD = 10           # outs[0] = ins[0] + ins[1]      (ripple-carry subcircuit)
+    SUB = 11
+    MUL = 12           # shift-add subcircuit
+    CMP_GE = 13        # outs[0](1-bit lanes) = ins[0] >= ins[1]
+    CMP_EQ = 14
+    SELECT = 15        # outs[0] = ins[0] ? ins[1] : ins[2]   (bitwise mux)
+    XOR = 16
+    AND = 17
+    OR = 18
+    NOT = 19
+    MINMAX = 20        # (outs[0], outs[1]) = key-wise (min, max) of ins[0], ins[1]
+    SORT_LOCAL = 21    # outs[0] = bitonic-sorted ins[0] (within-value network)
+    PAIR_JOIN = 22     # outs[0] = equi-flagged pairs of ins[0] x ins[1] (loop join cell)
+    MAC8 = 23          # outs[0] = ins[0] (acc) + ins[1] (8-bit ints) * imm scalar-vec
+    XNOR_POP_SIGN = 24 # binary fc layer: sign(popcount(xnor(row, vec)) * 2 - n)
+    REDUCE_ADD = 25    # outs[0](width lanes) = tree-sum of ins[0] vector
+    REVERSE = 26       # outs[0] = ins[0] with element order reversed (free)
+
+    # ---- CKKS style ops (Add-Multiply engine) ------------------------------
+    CT_ADD = 40        # ciphertext + ciphertext
+    CT_MUL = 41        # ciphertext * ciphertext (+ relinearize + rescale)
+    CT_MUL_NR = 42     # multiply WITHOUT relinearization (for lazy-relin sums)
+    CT_RELIN = 43      # relinearize + rescale an un-relinearized product
+    CT_ADD_PLAIN = 44
+    CT_MUL_PLAIN = 45
+
+    # ---- placement-internal pseudo instructions ----------------------------
+    FREE = 60          # operand span is dead (emitted by the DSL allocator)
+
+    # ---- swap directives (inserted by replacement/scheduling stages) -------
+    SWAP_IN = 70          # imm=(vpage,); outs[0]=frame span         [synchronous]
+    SWAP_OUT = 71         # imm=(vpage,); ins[0]=frame span          [synchronous]
+    ISSUE_SWAP_IN = 72    # imm=(vpage, pf_slot)                     [async read]
+    FINISH_SWAP_IN = 73   # imm=(vpage, pf_slot); outs[0]=frame span [wait+copy]
+    COPY_OUT = 74         # imm=(pf_slot,); ins[0]=frame span        [frame -> pf]
+    ISSUE_SWAP_OUT = 75   # imm=(vpage, pf_slot)                     [async write]
+    FINISH_SWAP_OUT = 76  # imm=(pf_slot,)                           [wait]
+
+    # ---- network directives (distributed-memory model, §5.1) ---------------
+    NET_SEND = 80      # imm=(dst_worker, tag); ins[0]=span
+    NET_RECV = 81      # imm=(src_worker, tag); outs[0]=span
+    NET_BARRIER = 82   # imm=(tag,) wait until posted recv/send with tag done
+
+
+DIRECTIVES = frozenset({
+    Op.SWAP_IN, Op.SWAP_OUT, Op.ISSUE_SWAP_IN, Op.FINISH_SWAP_IN,
+    Op.COPY_OUT, Op.ISSUE_SWAP_OUT, Op.FINISH_SWAP_OUT,
+    Op.NET_SEND, Op.NET_RECV, Op.NET_BARRIER,
+})
+
+NET_DIRECTIVES = frozenset({Op.NET_SEND, Op.NET_RECV, Op.NET_BARRIER})
+
+
+Span = tuple[int, int]  # (start_slot_addr, n_slots)
+
+
+@dataclasses.dataclass(frozen=True, slots=True)
+class Instr:
+    """One bytecode instruction.
+
+    outs/ins are tuples of (addr, n_slots) spans.  ``imm`` carries op-specific
+    immediates the planner does not interpret (widths, plaintext constants,
+    worker ids, ...).  The planner only needs to know which spans are read and
+    which are written — exactly the extensibility argument of §4.3.
+    """
+    op: Op
+    outs: tuple[Span, ...] = ()
+    ins: tuple[Span, ...] = ()
+    imm: tuple = ()
+
+    def spans(self) -> Iterator[tuple[Span, bool]]:
+        for s in self.ins:
+            yield s, False
+        for s in self.outs:
+            yield s, True
+
+
+@dataclasses.dataclass
+class Program:
+    """A bytecode program for ONE worker.
+
+    ``phase`` distinguishes the three §6.1 pipeline artifacts:
+      'virtual'  — operands are MAGE-virtual addresses (placement output)
+      'physical' — operands are MAGE-physical addresses + sync swap directives
+      'memory'   — final memory program (scheduled, async directives)
+    """
+    instrs: list[Instr]
+    page_shift: int
+    protocol: str
+    phase: str = "virtual"
+    worker: int = 0
+    num_workers: int = 1
+    vspace_slots: int = 0        # extent of the MAGE-virtual address space
+    num_frames: int = 0          # physical frames (phase >= physical)
+    prefetch_slots: int = 0      # prefetch buffer pages (phase == memory)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def page_slots(self) -> int:
+        return 1 << self.page_shift
+
+    def pages_of(self, span: Span) -> range:
+        lo = span[0] >> self.page_shift
+        hi = (span[0] + span[1] - 1) >> self.page_shift
+        return range(lo, hi + 1)
+
+    def num_vpages(self) -> int:
+        return (self.vspace_slots + self.page_slots - 1) >> self.page_shift
+
+    def op_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for ins in self.instrs:
+            out[ins.op.name] = out.get(ins.op.name, 0) + 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self.instrs)
+
+
+def strip_frees(instrs: Sequence[Instr]) -> list[Instr]:
+    return [i for i in instrs if i.op != Op.FREE]

@@ -1,0 +1,194 @@
+"""MAGE's execution engine (§5, §7.1).
+
+An interpreter for memory programs: program data lives in a flat array (the
+MAGE-physical address space); each instruction's operands are views into that
+array; swap directives are handled by the engine itself via async I/O, and
+everything else is delegated to the protocol driver.  Network directives move
+spans between workers of the same party over in-process channels.
+
+The engine runs programs in any phase:
+  * 'virtual'  — Unbounded scenario: memory sized to the whole vspace;
+  * 'physical' — replacement only (synchronous swaps);
+  * 'memory'   — the full scheduled memory program (async swaps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+from typing import Any, Callable
+
+import numpy as np
+
+from .bytecode import Instr, Op, Program
+from .storage import AsyncIO, MemmapStorage, RamStorage, StorageBackend
+
+
+class ProtocolDriver:
+    """Lower layer of the interpreter (§4.3): executes ops with the SC scheme.
+
+    ``lane``/``dtype`` define the engine array's slot layout; e.g. the garbled
+    circuit driver uses lane=2, uint64 (one 128-bit wire label per slot).
+    Drivers must keep all state *inside the spans* they are handed — no
+    pointers to driver-owned memory may live in the array (§7.1), which is
+    what makes engine-level swapping sound.
+    """
+
+    lane: int = 1
+    dtype: Any = np.uint64
+    name: str = "abstract"
+
+    def execute(self, op: Op, imm: tuple, outs: list[np.ndarray],
+                ins: list[np.ndarray]) -> None:
+        raise NotImplementedError
+
+    def cost(self, instr: Instr) -> float:
+        """Estimated compute seconds (feeds the timing simulator)."""
+        raise NotImplementedError
+
+    def finalize(self) -> None:
+        pass
+
+
+class Channels:
+    """Intra-party worker communication (NET_* directives)."""
+
+    def __init__(self, num_workers: int):
+        self.queues: dict[tuple[int, int], queue.Queue] = {
+            (s, d): queue.Queue()
+            for s in range(num_workers) for d in range(num_workers) if s != d}
+        self.bytes_moved = 0
+
+    def send(self, src: int, dst: int, tag: int, data: np.ndarray) -> None:
+        self.bytes_moved += data.nbytes
+        self.queues[(src, dst)].put((tag, np.array(data, copy=True)))
+
+    def recv(self, src: int, dst: int, tag: int, out: np.ndarray) -> None:
+        got_tag, data = self.queues[(src, dst)].get()
+        if got_tag != tag:
+            raise RuntimeError(f"net tag mismatch: want {tag} got {got_tag}")
+        out[...] = data.reshape(out.shape)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    instructions: int = 0
+    directives: int = 0
+    io_read_bytes: int = 0
+    io_write_bytes: int = 0
+    finish_in_waits: int = 0
+    finish_out_waits: int = 0
+
+
+class Engine:
+    def __init__(self, program: Program, driver: ProtocolDriver,
+                 storage: StorageBackend | None = None,
+                 channels: Channels | None = None,
+                 io_threads: int = 2,
+                 use_memmap: bool = False):
+        self.prog = program
+        self.driver = driver
+        psize = program.page_slots
+        page_shape = (psize, driver.lane)
+        if program.phase == "virtual":
+            n_slots = max(program.vspace_slots, 1)
+        else:
+            n_slots = max(program.num_frames, 1) * psize
+        self.memory = np.zeros((n_slots, driver.lane), dtype=driver.dtype)
+        B = program.prefetch_slots
+        self.pf = np.zeros((max(B, 1), psize, driver.lane), dtype=driver.dtype)
+        if storage is None:
+            storage = (MemmapStorage(page_shape, driver.dtype) if use_memmap
+                       else RamStorage(page_shape, driver.dtype))
+        self.io = AsyncIO(storage, threads=io_threads)
+        self.channels = channels
+        self._slot_future: dict[int, Any] = {}
+        self.stats = EngineStats()
+        self._page_shape = page_shape
+
+    # -- helpers ---------------------------------------------------------------
+
+    def _view(self, span) -> np.ndarray:
+        addr, n = span
+        return self.memory[addr:addr + n]
+
+    def _frame_page(self, span) -> np.ndarray:
+        # a directive frame span always covers exactly one page
+        return self._view(span)
+
+    def _wait_slot(self, slot: int) -> None:
+        fut = self._slot_future.pop(slot, None)
+        if fut is not None:
+            fut.result()
+
+    # -- main loop ---------------------------------------------------------------
+
+    def run(self, on_output: Callable[[Instr, list[np.ndarray]], None] | None = None
+            ) -> EngineStats:
+        drv = self.driver
+        w = self.prog.worker
+        for instr in self.prog.instrs:
+            op = instr.op
+            if op == Op.SWAP_IN:
+                self.stats.directives += 1
+                self.io.issue_read(instr.imm[0],
+                                   self._frame_page(instr.outs[0])).result()
+            elif op == Op.SWAP_OUT:
+                self.stats.directives += 1
+                self.io.issue_write(instr.imm[0],
+                                    np.array(self._frame_page(instr.ins[0]),
+                                             copy=True)).result()
+            elif op == Op.ISSUE_SWAP_IN:
+                self.stats.directives += 1
+                vpage, slot = instr.imm
+                self._wait_slot(slot)
+                self._slot_future[slot] = self.io.issue_read(
+                    vpage, self.pf[slot])
+            elif op == Op.FINISH_SWAP_IN:
+                self.stats.directives += 1
+                vpage, slot = instr.imm[0], instr.imm[1]
+                self._wait_slot(slot)
+                self.stats.finish_in_waits += 1
+                self._frame_page(instr.outs[0])[...] = self.pf[slot]
+            elif op == Op.COPY_OUT:
+                self.stats.directives += 1
+                slot = instr.imm[0]
+                self._wait_slot(slot)
+                self.pf[slot][...] = self._frame_page(instr.ins[0])
+            elif op == Op.ISSUE_SWAP_OUT:
+                self.stats.directives += 1
+                vpage, slot = instr.imm
+                self._slot_future[slot] = self.io.issue_write(
+                    vpage, self.pf[slot])
+            elif op == Op.FINISH_SWAP_OUT:
+                self.stats.directives += 1
+                self._wait_slot(instr.imm[0])
+                self.stats.finish_out_waits += 1
+            elif op == Op.NET_SEND:
+                self.stats.directives += 1
+                dst, tag = instr.imm[0], instr.imm[1]
+                self.channels.send(w, dst, tag, self._view(instr.ins[0]))
+            elif op == Op.NET_RECV:
+                self.stats.directives += 1
+                src, tag = instr.imm[0], instr.imm[1]
+                self.channels.recv(src, w, tag, self._view(instr.outs[0]))
+            elif op == Op.NET_BARRIER:
+                self.stats.directives += 1
+            elif op == Op.FREE:
+                continue
+            elif op == Op.OUTPUT:
+                self.stats.instructions += 1
+                views = [self._view(s) for s in instr.ins]
+                drv.execute(op, instr.imm, [], views)
+                if on_output is not None:
+                    on_output(instr, views)
+            else:
+                self.stats.instructions += 1
+                drv.execute(op, instr.imm,
+                            [self._view(s) for s in instr.outs],
+                            [self._view(s) for s in instr.ins])
+        drv.finalize()
+        self.stats.io_read_bytes = self.io.bytes_read
+        self.stats.io_write_bytes = self.io.bytes_written
+        self.io.close()
+        return self.stats

@@ -1,0 +1,169 @@
+"""Memory programming for JAX computations (DESIGN.md §3.2).
+
+A jaxpr is oblivious by construction — no data-dependent memory accesses —
+which is exactly the property MAGE exploits for SC.  This module runs the
+MAGE planning pipeline over a jaxpr's buffer trace:
+
+  * each equation is an instruction; each intermediate value a (variable-
+    sized) page;
+  * a backward pass annotates next uses; Belady MIN evicts under an HBM
+    byte budget; lookahead prefetch hoists reload issues;
+  * the output is an *offload plan* — which buffers to move to host memory
+    when, and what traffic/stall that costs under an HBM<->host bandwidth
+    model.
+
+Used two ways: (1) as the analysis behind activation-offload decisions for
+train_step (reported in EXPERIMENTS.md §Dry-run), and (2) as a standalone
+planner for the paged-KV serving schedule (serve/paged_kv.py builds the
+trace directly instead).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from .bytecode import INF
+
+
+@dataclasses.dataclass
+class BufferTrace:
+    sizes: list[int]                  # bytes per buffer id
+    reads: list[list[int]]            # per instruction: buffer ids read
+    writes: list[list[int]]           # per instruction: buffer ids written
+    names: list[str]                  # per instruction: primitive name
+
+
+def jaxpr_trace(fn: Callable, *example_args, **kw) -> BufferTrace:
+    from jax.extend.core import Literal
+    closed = jax.make_jaxpr(fn, **kw)(*example_args)
+    jaxpr = closed.jaxpr
+    ids: dict[Any, int] = {}
+    sizes: list[int] = []
+
+    def bid(v) -> int | None:
+        if not hasattr(v, "aval") or isinstance(v, Literal):
+            return None
+        if v not in ids:
+            ids[v] = len(sizes)
+            aval = v.aval
+            sizes.append(int(np.prod(aval.shape)) * aval.dtype.itemsize
+                         if aval.shape else aval.dtype.itemsize)
+        return ids[v]
+
+    reads, writes, names = [], [], []
+    for v in list(jaxpr.invars) + list(jaxpr.constvars):
+        bid(v)
+    for eqn in jaxpr.eqns:
+        r = [bid(v) for v in eqn.invars]
+        w = [bid(v) for v in eqn.outvars]
+        reads.append([x for x in r if x is not None])
+        writes.append([x for x in w if x is not None])
+        names.append(eqn.primitive.name)
+    return BufferTrace(sizes, reads, writes, names)
+
+
+@dataclasses.dataclass
+class OffloadPlan:
+    budget_bytes: int
+    peak_unbounded: int               # live bytes at the worst instruction
+    bytes_out: int = 0                # HBM -> host
+    bytes_in: int = 0                 # host -> HBM
+    n_offloads: int = 0
+    n_reloads: int = 0
+    moves: list[tuple[int, str, int, int]] = dataclasses.field(
+        default_factory=list)         # (instr, 'out'|'in', buffer, bytes)
+    feasible: bool = True
+
+    def est_overhead(self, hbm_host_bw: float = 50e9,
+                     compute_s: float | None = None) -> float:
+        """Transfer seconds; with compute_s, fraction of step time assuming
+        perfect overlap of issue (the prefetch schedule's goal)."""
+        xfer = (self.bytes_in + self.bytes_out) / hbm_host_bw
+        if compute_s:
+            return max(0.0, xfer - compute_s) / compute_s
+        return xfer
+
+
+def plan_offload(trace: BufferTrace, budget_bytes: int) -> OffloadPlan:
+    """Belady MIN over the buffer trace with a byte budget."""
+    n = len(trace.reads)
+    touch = [sorted(set(trace.reads[i]) | set(trace.writes[i]))
+             for i in range(n)]
+    # next-use annotation (backward pass)
+    next_use: list[dict[int, int]] = [dict() for _ in range(n)]
+    last: dict[int, int] = {}
+    for i in range(n - 1, -1, -1):
+        for b in touch[i]:
+            next_use[i][b] = last.get(b, INF)
+            last[b] = i
+
+    # peak live bytes (for the report)
+    first_seen: dict[int, int] = {}
+    last_seen: dict[int, int] = {}
+    for i in range(n):
+        for b in touch[i]:
+            first_seen.setdefault(b, i)
+            last_seen[b] = i
+    delta = np.zeros(n + 1, dtype=np.int64)
+    for b, f in first_seen.items():
+        delta[f] += trace.sizes[b]
+        delta[last_seen[b] + 1] -= trace.sizes[b]
+    peak = int(np.max(np.cumsum(delta))) if n else 0
+
+    plan = OffloadPlan(budget_bytes=budget_bytes, peak_unbounded=peak)
+    resident: dict[int, int] = {}     # buffer -> bytes
+    on_host: set[int] = set()
+    cur_bytes = 0
+    heap: list[tuple[int, int]] = []  # (-next_use, buffer) lazy
+    cur_nu: dict[int, int] = {}
+
+    def pop_victim(pinned: set[int]) -> int | None:
+        stash = []
+        found = None
+        while heap:
+            negnu, v = heapq.heappop(heap)
+            if v not in resident or cur_nu.get(v) != -negnu:
+                continue  # stale
+            if v in pinned:
+                stash.append((negnu, v))
+                continue
+            found = v
+            break
+        for e in stash:
+            heapq.heappush(heap, e)
+        return found
+
+    for i in range(n):
+        pinned = set(touch[i])
+        if sum(trace.sizes[b] for b in pinned) > budget_bytes:
+            plan.feasible = False  # one instruction exceeds the budget
+        for b in pinned:
+            if b not in resident:
+                sz = trace.sizes[b]
+                while cur_bytes + sz > budget_bytes:
+                    victim = pop_victim(pinned)
+                    if victim is None:
+                        break
+                    cur_bytes -= resident.pop(victim)
+                    if cur_nu.get(victim, INF) < INF:
+                        plan.bytes_out += trace.sizes[victim]
+                        plan.n_offloads += 1
+                        plan.moves.append((i, "out", victim,
+                                           trace.sizes[victim]))
+                        on_host.add(victim)
+                if b in on_host:
+                    plan.bytes_in += sz
+                    plan.n_reloads += 1
+                    plan.moves.append((i, "in", b, sz))
+                    on_host.discard(b)
+                resident[b] = sz
+                cur_bytes += sz
+            nu = next_use[i][b]
+            cur_nu[b] = nu
+            heapq.heappush(heap, (-nu, b))
+    return plan

@@ -1,0 +1,76 @@
+"""MAGE's planner pipeline (§6.1): placement → replacement → scheduling.
+
+``plan()`` turns a virtual-address bytecode into a memory program for a given
+physical memory budget; ``PlanReport`` captures the Table-1 metrics (planning
+time, planner peak memory) plus per-stage statistics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import tracemalloc
+
+from .bytecode import Program
+from .replacement import ReplacementStats, plan_replacement
+from .scheduling import ScheduleStats, plan_schedule
+
+
+@dataclasses.dataclass
+class PlanConfig:
+    """Memory budget + knobs (paper defaults: GC 64 KiB pages, l=10000, B=256
+    pages; CKKS 2 MiB pages, l=100, B=16 — we express pages in slots)."""
+    num_frames: int                 # T: physical frames incl. prefetch buffer
+    lookahead: int = 10_000         # l
+    prefetch_pages: int = 0         # B (0 = replacement-only planning)
+    policy: str = "min"
+    swap_bypass: bool = False       # beyond-paper read-from-write-buffer
+
+    @property
+    def replacement_frames(self) -> int:
+        return self.num_frames - self.prefetch_pages
+
+
+@dataclasses.dataclass
+class PlanReport:
+    placement_s: float = 0.0        # time spent tracing the DSL (if measured)
+    replacement_s: float = 0.0
+    scheduling_s: float = 0.0
+    peak_mem_bytes: int = 0
+    replacement: ReplacementStats | None = None
+    schedule: ScheduleStats | None = None
+
+    @property
+    def total_s(self) -> float:
+        return self.placement_s + self.replacement_s + self.scheduling_s
+
+
+def plan(virtual_prog: Program, cfg: PlanConfig,
+         track_memory: bool = False) -> tuple[Program, PlanReport]:
+    report = PlanReport()
+    if cfg.prefetch_pages >= cfg.num_frames:
+        raise ValueError("prefetch buffer must be smaller than the budget")
+    if track_memory:
+        tracemalloc.start()
+    t0 = time.perf_counter()
+    phys, rstats = plan_replacement(virtual_prog, cfg.replacement_frames,
+                                    policy=cfg.policy)
+    t1 = time.perf_counter()
+    mem, sstats = plan_schedule(phys, cfg.lookahead, cfg.prefetch_pages,
+                                swap_bypass=cfg.swap_bypass)
+    t2 = time.perf_counter()
+    if track_memory:
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        report.peak_mem_bytes = peak
+    report.replacement_s = t1 - t0
+    report.scheduling_s = t2 - t1
+    report.replacement = rstats
+    report.schedule = sstats
+    mem.meta["plan"] = dataclasses.asdict(cfg)
+    return mem, report
+
+
+def plan_unbounded(virtual_prog: Program) -> Program:
+    """The Unbounded scenario: no budget, engine runs the virtual program."""
+    return virtual_prog

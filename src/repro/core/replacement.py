@@ -1,0 +1,289 @@
+"""MAGE planner stage 2: replacement (§6.3).
+
+Applies Belady's MIN directly — the clairvoyance that is unrealizable for an
+OS is free here, because the bytecode *is* the access pattern.  Emits
+synchronous SWAP_IN / SWAP_OUT directives and rewrites every operand from
+MAGE-virtual to MAGE-physical addresses via a page table maintained in
+software during planning (§4.1).
+
+Write-back rule (see liveness.py): a dirty victim is written back only if its
+next READ is finite; otherwise it is dropped — no later instruction can
+observe it.  A swap-in is elided when the missing page is about to be fully
+overwritten by the touching instruction (write-allocate elision).
+
+Policies beyond MIN (LRU/FIFO/"farthest-clean") are pluggable; LRU/FIFO feed
+the OS-baseline comparisons and MinClean is our beyond-paper dirty-aware
+variant (§Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from .bytecode import INF, Instr, Op, Program, strip_frees
+from .liveness import W_FULL_WRITE, W_WRITE, compute_touches, \
+    max_pages_per_instr
+
+
+class EvictionPolicy:
+    """Planner calls touch() on every page touch and evict() on frame need."""
+
+    name = "abstract"
+
+    def touch(self, page: int, next_use: int, now: int) -> None:
+        raise NotImplementedError
+
+    def evict(self, pinned: set[int], resident: dict[int, int],
+              dirty: set[int]) -> int:
+        raise NotImplementedError
+
+    def remove(self, page: int) -> None:
+        pass
+
+
+class _HeapPolicy(EvictionPolicy):
+    """Lazy-deletion heap over per-page keys (max-heap iff maximize)."""
+
+    def __init__(self, maximize: bool):
+        self._sign = -1 if maximize else 1
+        self._heap: list[tuple[int, int]] = []
+        self._cur: dict[int, int] = {}
+
+    def _push(self, page: int, key: int) -> None:
+        self._cur[page] = key
+        heapq.heappush(self._heap, (self._sign * key, page))
+
+    def touch(self, page: int, next_use: int, now: int) -> None:
+        self._push(page, next_use)
+
+    def remove(self, page: int) -> None:
+        self._cur.pop(page, None)
+
+    def _pop_valid(self, pinned: set[int], resident: dict[int, int],
+                   stash: list[tuple[int, int]]) -> tuple[int, int] | None:
+        """Pop the best non-stale, non-pinned resident entry, or None."""
+        while self._heap:
+            k, p = heapq.heappop(self._heap)
+            cur = self._cur.get(p)
+            if cur is None or self._sign * cur != k or p not in resident:
+                continue
+            if p in pinned:
+                stash.append((k, p))
+                continue
+            return (k, p)
+        return None
+
+    def _finish(self, chosen: int, stash: list[tuple[int, int]]) -> int:
+        for e in stash:
+            if e[1] != chosen:
+                heapq.heappush(self._heap, e)
+        del self._cur[chosen]
+        return chosen
+
+    def evict(self, pinned, resident, dirty) -> int:
+        stash: list[tuple[int, int]] = []
+        got = self._pop_valid(pinned, resident, stash)
+        if got is None:
+            for e in stash:
+                heapq.heappush(self._heap, e)
+            raise RuntimeError(
+                "no evictable page: num_frames smaller than one instruction's "
+                "working set — raise the memory budget or shrink DSL chunks")
+        return self._finish(got[1], stash)
+
+
+class MinPolicy(_HeapPolicy):
+    """Belady's MIN: evict the resident page whose next use is farthest."""
+
+    name = "min"
+
+    def __init__(self):
+        super().__init__(maximize=True)
+
+
+class MinCleanPolicy(_HeapPolicy):
+    """Beyond-paper: farthest-first, but among pages whose next use lies
+    within a window of the farthest (or is also INF), prefer a CLEAN page —
+    skipping a write-back.  Attacks the 2x write slack plain MIN concedes
+    (§6.3 footnote 4; exact minimization is NP-hard, Farach & Liberatore)."""
+
+    name = "min_clean"
+
+    def __init__(self, rel_delta: float = 0.05, abs_delta: int = 256):
+        super().__init__(maximize=True)
+        self.rel_delta = rel_delta
+        self.abs_delta = abs_delta
+
+    def evict(self, pinned, resident, dirty) -> int:
+        stash: list[tuple[int, int]] = []
+        first = self._pop_valid(pinned, resident, stash)
+        if first is None:
+            for e in stash:
+                heapq.heappush(self._heap, e)
+            raise RuntimeError(
+                "no evictable page: num_frames smaller than one instruction's "
+                "working set — raise the memory budget or shrink DSL chunks")
+        fk, fp = first
+        far = self._sign * fk  # == -fk: the farthest next-use
+        if fp not in dirty:
+            return self._finish(fp, stash)
+        if far >= INF:
+            window_lo = INF
+        else:
+            window_lo = far - max(self.abs_delta, int(self.rel_delta * far))
+        rejected: list[tuple[int, int]] = [first]
+        chosen = None
+        while True:
+            nxt = self._pop_valid(pinned, resident, stash)
+            if nxt is None:
+                break
+            key = self._sign * nxt[0]
+            if key < window_lo:
+                rejected.append(nxt)
+                break
+            if nxt[1] not in dirty:
+                chosen = nxt[1]
+                break
+            rejected.append(nxt)
+        if chosen is None:
+            chosen = fp  # no clean page in window: plain MIN choice
+        for e in rejected:
+            if e[1] != chosen:
+                stash.append(e)
+        return self._finish(chosen, stash)
+
+
+class LruPolicy(_HeapPolicy):
+    name = "lru"
+
+    def __init__(self):
+        super().__init__(maximize=False)
+
+    def touch(self, page: int, next_use: int, now: int) -> None:
+        self._push(page, now)
+
+
+class FifoPolicy(_HeapPolicy):
+    name = "fifo"
+
+    def __init__(self):
+        super().__init__(maximize=False)
+
+    def touch(self, page: int, next_use: int, now: int) -> None:
+        if page not in self._cur:
+            self._push(page, now)
+
+
+POLICIES: dict[str, type[EvictionPolicy]] = {
+    "min": MinPolicy,
+    "min_clean": MinCleanPolicy,
+    "lru": LruPolicy,
+    "fifo": FifoPolicy,
+}
+
+
+@dataclasses.dataclass
+class ReplacementStats:
+    swap_ins: int = 0
+    swap_outs: int = 0
+    dropped_dirty: int = 0       # dirty pages dropped: never read again
+    elided_swap_ins: int = 0     # write-allocate elisions
+    num_frames: int = 0
+    num_vpages: int = 0
+    instructions: int = 0
+    policy: str = "min"
+
+    @property
+    def total_swaps(self) -> int:
+        return self.swap_ins + self.swap_outs
+
+
+def plan_replacement(prog: Program, num_frames: int,
+                     policy: str | EvictionPolicy = "min",
+                     ) -> tuple[Program, ReplacementStats]:
+    """Stage 2: rewrite a 'virtual' program into a 'physical' one."""
+    assert prog.phase == "virtual", prog.phase
+    instrs = strip_frees(prog.instrs)
+    touches = compute_touches(prog, instrs)
+    need = max_pages_per_instr(touches)
+    if num_frames < need:
+        raise ValueError(
+            f"num_frames={num_frames} < {need} pages touched by one "
+            f"instruction; budget too small for this chunking")
+    pol = POLICIES[policy]() if isinstance(policy, str) else policy
+
+    shift = prog.page_shift
+    psize = prog.page_slots
+    page_table: dict[int, int] = {}          # vpage -> frame
+    free_frames = list(range(num_frames - 1, -1, -1))
+    dirty: set[int] = set()
+    stored: set[int] = set()                 # storage holds current content
+    cur_next_read: dict[int, int] = {}       # valid at/after a page's last touch
+    stats = ReplacementStats(num_frames=num_frames,
+                             num_vpages=touches.num_pages,
+                             instructions=len(instrs),
+                             policy=getattr(pol, "name", str(policy)))
+    out: list[Instr] = []
+
+    def acquire_frame(pinned: set[int]) -> int:
+        if free_frames:
+            return free_frames.pop()
+        victim = pol.evict(pinned, page_table, dirty)
+        frame = page_table.pop(victim)
+        if victim in dirty:
+            dirty.discard(victim)
+            if cur_next_read.get(victim, INF) < INF:
+                out.append(Instr(Op.SWAP_OUT,
+                                 ins=((frame << shift, psize),),
+                                 imm=(victim,)))
+                stats.swap_outs += 1
+                stored.add(victim)
+            else:
+                stats.dropped_dirty += 1
+                stored.discard(victim)
+        # clean victim: storage copy (if any) is already current
+        return frame
+
+    def translate(span):
+        addr, n = span
+        vp = addr >> shift
+        return ((page_table[vp] << shift) + (addr - (vp << shift)), n)
+
+    offs, pg, fl = touches.offsets, touches.pages, touches.flags
+    nxt, nxr = touches.next_any, touches.next_read
+
+    for i, ins in enumerate(instrs):
+        row = range(int(offs[i]), int(offs[i + 1]))
+        pinned = {int(pg[k]) for k in row}
+        for k in row:
+            p = int(pg[k])
+            f = int(fl[k])
+            if p not in page_table:
+                frame = acquire_frame(pinned)
+                if p in stored:
+                    if f & W_FULL_WRITE:
+                        stored.discard(p)
+                        stats.elided_swap_ins += 1
+                    else:
+                        out.append(Instr(Op.SWAP_IN,
+                                         outs=((frame << shift, psize),),
+                                         imm=(p,)))
+                        stats.swap_ins += 1
+                page_table[p] = frame
+            if f & W_WRITE:
+                dirty.add(p)
+            cur_next_read[p] = int(nxr[k])
+            pol.touch(p, int(nxt[k]), i)
+        out.append(Instr(ins.op,
+                         tuple(translate(s) for s in ins.outs),
+                         tuple(translate(s) for s in ins.ins),
+                         ins.imm))
+
+    res = Program(
+        instrs=out, page_shift=shift, protocol=prog.protocol,
+        phase="physical", worker=prog.worker, num_workers=prog.num_workers,
+        vspace_slots=prog.vspace_slots, num_frames=num_frames,
+        meta=dict(prog.meta),
+    )
+    return res, stats

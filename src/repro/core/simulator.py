@@ -1,0 +1,210 @@
+"""Deterministic storage-timing simulator.
+
+The paper's headline numbers (Fig. 8–10) are wall-clock on Azure VMs with a
+local SSD.  This container is a single CPU, so we validate the *memory
+management* content with a calibrated replay: per-instruction compute cost
+from the protocol driver's cost model, and a single-queue storage device with
+latency + bandwidth (§6.4 uses 10 GB/s and 1 ms for the Little's-law sizing
+of the prefetch buffer; we default to a cloud-SSD-flavored 1 GB/s / 200 us,
+both configurable).
+
+Three scenarios, matching §8.2:
+  * Unbounded — sum of compute costs;
+  * OS        — demand paging over the *virtual* trace: reactive (a fault
+                blocks for the whole transfer), LRU/CLOCK-style eviction,
+                optional sequential readahead, asynchronous write-back that
+                contends for device bandwidth; per-fault CPU overhead;
+  * MAGE      — replay of the planned memory program: ISSUE_* overlap with
+                compute; FINISH_* block only until the transfer completes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable
+
+from .bytecode import INF, Instr, Op, Program, strip_frees
+from .liveness import W_FULL_WRITE, W_WRITE, compute_touches
+
+
+@dataclasses.dataclass
+class DeviceModel:
+    bandwidth: float = 1.0e9       # bytes/s
+    latency: float = 200e-6        # seconds per I/O op (pipelined: adds to
+    #                                completion delay, not device occupancy)
+    fault_overhead: float = 5e-6   # OS page-fault CPU cost (trap+map+TLB)
+    readahead: int = 8             # OS sequential readahead window (pages)
+    os_writeback_throttle_s: float = 0.02  # direct-reclaim blocking point
+
+
+@dataclasses.dataclass
+class SimResult:
+    total: float = 0.0
+    compute: float = 0.0
+    stall: float = 0.0
+    reads: int = 0
+    writes: int = 0
+    read_bytes: int = 0
+    write_bytes: int = 0
+
+    @property
+    def overhead(self) -> float:
+        return self.total / self.compute if self.compute else 1.0
+
+
+CostFn = Callable[[Instr], float]
+
+
+class _Device:
+    """Single in-order I/O channel."""
+
+    def __init__(self, model: DeviceModel, page_bytes: int):
+        self.m = model
+        self.page_bytes = page_bytes
+        self.free_at = 0.0
+        self.xfer = page_bytes / model.bandwidth
+
+    def submit(self, now: float, pages: int = 1,
+               nbytes: int | None = None) -> float:
+        """Queue an I/O; returns completion time.  The device pipelines:
+        occupancy grows by transfer time only; per-op latency delays the
+        completion (queue-depth > 1, as `aio` exploits)."""
+        start = max(now, self.free_at)
+        xfer = (nbytes / self.m.bandwidth if nbytes is not None
+                else pages * self.xfer)
+        self.free_at = start + xfer
+        return start + xfer + self.m.latency
+
+
+def simulate_unbounded(prog: Program, cost: CostFn) -> SimResult:
+    r = SimResult()
+    for ins in strip_frees(prog.instrs):
+        if ins.op not in (Op.FREE,):
+            r.compute += cost(ins)
+    r.total = r.compute
+    return r
+
+
+def simulate_memory_program(prog: Program, cost: CostFn, page_bytes: int,
+                            model: DeviceModel | None = None) -> SimResult:
+    """Replay a 'physical' or 'memory' phase program."""
+    model = model or DeviceModel()
+    dev = _Device(model, page_bytes)
+    r = SimResult()
+    t = 0.0
+    slot_done: dict[int, float] = {}
+    for ins in prog.instrs:
+        op = ins.op
+        if op == Op.SWAP_IN:
+            done = dev.submit(t)
+            r.stall += done - t
+            t = done
+            r.reads += 1
+        elif op == Op.SWAP_OUT:
+            done = dev.submit(t)
+            r.stall += done - t
+            t = done
+            r.writes += 1
+        elif op == Op.ISSUE_SWAP_IN:
+            slot_done[ins.imm[1]] = dev.submit(t)
+            r.reads += 1
+        elif op == Op.ISSUE_SWAP_OUT:
+            slot_done[ins.imm[1]] = dev.submit(t)
+            r.writes += 1
+        elif op in (Op.FINISH_SWAP_IN, Op.FINISH_SWAP_OUT):
+            slot = ins.imm[1] if op == Op.FINISH_SWAP_IN else ins.imm[0]
+            done = slot_done.pop(slot, t)
+            if done > t:
+                r.stall += done - t
+                t = done
+            if op == Op.FINISH_SWAP_IN:
+                t += page_bytes / 50e9  # pf->frame memcpy (~DRAM bw)
+        elif op == Op.COPY_OUT:
+            t += page_bytes / 50e9
+        elif op in (Op.NET_SEND, Op.NET_RECV, Op.NET_BARRIER, Op.FREE):
+            continue
+        else:
+            c = cost(ins)
+            r.compute += c
+            t += c
+    r.read_bytes = r.reads * page_bytes
+    r.write_bytes = r.writes * page_bytes
+    r.total = t
+    return r
+
+
+def simulate_os_paging(virtual_prog: Program, cost: CostFn, num_frames: int,
+                       page_bytes: int, model: DeviceModel | None = None,
+                       os_page_bytes: int | None = None) -> SimResult:
+    """Demand paging over the virtual trace: the OS-swapping baseline.
+
+    Reactive LRU with blocking major faults.  The OS works at its own page
+    granularity (``os_page_bytes``, default = MAGE page size): faulting one
+    MAGE-page worth of data costs ceil(page/os_page/readahead) blocking I/O
+    clusters (Linux swap readahead) plus a per-OS-page fault overhead
+    (trap + map + TLB).  Dirty evictions write back asynchronously but
+    contend for the device.  No future knowledge (no dead-page drop, no
+    planned prefetch) — that is exactly what MAGE adds.
+    """
+    model = model or DeviceModel()
+    dev = _Device(model, page_bytes)
+    os_page = os_page_bytes or page_bytes
+    os_pages_per = max(page_bytes // os_page, 1)
+    clusters = max((os_pages_per + model.readahead - 1) // model.readahead, 1)
+    cluster_bytes = min(model.readahead * os_page, page_bytes)
+
+    instrs = strip_frees(virtual_prog.instrs)
+    touches = compute_touches(virtual_prog, instrs)
+    r = SimResult()
+    t = 0.0
+    lru: OrderedDict[int, None] = OrderedDict()    # resident pages, LRU order
+    dirty: set[int] = set()
+    stored: set[int] = set()
+
+    offs, pg, fl = touches.offsets, touches.pages, touches.flags
+
+    def evict_one(now: float) -> float:
+        page, _ = lru.popitem(last=False)
+        if page in dirty:
+            dirty.discard(page)
+            stored.add(page)
+            dev.submit(now, nbytes=page_bytes)  # async write-back: contends
+            r.writes += 1
+            # direct-reclaim throttling: once the write-back queue is deep,
+            # the faulting process blocks until it drains below the mark
+            lag = dev.free_at - now
+            if lag > model.os_writeback_throttle_s:
+                blocked = lag - model.os_writeback_throttle_s
+                r.stall += blocked
+                return now + blocked
+        return now
+
+    for i, ins in enumerate(instrs):
+        for k in range(int(offs[i]), int(offs[i + 1])):
+            p = int(pg[k])
+            f = int(fl[k])
+            if p in lru:
+                lru.move_to_end(p)
+            else:
+                if p in stored:
+                    # major fault: blocking reads at OS granularity
+                    t += model.fault_overhead * os_pages_per
+                    for _ in range(clusters):
+                        done = dev.submit(t, nbytes=cluster_bytes)
+                        r.stall += done - t
+                        t = done
+                    r.reads += 1
+                # else: first touch, anonymous page, no I/O
+                while len(lru) >= num_frames:
+                    t = evict_one(t)
+                lru[p] = None
+            if f & W_WRITE:
+                dirty.add(p)
+        c = cost(ins)
+        r.compute += c
+        t += c
+    r.read_bytes = r.reads * page_bytes
+    r.write_bytes = r.writes * page_bytes
+    r.total = t
+    return r

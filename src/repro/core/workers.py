@@ -1,0 +1,98 @@
+"""Parallel/distributed MAGE execution (§5.1–§5.2, §6 "per-worker planning").
+
+Workers follow the paper's distributed-memory model: each worker is one
+thread of computation with its own MAGE-physical address space; DSL programs
+are parameterized by (worker_id, num_workers) and express data movement with
+explicit network directives.  Planning is run once per worker, independently
+— each worker's accesses touch only its own region, so the memory programs
+are generated in isolation (and could be generated in parallel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .bytecode import Op, Program
+from .dsl import Builder, Value, trace
+from .engine import Channels, Engine, ProtocolDriver
+from .planner import PlanConfig, PlanReport, plan
+
+
+@dataclasses.dataclass
+class ProgramOptions:
+    """Mirrors the paper's ProgramOptions: worker identity + problem params."""
+    worker: int = 0
+    num_workers: int = 1
+    problem_size: int = 0
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+def send_value(v: Value, dst: int, tag: int | None = None) -> int:
+    b = v.builder
+    tag = b.fresh_tag() if tag is None else tag
+    b.emit(Op.NET_SEND, ins=(v.span,), imm=(dst, tag))
+    return tag
+
+
+def recv_into(v: Value, src: int, tag: int) -> None:
+    v.builder.emit(Op.NET_RECV, outs=(v.span,), imm=(src, tag))
+
+
+def trace_workers(fn: Callable[[ProgramOptions], None], *, protocol: str,
+                  page_shift: int, num_workers: int,
+                  problem_size: int = 0, extra: dict | None = None,
+                  ) -> list[Program]:
+    progs = []
+    for w in range(num_workers):
+        opts = ProgramOptions(worker=w, num_workers=num_workers,
+                              problem_size=problem_size,
+                              extra=dict(extra or {}))
+        progs.append(trace(fn, protocol=protocol, page_shift=page_shift,
+                           worker=w, num_workers=num_workers,
+                           args=(opts,),
+                           meta={"problem_size": problem_size}))
+    return progs
+
+
+def plan_workers(progs: Sequence[Program], cfg: PlanConfig,
+                 ) -> tuple[list[Program], list[PlanReport]]:
+    out, reports = [], []
+    for p in progs:
+        mp, rep = plan(p, cfg)
+        out.append(mp)
+        reports.append(rep)
+    return out, reports
+
+
+def run_workers(progs: Sequence[Program],
+                driver_factory: Callable[[int], ProtocolDriver],
+                use_memmap: bool = False,
+                on_output: Callable[[int, Any, list[np.ndarray]], None] | None = None,
+                ) -> list:
+    """Run one engine per worker on threads sharing a Channels fabric."""
+    channels = Channels(len(progs))
+    results: list = [None] * len(progs)
+    errors: list = []
+
+    def _run(w: int, prog: Program):
+        try:
+            eng = Engine(prog, driver_factory(w), channels=channels,
+                         use_memmap=use_memmap)
+            cb = (lambda i, v: on_output(w, i, v)) if on_output else None
+            results[w] = eng.run(on_output=cb)
+        except Exception as e:  # pragma: no cover - surfaced below
+            errors.append((w, e))
+
+    threads = [threading.Thread(target=_run, args=(w, p), daemon=True)
+               for w, p in enumerate(progs)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise RuntimeError(f"worker failures: {errors}") from errors[0][1]
+    return results

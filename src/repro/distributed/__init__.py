@@ -1,0 +1,7 @@
+from .sharding import (AxisRules, default_rules, param_spec_for_path,
+                       params_pspecs, params_shardings, rules_for, shard,
+                       use_rules)
+
+__all__ = ["AxisRules", "default_rules", "param_spec_for_path",
+           "params_pspecs", "params_shardings", "rules_for", "shard",
+           "use_rules"]

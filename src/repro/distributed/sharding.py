@@ -1,0 +1,227 @@
+"""Logical-axis sharding rules (DP/TP/EP/SP) for the whole framework.
+
+Activations are constrained inside model code via ``shard(x, *logical)``;
+parameters get PartitionSpecs from name-based rules over the pytree path.
+Changing ``AxisRules`` is the perf lever the §Perf hillclimbs turn (e.g.
+flipping sequence sharding on for long prefill).
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The pod axis joins data-parallelism by default (pipeline parallelism over
+pods is available in train_step as an alternative strategy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class AxisRules:
+    """logical axis -> mesh axis (or tuple of mesh axes, or None)."""
+    rules: dict[str, Any]
+    grad_compression: str | None = None   # None | 'int8' (accounting flag)
+
+    def axis(self, logical: str):
+        return self.rules.get(logical)
+
+    def spec(self, *logical: str | None) -> P:
+        return P(*(self.axis(l) if l else None for l in logical))
+
+
+def default_rules(mesh: jax.sharding.Mesh,
+                  seq_sharding: bool = False) -> AxisRules:
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    data = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes
+                                                 else None)
+    model = "model" if "model" in names else None
+    return AxisRules(rules={
+        "batch": data,
+        "seq": model if seq_sharding else None,  # SP: shard activations' seq
+        "heads": model,
+        "kv_heads": model,
+        "ff": model,
+        "vocab": model,
+        "experts": model,
+        "dmodel": None,
+        "kv_seq": None,
+        "state": None,
+    })
+
+
+def rules_for(cfg, mesh: jax.sharding.Mesh,
+              seq_sharding: bool = False,
+              dp_over_model: bool = False) -> AxisRules:
+    """Per-config rules: a logical axis maps to the model mesh axis only if
+    the corresponding dimension is divisible by the axis size (GQA models
+    with few KV heads replicate KV; odd head counts fall back to ff/vocab
+    tensor parallelism).
+
+    ``dp_over_model``: fold the model axis into data parallelism (weights
+    replicated, zero TP collectives) — the right strategy for models small
+    enough to replicate, where TP activation all-reduces dominate the step
+    (§Perf hillclimb #1)."""
+    rules = default_rules(mesh, seq_sharding=seq_sharding)
+    msize = mesh.shape.get("model", 1)
+    if dp_over_model:
+        names = mesh.axis_names
+        data = tuple(a for a in ("pod", "data", "model") if a in names)
+        for k in rules.rules:
+            rules.rules[k] = None
+        rules.rules["batch"] = data
+        rules.rules["scores_q"] = None
+        rules.rules["kv_seq"] = None
+        return rules
+
+    def ok(dim: int) -> bool:
+        return dim % msize == 0 and dim >= msize
+
+    if not ok(cfg.n_heads):
+        rules.rules["heads"] = None
+    if not ok(cfg.n_kv_heads):
+        rules.rules["kv_heads"] = None
+    if not ok(cfg.d_ff if cfg.d_ff else cfg.ssm_expand * cfg.d_model):
+        rules.rules["ff"] = None
+    if not ok(cfg.vocab_size):
+        rules.rules["vocab"] = None
+    if cfg.moe and not ok(cfg.n_experts):
+        rules.rules["experts"] = None
+    if seq_sharding:
+        # pure sequence parallelism: the model axis shards the sequence dim
+        # of every activation; weight axes must then be replicated (a tensor
+        # can't map one mesh axis twice)
+        for k in ("heads", "kv_heads", "ff", "vocab", "experts"):
+            rules.rules[k] = None
+        rules.rules["seq"] = "model"
+    # attention-score sharding: if KV heads cannot shard (GQA with few KV
+    # heads), bound the (b, kv, group, sq, skv) scores tensor by sharding
+    # the query-sequence dim instead
+    rules.rules["scores_q"] = ("model" if rules.rules.get("kv_heads") is None
+                               and msize > 1 else None)
+    # KV-cache sequence sharding: with unshardable KV heads the decode cache
+    # would otherwise be replicated across the model axis — shard its seq
+    # dim instead (the contraction over seq then reduces with a psum)
+    rules.rules["kv_seq"] = ("model" if rules.rules.get("kv_heads") is None
+                             and msize > 1 else None)
+    return rules
+
+
+_CURRENT: list[AxisRules] = []
+
+
+class use_rules:
+    def __init__(self, rules: AxisRules):
+        self.rules = rules
+
+    def __enter__(self):
+        _CURRENT.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *a):
+        _CURRENT.pop()
+
+
+def shard(x, *logical: str | None):
+    """with_sharding_constraint under the active rules (no-op outside)."""
+    if not _CURRENT:
+        return x
+    spec = _CURRENT[-1].spec(*logical)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings from pytree path names
+# ---------------------------------------------------------------------------
+
+# (regex over the param path, logical axes per dim — trailing dims matched
+# right-aligned; stacked-layer leading dims are left unsharded)
+PARAM_RULES: list[tuple[str, tuple[str | None, ...]]] = [
+    (r"embed", ("vocab", None)),
+    (r"lm_head", (None, "vocab")),
+    (r"(wq|wkv_a|q_proj)$", (None, "heads")),
+    (r"(wk|wv|k_proj|v_proj)$", (None, "kv_heads")),
+    (r"(wo|o_proj)$", ("heads", None)),
+    (r"(q_bias)$", ("heads",)),
+    (r"(k_bias|v_bias)$", ("kv_heads",)),
+    (r"(w_gate|w_up|gate_proj|up_proj)$", (None, "ff")),
+    (r"(w_down|down_proj)$", ("ff", None)),
+    (r"experts_.*(gate|up)$", ("experts", None, None)),
+    (r"experts_.*down$", ("experts", None, None)),
+    (r"router$", (None, "experts")),
+    (r"(in_proj|xbc_proj)$", (None, "ff")),
+    (r"(ssm_out|out_proj)$", ("ff", None)),
+    (r"(mq|mk|mv)$", (None, "heads")),
+    (r"m_out$", ("heads", None)),
+]
+
+
+def param_spec_for_path(path: str, ndim: int, rules: AxisRules) -> P:
+    for pat, logical in PARAM_RULES:
+        if re.search(pat, path):
+            axes = [rules.axis(l) if l else None for l in logical]
+            if len(axes) < ndim:           # stacked layers etc: left-pad
+                axes = [None] * (ndim - len(axes)) + axes
+            elif len(axes) > ndim:
+                axes = axes[-ndim:]
+            return P(*axes)
+    return P()  # replicate
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def params_pspecs(params_shape: Any, rules: AxisRules) -> Any:
+    """Pytree of PartitionSpec for a params pytree (of ShapeDtypeStruct)."""
+    def fn(path, leaf):
+        return param_spec_for_path(_path_str(path), len(leaf.shape), rules)
+    return jax.tree_util.tree_map_with_path(fn, params_shape)
+
+
+def params_shardings(params_shape: Any, mesh: jax.sharding.Mesh,
+                     rules: AxisRules) -> Any:
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        params_pspecs(params_shape, rules),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero_pspecs(params_shape: Any, rules: AxisRules,
+                mesh: jax.sharding.Mesh) -> Any:
+    """ZeRO-style specs for optimizer state / gradient accumulators: on top
+    of the parameter sharding, shard the first still-unsharded divisible dim
+    over the data axes.  Weights stay DP-replicated (needed for fwd); the
+    8-16 bytes/param of moments+f32 grads — the bulk at MoE scale — shard
+    dp-ways, and XLA inserts the ZeRO all-gather on the updated params."""
+    base = params_pspecs(params_shape, rules)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not data_axes:
+        return base
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.shape[a]
+    data = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def fn(leaf, spec):
+        dims = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i in range(leaf.ndim):
+            if dims[i] is None and leaf.shape[i] % dp == 0 \
+                    and leaf.shape[i] >= dp:
+                dims[i] = data
+                return P(*dims)
+        return P(*dims)
+
+    return jax.tree_util.tree_map(fn, params_shape, base,
+                                  is_leaf=lambda x: isinstance(
+                                      x, jax.ShapeDtypeStruct))

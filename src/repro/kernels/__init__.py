@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ the serving tie-in):
+
+  garble/     batched half-gates garbling/evaluation with constant-time
+              (lookup-free) AES — the fixed-key AES hot loop of §7.3
+  ntt/        negacyclic NTT for CKKS polynomial arithmetic, 32-bit-limb
+              Barrett modmul (no native 64-bit multiplies needed)
+  paged_attn/ flash-decoding over a scalar-prefetched block table — MAGE's
+              paged-KV memory program at the kernel level
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public API + layout adapters), ref.py (pure-jnp oracle).  Validated in
+interpret mode on CPU; TPU is the lowering target.
+"""
+
+from . import garble, ntt, paged_attn
+
+__all__ = ["garble", "ntt", "paged_attn"]

@@ -1,0 +1,251 @@
+"""Pallas TPU kernel: batched half-gates garbling / evaluation.
+
+TPU adaptation of the paper's fixed-key-AES hot loop (§7.3): instead of the
+CPU-idiomatic table-lookup S-box (random gathers are hostile to the VPU),
+SubBytes is computed as a CONSTANT-TIME GF(2^8) inversion — x^254 via an
+addition chain of carry-less multiplies — all branch-free bitwise ops on
+int32 lanes.  Lookup-free crypto is also oblivious at the instruction level,
+which matches the paper's thesis that SC execution has data-independent
+behavior.
+
+Layout: a gate batch block of BLOCK_M gates lives in VMEM as (BLOCK_M, 4)
+uint32 label tiles (a 128-bit label per row); the AES state is (4*BLOCK_M,
+16) int32 — all four hashes of a half-gate are batched into ONE AES pass.
+The grid streams gate blocks HBM->VMEM exactly like MAGE streams pages:
+the BlockSpec index maps are the (fully static) memory program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ...protocols.garbled.aes import ROUND_KEYS
+
+BLOCK_M = 256
+
+_RK = jnp.asarray(ROUND_KEYS.astype(np.int32))
+_SHIFT_ROWS = tuple(int(x) for x in
+                    [(i + 4 * (i % 4)) % 16 for i in range(16)])
+
+
+# ---------------------------------------------------------------------------
+# constant-time AES core (shared by both kernel bodies; pure jnp ops on
+# int32 so it lowers cleanly inside Pallas)
+# ---------------------------------------------------------------------------
+
+
+def _gmul(a, b):
+    """Carry-less GF(2^8) multiply, branch-free, int32 lanes."""
+    acc = jnp.zeros_like(a)
+    aa = a
+    bb = b
+    for _ in range(8):
+        acc = acc ^ (aa * (bb & 1))
+        bb = bb >> 1
+        aa = ((aa << 1) ^ ((aa >> 7) & 1) * 0x1B) & 0xFF
+    return acc
+
+
+def _ginv(x):
+    """x^254 in GF(2^8): constant-time inverse (0 -> 0)."""
+    x2 = _gmul(x, x)
+    x4 = _gmul(x2, x2)
+    x8 = _gmul(x4, x4)
+    x16 = _gmul(x8, x8)
+    x32 = _gmul(x16, x16)
+    x64 = _gmul(x32, x32)
+    x128 = _gmul(x64, x64)
+    r = _gmul(x128, x64)
+    r = _gmul(r, x32)
+    r = _gmul(r, x16)
+    r = _gmul(r, x8)
+    r = _gmul(r, x4)
+    return _gmul(r, x2)
+
+
+def _sbox_ct(x):
+    """SubBytes: inversion + affine transform, no lookups."""
+    inv = _ginv(x)
+    res = 0x63
+    for sh in range(5):
+        rot = ((inv << sh) | (inv >> (8 - sh))) & 0xFF
+        res = res ^ rot
+    return res & 0xFF
+
+
+def _xtime(b):
+    return ((b << 1) ^ ((b >> 7) & 1) * 0x1B) & 0xFF
+
+
+def _shift_rows(s):
+    return jnp.concatenate([s[:, i:i + 1] for i in _SHIFT_ROWS], axis=1)
+
+
+def aes128_ct(blocks, rk):
+    """Constant-time AES-128 on (m, 16) int32 byte state."""
+    s = blocks ^ rk[0]
+    for rnd in range(1, 10):
+        s = _sbox_ct(s)
+        s = _shift_rows(s)
+        v = s.reshape(-1, 4, 4)
+        x = _xtime(v)
+        r1 = jnp.roll(v, -1, axis=2)
+        r2 = jnp.roll(v, -2, axis=2)
+        r3 = jnp.roll(v, -3, axis=2)
+        s = (x ^ r1 ^ _xtime(r1) ^ r2 ^ r3).reshape(-1, 16) ^ rk[rnd]
+    s = _sbox_ct(s)
+    s = _shift_rows(s)
+    return s ^ rk[10]
+
+
+def _to_bytes(lbl):
+    l32 = lbl.astype(jnp.uint32)
+    return jnp.stack(
+        [((l32[:, i // 4] >> jnp.uint32(8 * (i % 4)))
+          & jnp.uint32(0xFF)).astype(jnp.int32) for i in range(16)], axis=1)
+
+
+def _to_labels(b):
+    b = b.astype(jnp.uint32)
+    return jnp.stack(
+        [b[:, 4 * w] | (b[:, 4 * w + 1] << jnp.uint32(8))
+         | (b[:, 4 * w + 2] << jnp.uint32(16))
+         | (b[:, 4 * w + 3] << jnp.uint32(24)) for w in range(4)], axis=1)
+
+
+def _double(l):
+    l = l.astype(jnp.uint32)
+    carry_top = l[:, 3] >> jnp.uint32(31)
+    lanes = []
+    prev = jnp.zeros_like(l[:, 0])
+    for i in range(4):
+        lanes.append((l[:, i] << jnp.uint32(1)) | prev)
+        prev = l[:, i] >> jnp.uint32(31)
+    lanes[0] = lanes[0] ^ (carry_top * jnp.uint32(0x87))
+    return jnp.stack(lanes, axis=1)
+
+
+def _hash4(labels, gids, rk):
+    """One batched constant-time AES pass hashing (m, 4)-label array with
+    per-row tweaks ``gids`` (int32)."""
+    y = _double(labels)
+    y = y.at[:, 0].set(y[:, 0] ^ gids.astype(jnp.uint32))
+    enc = aes128_ct(_to_bytes(y), rk)
+    return _to_labels(enc) ^ y
+
+
+def _mask(bits, lbl):
+    return jnp.where((bits != 0)[:, None], lbl, jnp.uint32(0))
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _garble_kernel(a_ref, b_ref, r_ref, gid_ref, rk_ref, c_ref, tab_ref):
+    m = a_ref.shape[0]
+    a0 = a_ref[...]
+    b0 = b_ref[...]
+    r = r_ref[...]
+    rr = jnp.broadcast_to(r.reshape(1, 4), (m, 4))
+    base = gid_ref[0]
+    j0 = base + 2 * jax.lax.iota(jnp.int32, m)
+    j1 = j0 + 1
+    # all four hashes in ONE AES pass: rows [A0 | A1 | B0 | B1]
+    stacked = jnp.concatenate([a0, a0 ^ rr, b0, b0 ^ rr], axis=0)
+    gids = jnp.concatenate([j0, j0, j1, j1], axis=0)
+    h = _hash4(stacked, gids, rk_ref[...])
+    ha0, ha1, hb0, hb1 = h[:m], h[m:2 * m], h[2 * m:3 * m], h[3 * m:]
+    pa = a0[:, 0] & jnp.uint32(1)
+    pb = b0[:, 0] & jnp.uint32(1)
+    tg = ha0 ^ ha1 ^ _mask(pb, rr)
+    wg = ha0 ^ _mask(pa, tg)
+    te = hb0 ^ hb1 ^ a0
+    we = hb0 ^ _mask(pb, te ^ a0)
+    c_ref[...] = wg ^ we
+    tab_ref[...] = jnp.concatenate([tg, te], axis=1)
+
+
+def _eval_kernel(a_ref, b_ref, tab_ref, gid_ref, rk_ref, c_ref):
+    m = a_ref.shape[0]
+    wa = a_ref[...]
+    wb = b_ref[...]
+    tab = tab_ref[...]
+    base = gid_ref[0]
+    j0 = base + 2 * jax.lax.iota(jnp.int32, m)
+    j1 = j0 + 1
+    stacked = jnp.concatenate([wa, wb], axis=0)
+    gids = jnp.concatenate([j0, j1], axis=0)
+    h = _hash4(stacked, gids, rk_ref[...])
+    hwa, hwb = h[:m], h[m:]
+    sa = wa[:, 0] & jnp.uint32(1)
+    sb = wb[:, 0] & jnp.uint32(1)
+    tg, te = tab[:, :4], tab[:, 4:]
+    wg = hwa ^ _mask(sa, tg)
+    we = hwb ^ _mask(sb, te ^ wa)
+    c_ref[...] = wg ^ we
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (grid over gate blocks)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+def garble_and_pallas(a0, b0, r, gid0, *, interpret: bool = True,
+                      block_m: int = BLOCK_M):
+    m = a0.shape[0]
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m,)
+    gid_blocks = (gid0 + 2 * block_m *
+                  jnp.arange(grid[0], dtype=jnp.int32)).reshape(-1, 1)
+    return pl.pallas_call(
+        _garble_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 4), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((11, 16), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 8), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, 4), jnp.uint32),
+            jax.ShapeDtypeStruct((m, 8), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(a0, b0, r.reshape(1, 4), gid_blocks, _RK)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_m"))
+def eval_and_pallas(wa, wb, tables, gid0, *, interpret: bool = True,
+                    block_m: int = BLOCK_M):
+    m = wa.shape[0]
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m,)
+    gid_blocks = (gid0 + 2 * block_m *
+                  jnp.arange(grid[0], dtype=jnp.int32)).reshape(-1, 1)
+    return pl.pallas_call(
+        _eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 4), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 8), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((11, 16), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 4), jnp.uint32),
+        interpret=interpret,
+    )(wa, wb, tables, gid_blocks, _RK)

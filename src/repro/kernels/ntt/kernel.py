@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: negacyclic NTT for CKKS polynomial arithmetic.
+
+TPU adaptation (DESIGN.md §3): the modular multiply is built from 32-bit
+lanes only — 16-bit limb products composed into a 64-bit (hi, lo) pair and
+reduced with parameterized Barrett (mu = floor(2^2k / q), k = bitlen(q)),
+so nothing needs native 64-bit multiplies.  Primes are < 2^30 (the chain
+primes of protocols/ckks/params.py satisfy this).
+
+Blocking: the grid runs over batches of polynomials; each kernel instance
+holds a (BLOCK_B, N) uint32 tile plus the (N,) twiddle table in VMEM and
+executes all log2(N) Longa–Naehrig stages in-register — for N <= 8192 and
+BLOCK_B = 8 that is < 300 KiB of VMEM.  Stage reshapes are static, so the
+whole butterfly schedule is known at compile time: the BlockSpec grid is
+the memory program for streaming the polynomial batch HBM -> VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 8
+
+
+def _mul64(a, b):
+    """uint32 x uint32 -> 64-bit (hi, lo) via 16-bit limbs (TPU-native)."""
+    a0 = a & jnp.uint32(0xFFFF)
+    a1 = a >> jnp.uint32(16)
+    b0 = b & jnp.uint32(0xFFFF)
+    b1 = b >> jnp.uint32(16)
+    ll = a0 * b0
+    lh = a0 * b1
+    hl = a1 * b0
+    hh = a1 * b1
+    mid = lh + hl                      # < 2^32, no wrap for a,b < 2^31
+    lo = ll + ((mid & jnp.uint32(0xFFFF)) << jnp.uint32(16))
+    carry = (lo < ll).astype(jnp.uint32)
+    hi = hh + (mid >> jnp.uint32(16)) + carry
+    return hi, lo
+
+
+def _modmul(a, b, q: int, mu: int, k: int):
+    """a*b mod q with Barrett; q < 2^30, k = q.bit_length(), static."""
+    x_hi, x_lo = _mul64(a, b)
+    t1 = (x_hi << jnp.uint32(32 - (k - 1))) | (x_lo >> jnp.uint32(k - 1))
+    p_hi, p_lo = _mul64(t1, jnp.uint32(mu))
+    qest = (p_hi << jnp.uint32(32 - (k + 1))) | (p_lo >> jnp.uint32(k + 1))
+    _, qq_lo = _mul64(qest, jnp.uint32(q))
+    r = x_lo - qq_lo                   # exact in low 32 bits (r < 3q < 2^32)
+    r = jnp.where(r >= jnp.uint32(q), r - jnp.uint32(q), r)
+    r = jnp.where(r >= jnp.uint32(q), r - jnp.uint32(q), r)
+    return r
+
+
+def _addmod(a, b, q: int):
+    s = a + b
+    return jnp.where(s >= jnp.uint32(q), s - jnp.uint32(q), s)
+
+
+def _submod(a, b, q: int):
+    return jnp.where(a >= b, a - b, a + jnp.uint32(q) - b)
+
+
+def _ntt_fwd_kernel(a_ref, psi_ref, o_ref, *, q: int, mu: int, k: int,
+                    n: int):
+    v = a_ref[...]                      # (B, N) uint32
+    psis = psi_ref[...]                 # (1, N)
+    bsz = v.shape[0]
+    t = n
+    m = 1
+    while m < n:
+        t //= 2
+        w = v.reshape(bsz, m, 2, t)
+        s = jax.lax.dynamic_slice(psis, (0, m), (1, m)).reshape(1, m, 1)
+        u = w[:, :, 0, :]
+        x = _modmul(w[:, :, 1, :], jnp.broadcast_to(s, (bsz, m, t)), q, mu, k)
+        v = jnp.stack([_addmod(u, x, q), _submod(u, x, q)],
+                      axis=2).reshape(bsz, n)
+        m *= 2
+    o_ref[...] = v
+
+
+def _ntt_inv_kernel(a_ref, psi_ref, o_ref, *, q: int, mu: int, k: int,
+                    n: int, n_inv: int):
+    v = a_ref[...]
+    psis = psi_ref[...]
+    bsz = v.shape[0]
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        w = v.reshape(bsz, h, 2, t)
+        s = jax.lax.dynamic_slice(psis, (0, h), (1, h)).reshape(1, h, 1)
+        u = w[:, :, 0, :]
+        x = w[:, :, 1, :]
+        lo = _addmod(u, x, q)
+        hi = _modmul(_submod(u, x, q), jnp.broadcast_to(s, (bsz, h, t)),
+                     q, mu, k)
+        v = jnp.stack([lo, hi], axis=2).reshape(bsz, n)
+        t *= 2
+        m = h
+    o_ref[...] = _modmul(v, jnp.full_like(v, jnp.uint32(n_inv)), q, mu, k)
+
+
+def _pointwise_kernel(a_ref, b_ref, o_ref, *, q: int, mu: int, k: int):
+    o_ref[...] = _modmul(a_ref[...], b_ref[...], q, mu, k)
+
+
+def _barrett_consts(q: int) -> tuple[int, int]:
+    k = q.bit_length()
+    assert q < (1 << 30), "kernel Barrett path needs q < 2^30"
+    return (1 << (2 * k)) // q, k
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("q", "inverse", "n_inv", "interpret",
+                                    "block_b"))
+def ntt_pallas(a, psis_brv, *, q: int, inverse: bool = False, n_inv: int = 0,
+               interpret: bool = True, block_b: int = BLOCK_B):
+    """Batched negacyclic NTT: a is (B, N) uint32, psis_brv (N,) uint32."""
+    bsz, n = a.shape
+    assert bsz % block_b == 0, (bsz, block_b)
+    mu, k = _barrett_consts(q)
+    if inverse:
+        body = functools.partial(_ntt_inv_kernel, q=q, mu=mu, k=k, n=n,
+                                 n_inv=n_inv)
+    else:
+        body = functools.partial(_ntt_fwd_kernel, q=q, mu=mu, k=k, n=n)
+    return pl.pallas_call(
+        body,
+        grid=(bsz // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.uint32),
+        interpret=interpret,
+    )(a, psis_brv.reshape(1, n))
+
+
+@functools.partial(jax.jit, static_argnames=("q", "interpret", "block_b"))
+def pointwise_mul_pallas(a, b, *, q: int, interpret: bool = True,
+                         block_b: int = BLOCK_B):
+    bsz, n = a.shape
+    assert bsz % block_b == 0
+    mu, k = _barrett_consts(q)
+    return pl.pallas_call(
+        functools.partial(_pointwise_kernel, q=q, mu=mu, k=k),
+        grid=(bsz // block_b,),
+        in_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+                  pl.BlockSpec((block_b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.uint32),
+        interpret=interpret,
+    )(a, b)

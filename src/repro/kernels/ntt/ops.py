@@ -1,0 +1,56 @@
+"""Jit'd public API for the NTT kernel: uint64 driver layout adapters.
+
+The CKKS driver keeps polynomials as uint64 (numpy hot path); the TPU
+kernel wants uint32 (q < 2^30 so coefficients fit).  Tables come from the
+shared protocols/ckks/ntt.py cache, so all three implementations use the
+same twiddle ordering.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ...protocols.ckks.ntt import ntt_tables
+from . import kernel
+
+
+def _pad(a: np.ndarray, block: int) -> tuple[np.ndarray, int]:
+    b = a.shape[0]
+    pad = (-b) % block
+    if pad:
+        a = np.concatenate([a, np.zeros((pad, a.shape[1]), a.dtype)])
+    return a, b
+
+
+def ntt_forward(a_u64: np.ndarray, q: int, *, interpret: bool = True,
+                block_b: int = 8) -> np.ndarray:
+    """(B, N) uint64 coefficients -> bit-reversed NTT domain, via Pallas."""
+    psis, _, _ = ntt_tables(q, a_u64.shape[-1])
+    a32, b = _pad(a_u64.astype(np.uint32), block_b)
+    out = kernel.ntt_pallas(a32, psis.astype(np.uint32), q=q,
+                            interpret=interpret, block_b=block_b)
+    return np.asarray(out)[:b].astype(np.uint64)
+
+
+def ntt_inverse(a_u64: np.ndarray, q: int, *, interpret: bool = True,
+                block_b: int = 8) -> np.ndarray:
+    n = a_u64.shape[-1]
+    _, psis_inv, n_inv = ntt_tables(q, n)
+    a32, b = _pad(a_u64.astype(np.uint32), block_b)
+    out = kernel.ntt_pallas(a32, psis_inv.astype(np.uint32), q=q,
+                            inverse=True, n_inv=int(n_inv),
+                            interpret=interpret, block_b=block_b)
+    return np.asarray(out)[:b].astype(np.uint64)
+
+
+def negacyclic_mul(a_u64: np.ndarray, b_u64: np.ndarray, q: int, *,
+                   interpret: bool = True, block_b: int = 8) -> np.ndarray:
+    """Full polynomial multiply through the kernel path."""
+    fa = ntt_forward(a_u64, q, interpret=interpret, block_b=block_b)
+    fb = ntt_forward(b_u64, q, interpret=interpret, block_b=block_b)
+    fa32, bb = _pad(fa.astype(np.uint32), block_b)
+    fb32, _ = _pad(fb.astype(np.uint32), block_b)
+    prod = kernel.pointwise_mul_pallas(fa32, fb32, q=q, interpret=interpret,
+                                       block_b=block_b)
+    return ntt_inverse(np.asarray(prod)[:bb].astype(np.uint64), q,
+                       interpret=interpret, block_b=block_b)

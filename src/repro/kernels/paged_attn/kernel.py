@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: paged decode attention (flash-decoding over a block
+table).
+
+This is MAGE's paged-KV memory program realized at the kernel level
+(DESIGN.md §4): the page schedule (block table) is known before the kernel
+runs — decode's access pattern is oblivious — so pages are *scalar-
+prefetched* and streamed HBM->VMEM with no data-dependent stalls, the exact
+analogue of ISSUE-SWAP-IN / FINISH-SWAP-IN with lookahead.
+
+Grid: (batch, kv_heads, max_pages); the block table and sequence lengths
+ride in scalar-prefetch SMEM so the K/V BlockSpec index maps can resolve
+page -> HBM tile before each step.  Online softmax state (m, l, acc) lives
+in VMEM scratch across the page loop; the output block is written on the
+last page step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page_sz: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (group, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)       # (page_sz, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = p * page_sz + jax.lax.iota(jnp.int32, page_sz)
+    valid = pos < len_ref[b]
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]                           # (group, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    pexp = jnp.exp(s - m_new)                     # (group, page_sz)
+    l_new = l_ref[...] * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        pexp, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_table,
+                                  seq_lens, *, interpret: bool = True):
+    """q: (batch, kv_heads, group, head_dim); k_pages/v_pages: (num_pages,
+    page_sz, kv_heads, head_dim); block_table (batch, max_pages) int32;
+    seq_lens (batch,) int32 -> (batch, kv_heads, group, head_dim) f32."""
+    batch, kv_heads, group, head_dim = q.shape
+    num_pages, page_sz, _, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    scale = 1.0 / float(head_dim) ** 0.5
+
+    def q_map(b, h, p, bt, sl):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, p, bt, sl):
+        return (bt[b, p], 0, h, 0)
+
+    def o_map(b, h, p, bt, sl):
+        return (b, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(batch, kv_heads, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, head_dim), q_map),
+            pl.BlockSpec((1, page_sz, 1, head_dim), kv_map),
+            pl.BlockSpec((1, page_sz, 1, head_dim), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, head_dim), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, head_dim), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, page_sz=page_sz, scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, kv_heads, group, head_dim),
+                                       jnp.float32),
+        interpret=interpret,
+    )(block_table, seq_lens, q, k_pages, v_pages)

@@ -1,0 +1,24 @@
+"""Jit'd public API for paged decode attention (GQA layout adapter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                           use_kernel: bool = True, interpret: bool = True):
+    """q: (batch, q_heads, head_dim) -> (batch, q_heads, head_dim) f32."""
+    batch, q_heads, head_dim = q.shape
+    kv_heads = k_pages.shape[2]
+    group = q_heads // kv_heads
+    if not use_kernel:
+        return ref.paged_decode_attention(q, k_pages, v_pages, block_table,
+                                          seq_lens)
+    qg = jnp.asarray(q).reshape(batch, kv_heads, group, head_dim)
+    out = kernel.paged_decode_attention_pallas(
+        qg, jnp.asarray(k_pages), jnp.asarray(v_pages),
+        jnp.asarray(block_table, dtype=jnp.int32),
+        jnp.asarray(seq_lens, dtype=jnp.int32), interpret=interpret)
+    return out.reshape(batch, q_heads, head_dim)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for paged decode attention.
+
+Gathers KV pages through the block table into dense (batch, seq, kv_heads,
+head_dim) tensors and runs masked GQA attention for one decode step.
+"""
+
+from __future__ import annotations
+
+import jax  # noqa: F401  (kept for parity with kernel imports)
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens):
+    """q: (batch, q_heads, head_dim); k_pages/v_pages: (num_pages, page_sz,
+    kv_heads, head_dim); block_table: (batch, max_pages) int32; seq_lens:
+    (batch,) int32.  Returns (batch, q_heads, head_dim) float32."""
+    q = jnp.asarray(q, dtype=jnp.float32)
+    k_pages = jnp.asarray(k_pages, dtype=jnp.float32)
+    v_pages = jnp.asarray(v_pages, dtype=jnp.float32)
+    batch, q_heads, head_dim = q.shape
+    num_pages, page_sz, kv_heads, _ = k_pages.shape
+    max_pages = block_table.shape[1]
+    group = q_heads // kv_heads
+
+    # gather pages -> (batch, max_pages*page_sz, kv_heads, head_dim)
+    k = k_pages[block_table].reshape(batch, max_pages * page_sz,
+                                     kv_heads, head_dim)
+    v = v_pages[block_table].reshape(batch, max_pages * page_sz,
+                                     kv_heads, head_dim)
+    qg = q.reshape(batch, kv_heads, group, head_dim)
+    scale = 1.0 / np.sqrt(head_dim)
+    # scores: (batch, kv_heads, group, seq)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k) * scale
+    pos = jnp.arange(max_pages * page_sz)[None, :]
+    mask = pos < jnp.asarray(seq_lens)[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(batch, q_heads, head_dim)

@@ -1,0 +1,275 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (per chip)
+  memory term     = HLO_bytes / HBM_bw                (per chip)
+  collective term = collective_bytes / ICI_bw         (per chip)
+
+cost_analysis() supplies FLOPs/bytes for the per-device SPMD module;
+collective bytes are parsed out of the compiled HLO text (result-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective kind over the module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match '= <shape> kind(' — result shape precedes the op name
+            marker = f" {kind}("
+            if marker in ls and "=" in ls:
+                lhs, rhs = ls.split(marker, 1)
+                shape_part = lhs.split("=", 1)[1]
+                out[kind] += _shape_bytes(shape_part)
+                out["count"] += 1
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per-device HLO flops
+    hbm_bytes: float              # per-device bytes accessed
+    coll_bytes: float             # per-device collective bytes
+    model_flops_per_chip: float   # 6ND (or 2ND) / chips
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs: how much compiled compute is 'useful'
+        (catches remat/redundancy waste)."""
+        return (self.model_flops_per_chip / self.flops) if self.flops else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """Roofline fraction: useful FLOPs / (peak * bound time)."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.model_flops_per_chip / (PEAK_FLOPS_BF16 * self.bound_s)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.mfu_upper_bound,
+        }
+
+
+def model_flops(cfg, cell, n_chips: int) -> float:
+    """6*N*D for training, 2*N*D for forward-only (per whole step)."""
+    n_active = cfg.active_param_estimate()
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    mult = 6 if cell.kind == "train" else 2
+    return mult * n_active * tokens / n_chips
+
+
+# ---------------------------------------------------------------------------
+# analytic roofline model
+#
+# XLA's cost_analysis on the CPU backend counts while-loop (scan) bodies
+# ONCE, so HLO-derived flops/bytes undercount by the trip counts of the
+# microbatch/layer scans.  The analytic model below prices the step from
+# the program structure we built (it knows every scan's trip count) and is
+# cross-checked against the HLO collective inventory (ops that appear in
+# the entry computation, e.g. the DP gradient all-reduce, match exactly).
+# Both sets of numbers are reported; §Roofline uses the analytic terms.
+# ---------------------------------------------------------------------------
+
+
+def analytic_roofline(cfg, cell, mesh, rules, microbatches: int = 1,
+                      remat_policy: str = "full") -> dict:
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    dp = 1
+    for a in ("pod", "data"):
+        if a in dict(mesh.shape):
+            dp *= dict(mesh.shape)[a]
+    tp = dict(mesh.shape).get("model", 1)
+
+    B, S = cell.global_batch, cell.seq_len
+    d = cfg.d_model
+    L = cfg.n_layers
+    n_active = cfg.active_param_estimate()
+    dtype_b = 2  # bf16
+
+    batch_shardable = B % dp == 0 and B >= dp
+    b_local = B // dp if batch_shardable else B
+
+    # ---- FLOPs per chip ----------------------------------------------------
+    no_recompute = remat_policy in ("dots", "block_outs")
+    passes = 2 if no_recompute else 3  # fwd(+recompute)+bwd collect. passes
+    if cell.kind == "train":
+        tokens = B * S
+        # fwd 2N + bwd 4N (+ recompute 2N under full remat; block_outs
+        # still recomputes the intra-block math, but that re-issues no
+        # collectives — only the flops term keeps the recompute share)
+        lin = (6.0 if remat_policy == "dots" else 8.0) * n_active * tokens
+        attn_layers = L if cfg.family not in ("ssm", "hybrid") else \
+            (L // cfg.shared_attn_every if cfg.shared_attn_every else 0)
+        quad_mult = 12.0 if no_recompute and remat_policy == "dots" else 16.0
+        attn = quad_mult * B * S * S * cfg.n_heads * cfg.head_dim \
+            * attn_layers
+        if cfg.family in ("ssm", "hybrid"):
+            # SSD intra-chunk quadratic + xLSTM D-matrix quadratic
+            from ..models.xlstm import MLSTM_CHUNK, MLSTM_CHUNK_THRESHOLD
+            if cfg.family == "hybrid":
+                q = cfg.ssm_chunk
+            else:
+                q = MLSTM_CHUNK if S >= MLSTM_CHUNK_THRESHOLD else S
+            heads = (cfg.ssm_expand * d // cfg.ssm_head_dim
+                     if cfg.family == "hybrid" else cfg.n_heads)
+            hd = (cfg.ssm_head_dim if cfg.family == "hybrid"
+                  else d // cfg.n_heads)
+            attn += quad_mult * B * S * q * heads * hd * L
+        flops = (lin + attn) / n_chips
+    elif cell.kind == "prefill":
+        tokens = B * S
+        lin = 2.0 * n_active * tokens
+        attn_layers = L if cfg.family not in ("ssm", "hybrid") else \
+            (L // cfg.shared_attn_every if cfg.shared_attn_every else 0)
+        attn = 4.0 * B * S * S * cfg.n_heads * cfg.head_dim * attn_layers
+        if cfg.family in ("ssm", "hybrid"):
+            from ..models.xlstm import MLSTM_CHUNK, MLSTM_CHUNK_THRESHOLD
+            q = cfg.ssm_chunk if cfg.family == "hybrid" else \
+                (MLSTM_CHUNK if S >= MLSTM_CHUNK_THRESHOLD else S)
+            heads = (cfg.ssm_expand * d // cfg.ssm_head_dim
+                     if cfg.family == "hybrid" else cfg.n_heads)
+            hd = (cfg.ssm_head_dim if cfg.family == "hybrid"
+                  else d // cfg.n_heads)
+            attn += 4.0 * B * S * q * heads * hd * L
+        flops = (lin + attn) / n_chips
+    else:  # decode: one token over the whole batch
+        lin = 2.0 * n_active * B
+        attn_layers = L if cfg.family not in ("ssm", "hybrid") else \
+            (L // cfg.shared_attn_every if cfg.shared_attn_every else 0)
+        attn = 4.0 * B * S * cfg.n_heads * cfg.head_dim * attn_layers
+        flops = (lin + attn) / n_chips
+
+    # ---- HBM bytes per chip --------------------------------------------------
+    params_local = n_active * dtype_b / tp  # active weights, TP-sharded
+    if cell.kind == "train":
+        # per microbatch: read weights fwd + recompute + bwd grad writes;
+        # optimizer: read/write mu, nu (f32) + params
+        weight_traffic = 3.0 * microbatches * params_local
+        opt_traffic = (4 + 4 + 4 + 4 + 2 + 2) * n_active / tp
+        act_traffic = 12.0 * B * S * d * L * dtype_b / n_chips
+        hbm = weight_traffic + opt_traffic + act_traffic
+    elif cell.kind == "prefill":
+        hbm = params_local + 8.0 * B * S * d * L * dtype_b / n_chips
+    else:
+        kv_byte = 1 + 2 / cfg.head_dim if cfg.kv_cache_dtype == "int8" \
+            else dtype_b
+        kv_bytes = (2 * attn_layers * cfg.n_kv_heads * cfg.head_dim
+                    * S * B * kv_byte) if cfg.family not in ("ssm",) else 0
+        if cfg.family in ("ssm", "hybrid"):
+            d_in = cfg.ssm_expand * d
+            state = (d_in // max(cfg.ssm_head_dim, 1)) * cfg.ssm_head_dim \
+                * cfg.ssm_state * 4
+            kv_bytes += L * B * state
+        hbm = params_local + kv_bytes / n_chips * 1.0
+
+    # ---- collective bytes per chip -------------------------------------------
+    # family-aware TP all-reduce counts: an attention block has 2 row-
+    # parallel matmuls (attn-out, mlp-down); a Mamba2 block 1 (out_proj);
+    # an mLSTM block 1 (m_out) — and only when the corresponding logical
+    # axis actually maps onto the model mesh axis for this config.
+    ring = lambda p: 2.0 * (p - 1) / max(p, 1)  # noqa: E731
+    attn_tp = 2 if (rules.axis("heads") or rules.axis("kv_heads")
+                    or rules.axis("ff")) else 0
+    if cfg.moe:
+        attn_tp += 2 if rules.axis("experts") else 0  # dispatch/combine
+    mamba_tp = 1 if rules.axis("ff") else 0
+    mlstm_tp = 1 if rules.axis("heads") else 0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        ars = attn_tp * L
+    elif cfg.family == "hybrid":
+        n_attn = L // cfg.shared_attn_every if cfg.shared_attn_every else 0
+        ars = mamba_tp * L + attn_tp * n_attn
+    else:  # ssm / xlstm
+        n_slstm = L // cfg.slstm_every if cfg.slstm_every else 0
+        ars = mlstm_tp * (L - n_slstm)
+    if rules.axis("vocab"):
+        ars += 1  # unembed boundary
+
+    coll = 0.0
+    if cell.kind == "train":
+        grad_local = 4.0 * n_active / tp          # f32 grads, TP-sharded
+        if getattr(rules, "grad_compression", None) == "int8":
+            grad_local /= 4.0                     # int8 payload (+scales)
+        coll += ring(dp) * grad_local             # DP all-reduce
+        # x (fwd, bwd [, recompute]) passes over b_local total rows
+        if tp > 1:
+            coll += ring(tp) * b_local * S * d * dtype_b * passes * ars
+    elif cell.kind == "prefill":
+        if tp > 1:
+            coll += ring(tp) * b_local * S * d * dtype_b * ars
+    else:
+        if tp > 1:
+            coll += ring(tp) * b_local * 1 * d * dtype_b * ars
+
+    roof = Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll,
+                    model_flops_per_chip=model_flops(cfg, cell, n_chips))
+    out = roof.as_dict()
+    out["source"] = "analytic"
+    return out

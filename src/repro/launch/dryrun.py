@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--seq-shard] [--pipeline]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Artifacts land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""  # noqa: E402
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, all_cells, get_config
+from ..distributed.sharding import (params_pspecs, rules_for, use_rules,
+                                    zero_pspecs)
+from ..models import ModelConfig, encdec_init_caches
+from ..train.train_step import TrainConfig, train_step
+from . import specs as S
+from .analysis import (Roofline, analytic_roofline, collective_bytes,
+                       model_flops)
+from .mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def build_step(cfg: ModelConfig, cell, mesh, rules, microbatches=None,
+               extra_opts=None):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    params_shape = S.params_struct(cfg)
+    pspecs = params_pspecs(params_shape, rules)
+    params_sh = S.named(pspecs, mesh)
+    batch_shapes, batch_pspecs, shardable = S.batch_specs(
+        cfg, cell, rules, _dp_size(mesh))
+    batch_sh = S.named(batch_pspecs, mesh)
+    bspec = rules.axis("batch") if shardable else None
+
+    if cell.kind == "train":
+        opt_shape = S.opt_struct(params_shape)
+        # ZeRO-1: moments shard over the data axes on top of TP
+        zero_specs = zero_pspecs(params_shape, rules, mesh)
+        opt_pspecs = {"mu": zero_specs, "nu": zero_specs, "step": P()}
+        opt_sh = S.named(opt_pspecs, mesh)
+        dp = _dp_size(mesh)
+        mb = microbatches or max(1, min(16, cell.global_batch // dp))
+        tcfg = TrainConfig(microbatches=mb)
+
+        def fn(params, opt_state, batch):
+            with use_rules(rules):
+                return train_step(params, opt_state, batch, cfg, tcfg,
+                                  grad_pspecs=zero_specs)
+
+        jf = jax.jit(fn, in_shardings=(params_sh, opt_sh, batch_sh),
+                     donate_argnums=(0, 1))
+        return jf, (params_shape, opt_shape, batch_shapes)
+
+    if cell.kind == "prefill":
+        if cfg.is_encdec:
+            def fn(params, batch):
+                with use_rules(rules):
+                    from ..models.encdec import encdec_prefill
+                    return encdec_prefill(params, batch["frames"],
+                                          batch["tokens"], cfg)
+            jf = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+            return jf, (params_shape, batch_shapes)
+
+        def fn(params, batch):
+            with use_rules(rules):
+                from ..models import lm_prefill
+                logits, caches = lm_prefill(params, batch["tokens"], cfg,
+                                            max_seq=cell.seq_len)
+                return logits
+        jf = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+        return jf, (params_shape, batch_shapes)
+
+    # decode: one new token against a seq_len cache
+    b = cell.global_batch
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((b,), jnp.int32)
+    token_sh = NamedSharding(mesh, P(bspec, None))
+    clen_sh = NamedSharding(mesh, P(bspec))
+    if cfg.is_encdec:
+        caches_shape = jax.eval_shape(
+            lambda: encdec_init_caches(cfg, b, cell.seq_len))
+        kv = rules.axis("kv_heads")
+        caches_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(None, bspec, None, kv, None)),
+            caches_shape)
+        mem_shape = jax.ShapeDtypeStruct((b, 1024, cfg.d_model),
+                                         jnp.dtype(cfg.dtype))
+        mem_sh = NamedSharding(mesh, P(bspec, None, None))
+
+        def fn(params, token, memory, caches, cache_len):
+            with use_rules(rules):
+                from ..serve.serve_step import serve_step_encdec
+                nxt, caches, _ = serve_step_encdec(params, token, memory,
+                                                   caches, cache_len, cfg)
+                return nxt, caches
+        jf = jax.jit(fn, in_shardings=(params_sh, token_sh, mem_sh,
+                                       caches_sh, clen_sh),
+                     donate_argnums=(3,))
+        return jf, (params_shape, token, mem_shape, caches_shape, clen)
+
+    caches_shape = S.cache_struct(cfg, b, cell.seq_len)
+    caches_sh = S.named(S.cache_pspecs(cfg, rules, shardable), mesh)
+
+    def fn(params, token, caches, cache_len):
+        with use_rules(rules):
+            from ..serve.serve_step import serve_step
+            nxt, caches, _ = serve_step(params, token, caches, cache_len,
+                                        cfg)
+            return nxt, caches
+    jf = jax.jit(fn, in_shardings=(params_sh, token_sh, caches_sh, clen_sh),
+                 donate_argnums=(2,))
+    return jf, (params_shape, token, caches_shape, clen)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, seq_shard: bool = False,
+             save: bool = True, microbatches=None, dp_over_model: bool = False,
+             grad_compression: str | None = None,
+             kv_dtype: str | None = None, variant: str = "",
+             remat_policy: str = "full") -> dict:
+    from ..models.lm import set_remat_policy
+    set_remat_policy(remat_policy)
+    cfg = get_config(arch)
+    if kv_dtype:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, kv_cache_dtype=kv_dtype)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for(cfg, mesh, seq_sharding=seq_shard,
+                      dp_over_model=dp_over_model)
+    rules.grad_compression = grad_compression
+    mesh_name = "pod512" if multi_pod else "pod256"
+    t0 = time.time()
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "mesh_shape": dict(mesh.shape), "ok": False,
+              "seq_shard": seq_shard, "variant": variant}
+    try:
+        with mesh:
+            jf, args = build_step(cfg, cell, mesh, rules,
+                                  microbatches=microbatches)
+            lowered = jf.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+        n_chips = 1
+        for v in mesh.shape.values():
+            n_chips *= v
+        flops = float(cost.get("flops", 0.0))
+        hbm = float(cost.get("bytes accessed", 0.0))
+        cbytes = float(sum(v for k, v in coll.items() if k != "count"))
+        hlo_roof = Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=cbytes,
+                            model_flops_per_chip=model_flops(cfg, cell,
+                                                             n_chips))
+        dp = _dp_size(mesh)
+        mb = microbatches or max(1, min(16, cell.global_batch // dp))
+        roof = analytic_roofline(cfg, cell, mesh, rules, microbatches=mb,
+                                 remat_policy=remat_policy)
+        result.update({
+            "ok": True,
+            "lower_s": t1 - t0, "compile_s": t2 - t1,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+            },
+            "collectives": coll,
+            "roofline": roof,
+            "roofline_hlo_raw": hlo_roof.as_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — failures are the experiment
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-2000:]
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fname = f"{arch}__{shape}__{mesh_name}"
+        if seq_shard:
+            fname += "__sp"
+        if variant:
+            fname += f"__{variant}"
+        with open(os.path.join(OUT_DIR, fname + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--dp-over-model", action="store_true")
+    ap.add_argument("--grad-compression", default=None)
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--variant", default="")
+    args = ap.parse_args()
+
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for arch, shape in cells:
+        r = run_cell(arch, shape, args.multi_pod, seq_shard=args.seq_shard,
+                     microbatches=args.microbatches,
+                     dp_over_model=args.dp_over_model,
+                     grad_compression=args.grad_compression,
+                     kv_dtype=args.kv_dtype,
+                     remat_policy=args.remat_policy,
+                     variant=args.variant)
+        if r["ok"]:
+            roof = r["roofline"]
+            print(f"[OK ] {arch:24s} {shape:12s} {r['mesh']} "
+                  f"compile={r['compile_s']:6.1f}s "
+                  f"dom={roof['dominant']:10s} "
+                  f"roofline={roof['roofline_fraction']:.3f} "
+                  f"temp={r['memory']['temp_bytes']/2**30:.2f}GiB",
+                  flush=True)
+        else:
+            failures += 1
+            print(f"[FAIL] {arch:24s} {shape:12s}: {r['error']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,124 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, plus the
+matching PartitionSpecs — weak-type-correct, shardable, no allocation.
+
+Covers: params + optimizer state (train), tokens/frames batches, KV caches
+and recurrent states (decode), encoder memory (enc-dec decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ShapeCell
+from ..distributed.sharding import AxisRules, params_pspecs
+from ..models import (ModelConfig, encdec_init_caches, grouped_layout,
+                      init_caches, init_encdec, init_lm)
+from ..models.config import BlockKind
+from ..models.mamba2 import dims as mamba_dims
+from ..train.optimizer import init_opt_state
+
+
+def shape_structs(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def params_struct(cfg: ModelConfig, rng=None):
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    init = init_encdec if cfg.is_encdec else init_lm
+    return jax.eval_shape(lambda r: init(r, cfg), rng)
+
+
+def opt_struct(params_shape):
+    return jax.eval_shape(init_opt_state, params_shape)
+
+
+def _data_spec(rules: AxisRules, batch_shardable: bool) -> P:
+    return P(rules.axis("batch") if batch_shardable else None)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, rules: AxisRules,
+                n_batch_shards: int):
+    """Token (and frame) batch ShapeDtypeStructs + PartitionSpecs."""
+    b, s = cell.global_batch, cell.seq_len
+    shardable = b % max(n_batch_shards, 1) == 0 and b >= n_batch_shards
+    bspec = rules.axis("batch") if shardable else None
+    out_shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    out_specs = {"tokens": P(bspec, None)}
+    if cfg.is_encdec:
+        out_shapes["frames"] = jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        out_specs["frames"] = P(bspec, None, None)
+    return out_shapes, out_specs, shardable
+
+
+def _block_cache_spec(cfg: ModelConfig, kind: BlockKind, rules: AxisRules,
+                      bspec) -> object:
+    kv = rules.axis("kv_heads")
+    kv_seq = rules.axis("kv_seq")
+    if kv_seq is None and bspec is None:
+        # batch unshardable (e.g. long_500k batch=1): the data axes are idle
+        # — shard the cache's sequence dim over them instead (fixes the
+        # zamba2 long_500k 16.2 GiB marginal fit; §Perf)
+        kv_seq = rules.axis("batch")
+    ff = rules.axis("ff")
+    if kind in (BlockKind.ATTN, BlockKind.SHARED_ATTN):
+        if cfg.kv_cache_dtype == "int8":
+            return (P(bspec, kv_seq, kv, None), P(bspec, kv_seq, kv, None),
+                    P(bspec, kv_seq, kv), P(bspec, kv_seq, kv))
+        return (P(bspec, kv_seq, kv, None), P(bspec, kv_seq, kv, None))
+    if kind == BlockKind.MAMBA2:
+        d_in, nh, n = mamba_dims(cfg)
+        msize = 1
+        return {"h": P(bspec, ff, None, None),
+                "conv": P(bspec, None, None)}
+    if kind == BlockKind.MLSTM:
+        h = rules.axis("heads")
+        return {"C": P(bspec, h, None, None), "n": P(bspec, h, None),
+                "m": P(bspec, h)}
+    if kind == BlockKind.SLSTM:
+        return {"c": P(bspec), "n": P(bspec), "h": P(bspec),
+                "m": P(bspec)}
+    raise ValueError(kind)
+
+
+def _prepend(spec_tree, n_extra: int):
+    def fn(p):
+        return P(*([None] * n_extra + list(p)))
+    return jax.tree_util.tree_map(fn, spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cfg: ModelConfig, rules: AxisRules, batch_shardable: bool):
+    """PartitionSpec tree matching models.init_caches structure."""
+    bspec = rules.axis("batch") if batch_shardable else None
+    out = []
+    for g in grouped_layout(cfg):
+        if g[0] == "scan":
+            _, kind, count = g
+            out.append(_prepend(_block_cache_spec(cfg, kind, rules, bspec),
+                                1))
+        else:
+            _, inner, n_rep = g
+            gc = {}
+            for j, (kind, count) in enumerate(inner):
+                gc[f"seg{j}"] = _prepend(
+                    _block_cache_spec(cfg, kind, rules, bspec), 2)
+            out.append(gc)
+    return out
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_seq))
+
+
+def named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda p: NamedSharding(mesh, p), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def mamba_nh_shardable(cfg: ModelConfig, rules: AxisRules) -> bool:
+    return rules.axis("ff") is not None

@@ -1,0 +1,10 @@
+from .config import BlockKind, ModelConfig
+from .lm import (grouped_layout, init_caches, init_lm, lm_decode,
+                 lm_forward, lm_loss, lm_prefill)
+from .encdec import (encdec_decode, encdec_forward, encdec_init_caches,
+                     encdec_loss, encode, init_encdec)
+
+__all__ = ["BlockKind", "ModelConfig", "grouped_layout", "init_caches",
+           "init_lm", "lm_decode", "lm_forward", "lm_loss", "lm_prefill",
+           "encdec_decode", "encdec_forward", "encdec_init_caches",
+           "encdec_loss", "encode", "init_encdec"]

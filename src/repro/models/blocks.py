@@ -1,0 +1,238 @@
+"""Block assembly + layer layout: one residual block per layer kind, and the
+segment machinery that stacks homogeneous layer runs for jax.lax.scan (keeps
+the HLO compact — essential for 81-layer models on a 512-way mesh).
+
+Layouts:
+  dense/moe/vlm/audio : [ATTN x n_layers]                        (one scan)
+  ssm (xLSTM)         : [(MLSTM x (k-1), SLSTM) x n_rep]         (outer scan)
+  hybrid (zamba2)     : [(MAMBA2 x k, SHARED_ATTN) x n_rep, MAMBA2 x tail]
+                        — SHARED_ATTN reuses ONE param set at every
+                        application (the zamba2 weight-sharing trick), but
+                        each application carries its own KV cache.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import BlockKind, ModelConfig
+from .layers import (Params, attention, attention_decode, attention_prefill,
+                     init_attention, init_mlp, init_rmsnorm, mlp, rmsnorm)
+from .mamba2 import (init_mamba2, mamba2_block, mamba2_decode,
+                     mamba2_init_state)
+from .moe import init_moe, moe_mlp
+from .xlstm import (init_mlstm, init_slstm, mlstm_block, mlstm_decode,
+                    mlstm_init_state, slstm_block, slstm_decode,
+                    slstm_init_state)
+
+
+# ---------------------------------------------------------------------------
+# single blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ModelConfig, kind: BlockKind) -> Params:
+    ks = jax.random.split(rng, 4)
+    if kind in (BlockKind.ATTN, BlockKind.SHARED_ATTN):
+        p = {"ln1": init_rmsnorm(cfg.d_model, None),
+             "attn": init_attention(ks[0], cfg),
+             "ln2": init_rmsnorm(cfg.d_model, None)}
+        if cfg.moe and kind == BlockKind.ATTN:
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg)
+        return p
+    if kind == BlockKind.MAMBA2:
+        return {"ln1": init_rmsnorm(cfg.d_model, None),
+                "mamba": init_mamba2(ks[0], cfg)}
+    if kind == BlockKind.MLSTM:
+        return {"ln1": init_rmsnorm(cfg.d_model, None),
+                "mlstm": init_mlstm(ks[0], cfg)}
+    if kind == BlockKind.SLSTM:
+        return {"ln1": init_rmsnorm(cfg.d_model, None),
+                "slstm": init_slstm(ks[0], cfg)}
+    raise ValueError(kind)
+
+
+def _name(x, tag: str):
+    """checkpoint_name hook: the 'block_out' activations are what the
+    selective remat policy saves — they sit just AFTER each block's tensor-
+    parallel all-reduce, so the backward recompute pass never re-issues
+    those collectives (§Perf hillclimb #1, iteration 3)."""
+    from jax.ad_checkpoint import checkpoint_name
+    return checkpoint_name(x, tag)
+
+
+def block_train(p: Params, x, cfg: ModelConfig, kind: BlockKind):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (BlockKind.ATTN, BlockKind.SHARED_ATTN):
+        x = x + _name(attention(p["attn"],
+                                rmsnorm(p["ln1"], x, cfg.norm_eps), cfg),
+                      "block_out")
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            out, aux = moe_mlp(p["moe"], h, cfg)
+        else:
+            out = mlp(p["mlp"], h)
+        return x + _name(out, "block_out"), aux
+    if kind == BlockKind.MAMBA2:
+        return x + _name(
+            mamba2_block(p["mamba"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                         cfg), "block_out"), aux
+    if kind == BlockKind.MLSTM:
+        return x + mlstm_block(p["mlstm"],
+                               rmsnorm(p["ln1"], x, cfg.norm_eps), cfg), aux
+    if kind == BlockKind.SLSTM:
+        return x + slstm_block(p["slstm"],
+                               rmsnorm(p["ln1"], x, cfg.norm_eps), cfg), aux
+    raise ValueError(kind)
+
+
+def block_init_cache(cfg: ModelConfig, kind: BlockKind, batch: int,
+                     max_seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    if kind in (BlockKind.ATTN, BlockKind.SHARED_ATTN):
+        shape = (batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            sshape = (batch, max_seq, cfg.n_kv_heads)
+            return (jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8),
+                    jnp.zeros(sshape, jnp.float16),
+                    jnp.zeros(sshape, jnp.float16))
+        return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+    if kind == BlockKind.MAMBA2:
+        return mamba2_init_state(cfg, batch)
+    if kind == BlockKind.MLSTM:
+        return mlstm_init_state(cfg, batch)
+    if kind == BlockKind.SLSTM:
+        return slstm_init_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_prefill(p: Params, x, cfg: ModelConfig, kind: BlockKind,
+                  max_seq: int):
+    """Returns (x, cache) — cache padded to max_seq for attention kinds."""
+    if kind in (BlockKind.ATTN, BlockKind.SHARED_ATTN):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        out, (k, v) = attention_prefill(p["attn"], h, cfg)
+        x = x + out
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            out2, _ = moe_mlp(p["moe"], h2, cfg)
+        else:
+            out2 = mlp(p["mlp"], h2)
+        b, s = x.shape[0], k.shape[1]
+        pad = max_seq - s
+        if cfg.kv_cache_dtype == "int8":
+            from .layers import _quantize_kv
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            pad3 = ((0, 0), (0, pad), (0, 0))
+            return x + out2, (jnp.pad(kq, pad4), jnp.pad(vq, pad4),
+                              jnp.pad(ks, pad3), jnp.pad(vs, pad3))
+        kc = jnp.pad(k.astype(jnp.dtype(cfg.dtype)),
+                     ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(jnp.dtype(cfg.dtype)),
+                     ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x + out2, (kc, vc)
+    # Recurrent kinds: output from the parallel form; the decode-entry state
+    # is rebuilt with a sequential replay scan.  (A production TPU prefill
+    # would carry the chunk-final state out of _ssd_chunked instead; the
+    # replay keeps this reference implementation simple and exact.)
+    if kind == BlockKind.MAMBA2:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y = mamba2_block(p["mamba"], h, cfg)
+        state, _ = jax.lax.scan(
+            lambda st, xt: (mamba2_decode(p["mamba"], xt[:, None], cfg,
+                                          st)[1], None),
+            mamba2_init_state(cfg, x.shape[0]), h.swapaxes(0, 1))
+        return x + y, state
+    if kind == BlockKind.MLSTM:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y = mlstm_block(p["mlstm"], h, cfg)
+        state, _ = jax.lax.scan(
+            lambda st, xt: (mlstm_decode(p["mlstm"], xt[:, None], cfg,
+                                         st)[1], None),
+            mlstm_init_state(cfg, x.shape[0]), h.swapaxes(0, 1))
+        return x + y, state
+    if kind == BlockKind.SLSTM:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y = slstm_block(p["slstm"], h, cfg)
+        state, _ = jax.lax.scan(
+            lambda st, xt: (slstm_decode(p["slstm"], xt[:, None], cfg,
+                                         st)[1], None),
+            slstm_init_state(cfg, x.shape[0]), h.swapaxes(0, 1))
+        return x + y, state
+    raise ValueError(kind)
+
+
+def block_decode(p: Params, x, cfg: ModelConfig, kind: BlockKind, cache,
+                 cache_len):
+    """One token; returns (x, cache)."""
+    if kind in (BlockKind.ATTN, BlockKind.SHARED_ATTN):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        out, cache = attention_decode(p["attn"], h, cfg, cache, cache_len)
+        x = x + out
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if "moe" in p:
+            out2, _ = moe_mlp(p["moe"], h2, cfg)
+        else:
+            out2 = mlp(p["mlp"], h2)
+        return x + out2, cache
+    if kind == BlockKind.MAMBA2:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = mamba2_decode(p["mamba"], h, cfg, cache)
+        return x + y, cache
+    if kind == BlockKind.MLSTM:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = mlstm_decode(p["mlstm"], h, cfg, cache)
+        return x + y, cache
+    if kind == BlockKind.SLSTM:
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, cache = slstm_decode(p["slstm"], h, cfg, cache)
+        return x + y, cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# layer layout
+# ---------------------------------------------------------------------------
+
+
+def layout(cfg: ModelConfig) -> list[tuple[BlockKind, int]]:
+    """Flat (kind, count) segment list describing the layer stack.
+
+    Segments with count > 1 are scan-stacked; the hybrid/xLSTM repeating
+    units are expressed by repeating segments (the apply code groups equal
+    consecutive patterns into an outer scan where possible)."""
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return [(BlockKind.ATTN, cfg.n_layers)]
+    if cfg.family == "ssm":
+        k = cfg.slstm_every
+        if not k:
+            return [(BlockKind.MLSTM, cfg.n_layers)]
+        segs: list[tuple[BlockKind, int]] = []
+        n_rep = cfg.n_layers // k
+        for _ in range(n_rep):
+            segs.append((BlockKind.MLSTM, k - 1))
+            segs.append((BlockKind.SLSTM, 1))
+        tail = cfg.n_layers - n_rep * k
+        if tail:
+            segs.append((BlockKind.MLSTM, tail))
+        return segs
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        segs = []
+        n_rep = cfg.n_layers // k
+        for _ in range(n_rep):
+            segs.append((BlockKind.MAMBA2, k))
+            segs.append((BlockKind.SHARED_ATTN, 1))
+        tail = cfg.n_layers - n_rep * k
+        if tail:
+            segs.append((BlockKind.MAMBA2, tail))
+        return segs
+    raise ValueError(cfg.family)

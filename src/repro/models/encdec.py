@@ -1,0 +1,141 @@
+"""Encoder-decoder model (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (batch, frames, d_model) supplied by
+input_specs(); the decoder is a standard causal transformer with
+cross-attention into the encoder memory.  Training = teacher-forced
+cross-entropy; decode shapes lower the DECODER step with the encoder memory
+as an input.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, attention_cross, attention_decode,
+                     attention_prefill, embed, init_attention, init_embed,
+                     init_mlp, init_rmsnorm, mlp, rmsnorm, unembed)
+
+
+def _init_enc_layer(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    return {"ln1": init_rmsnorm(cfg.d_model, None),
+            "attn": init_attention(ks[0], cfg),
+            "ln2": init_rmsnorm(cfg.d_model, None),
+            "mlp": init_mlp(ks[1], cfg)}
+
+
+def _init_dec_layer(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {"ln1": init_rmsnorm(cfg.d_model, None),
+            "attn": init_attention(ks[0], cfg),
+            "lnx": init_rmsnorm(cfg.d_model, None),
+            "xattn": init_attention(ks[1], cfg),
+            "ln2": init_rmsnorm(cfg.d_model, None),
+            "mlp": init_mlp(ks[2], cfg)}
+
+
+def init_encdec(rng, cfg: ModelConfig) -> dict[str, Any]:
+    ks = jax.random.split(rng, 4)
+    enc = jax.vmap(lambda r: _init_enc_layer(r, cfg))(
+        jax.random.split(ks[0], cfg.encoder_layers))
+    dec = jax.vmap(lambda r: _init_dec_layer(r, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {"embed": init_embed(ks[2], cfg),
+            "enc": enc, "dec": dec,
+            "enc_norm": init_rmsnorm(cfg.d_model, None),
+            "final_norm": init_rmsnorm(cfg.d_model, None)}
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig,
+           remat: bool = True) -> jnp.ndarray:
+    """frames: (b, s, d) precomputed frame embeddings (frontend stub)."""
+    x = frames
+
+    def body(h, p):
+        h = h + attention(p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps),
+                          cfg, causal=False)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_block(p, h, memory, cfg):
+    h = h + attention(p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg)
+    h = h + attention_cross(p["xattn"], rmsnorm(p["lnx"], h, cfg.norm_eps),
+                            memory, cfg)
+    h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h
+
+
+def encdec_forward(params, frames: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: ModelConfig, remat: bool = True) -> jnp.ndarray:
+    memory = encode(params, frames, cfg, remat)
+    x = embed(params["embed"], tokens)
+
+    def body(h, p):
+        return _dec_block(p, h, memory, cfg), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x)
+
+
+def encdec_prefill(params, frames: jnp.ndarray, tokens: jnp.ndarray,
+                   cfg: ModelConfig) -> jnp.ndarray:
+    """Prompt processing for serving: unembed ONLY the last position
+    (full-seq logits are a training artifact; at 32k x 256k vocab they
+    would dominate memory)."""
+    memory = encode(params, frames, cfg, remat=False)
+    x = embed(params["embed"], tokens)
+
+    def body(h, p):
+        return _dec_block(p, h, memory, cfg), None
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return unembed(params["embed"], x)
+
+
+def encdec_loss(params, frames, tokens, cfg: ModelConfig):
+    logits = encdec_forward(params, frames, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    return loss, {"loss": loss}
+
+
+def encdec_init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return (jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+def encdec_decode(params, token: jnp.ndarray, memory: jnp.ndarray, caches,
+                  cache_len: jnp.ndarray, cfg: ModelConfig):
+    """One decoder step against encoder memory + self-attention cache."""
+    x = embed(params["embed"], token)
+
+    def body(h, pc):
+        p, k, v = pc
+        out, (k2, v2) = attention_decode(
+            p["attn"], rmsnorm(p["ln1"], h, cfg.norm_eps), cfg, (k, v),
+            cache_len)
+        h = h + out
+        h = h + attention_cross(p["xattn"],
+                                rmsnorm(p["lnx"], h, cfg.norm_eps),
+                                memory, cfg)
+        h = h + mlp(p["mlp"], rmsnorm(p["ln2"], h, cfg.norm_eps))
+        return h, (k2, v2)
+
+    x, (k2, v2) = jax.lax.scan(body, x, (params["dec"],) + caches)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), (k2, v2)

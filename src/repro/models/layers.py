@@ -1,0 +1,345 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (train / prefill /
+decode-with-cache), SwiGLU MLP.  Functional style: params are plain dicts;
+init_* return param trees; apply functions are jit/scan-friendly.
+
+Activation sharding constraints use the logical axes of
+distributed/sharding.py so the same model code runs under any rule set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def _init(rng, shape, scale: float, dtype) -> jnp.ndarray:
+    return (jax.random.normal(rng, shape, dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional qkv bias)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 4)
+    s = d ** -0.5
+    p = {
+        "wq": _init(ks[0], (d, nh * hd), s, dt),
+        "wk": _init(ks[1], (d, nkv * hd), s, dt),
+        "wv": _init(ks[2], (d, nkv * hd), s, dt),
+        "wo": _init(ks[3], (nh * hd, d), (nh * hd) ** -0.5, dt),
+    }
+    if cfg.qkv_bias:
+        p["q_bias"] = jnp.zeros((nh * hd,), dt)
+        p["k_bias"] = jnp.zeros((nkv * hd,), dt)
+        p["v_bias"] = jnp.zeros((nkv * hd,), dt)
+    return p
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg, positions) -> tuple:
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["q_bias"]
+        k = k + p["k_bias"]
+        v = v + p["v_bias"]
+    q = shard(q.reshape(b, s, nh, hd), "batch", "seq", "heads", None)
+    k = shard(k.reshape(b, s, nkv, hd), "batch", "seq", "kv_heads", None)
+    v = shard(v.reshape(b, s, nkv, hd), "batch", "seq", "kv_heads", None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+CHUNKED_SDPA_THRESHOLD = 8192   # use flash-style blocking above this seq
+SDPA_Q_BLOCK = 512
+SDPA_KV_BLOCK = 1024
+
+
+def _sdpa_chunked(q, k, v, cfg, causal_offset: int | None,
+                  q_block: int = SDPA_Q_BLOCK,
+                  kv_block: int = SDPA_KV_BLOCK) -> jnp.ndarray:
+    """Flash-style online-softmax attention: never materializes (sq, skv).
+
+    Memory per step: one (b, nkv, group, q_block, kv_block) tile — the jnp
+    analogue of the VMEM tiling a fused TPU kernel would use."""
+    b, sq0, nh, hd = q.shape
+    skv0, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    qpad = (-sq0) % q_block
+    kpad = (-skv0) % kv_block
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    sq, skv = sq0 + qpad, skv0 + kpad
+    scale = hd ** -0.5
+    nq, nk = sq // q_block, skv // kv_block
+    qb = q.reshape(b, nq, q_block, nkv, group, hd).astype(jnp.float32)
+    kb = k.reshape(b, nk, kv_block, nkv, hd).astype(jnp.float32)
+    vb = v.reshape(b, nk, kv_block, nkv, hd).astype(jnp.float32)
+
+    def q_step(_, iq):
+        qi = qb[:, iq] * scale                      # (b, qb, nkv, g, hd)
+        m0 = jnp.full((b, nkv, group, q_block), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, nkv, group, q_block), jnp.float32)
+        a0 = jnp.zeros((b, nkv, group, q_block, hd), jnp.float32)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qi, kb[:, ik])
+            cols = ik * kv_block + jnp.arange(kv_block)[None, :]
+            if causal_offset is not None:
+                rows = iq * q_block + jnp.arange(q_block)[:, None] \
+                    + causal_offset
+                keep = (cols <= rows) & (cols < skv0)
+            else:
+                keep = jnp.broadcast_to(cols < skv0, (q_block, kv_block))
+            s = jnp.where(keep[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb[:, ik])
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)    # (b, qb, nkv, g, hd)
+
+    _, blocks = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # blocks: (nq, b, q_block, nkv, group, hd)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, nh * hd)
+    return out[:, :sq0].astype(q.dtype)
+
+
+def _sdpa(q, k, v, cfg, causal_offset: int | None) -> jnp.ndarray:
+    """q: (b, sq, nh, hd); k/v: (b, skv, nkv, hd).  causal_offset = skv - sq
+    for causal masking; None = no mask (full)."""
+    b, sq, nh, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    if sq >= CHUNKED_SDPA_THRESHOLD:
+        return _sdpa_chunked(q, k, v, cfg, causal_offset)
+    group = nh // nkv
+    qg = q.reshape(b, sq, nkv, group, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = shard(scores, "batch", "kv_heads", None, "scores_q", None)
+    if causal_offset is not None:
+        iq = jnp.arange(sq)[:, None] + causal_offset
+        ik = jnp.arange(skv)[None, :]
+        mask = ik <= iq
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, nh * hd).astype(q.dtype)
+
+
+def attention(p: Params, x: jnp.ndarray, cfg,
+              positions: jnp.ndarray | None = None,
+              causal: bool = True) -> jnp.ndarray:
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _sdpa(q, k, v, cfg, 0 if causal else None)
+    out = out @ p["wo"]
+    return shard(out, "batch", "seq", None)
+
+
+def attention_prefill(p: Params, x: jnp.ndarray, cfg, positions=None):
+    """Returns (out, (k_cache, v_cache)) for subsequent decode."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = _sdpa(q, k, v, cfg, 0) @ p["wo"]
+    return shard(out, "batch", "seq", None), (k, v)
+
+
+def _quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(token, head) int8 quantization: x (b, s, h, d) ->
+    (q int8, scale f16 (b, s, h))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def attention_decode(p: Params, x: jnp.ndarray, cfg, cache, cache_len):
+    """One new token against a (padded) KV cache.
+
+    x: (b, 1, d); cache: (k, v) each (b, max_seq, nkv, hd) — or, with
+    cfg.kv_cache_dtype == 'int8', (k_q, v_q, k_scale, v_scale) with int8
+    payloads and per-(token, head) f16 scales (halves the decode HBM
+    traffic; §Perf hillclimb #2).  cache_len (b,) valid entries.
+    Returns (out, updated cache)."""
+    b = x.shape[0]
+    quant = len(cache) == 4
+    positions = cache_len[:, None]
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = nh // nkv
+    if quant:
+        k_cache, v_cache, k_sc, v_sc = cache
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        idx4 = cache_len[:, None, None, None]
+        idx3 = cache_len[:, None, None]
+        oh4 = (jnp.arange(k_cache.shape[1])[None, :, None, None] == idx4)
+        oh3 = (jnp.arange(k_cache.shape[1])[None, :, None] == idx3)
+        k_cache = jnp.where(oh4, kq, k_cache)
+        v_cache = jnp.where(oh4, vq, v_cache)
+        k_sc = jnp.where(oh3, ks, k_sc)
+        v_sc = jnp.where(oh3, vs, v_sc)
+        k_eff = (k_cache.astype(jnp.float32)
+                 * k_sc.astype(jnp.float32)[..., None])
+        v_eff = (v_cache.astype(jnp.float32)
+                 * v_sc.astype(jnp.float32)[..., None])
+        new_cache = (k_cache, v_cache, k_sc, v_sc)
+    else:
+        k_cache, v_cache = cache
+        idx = cache_len[:, None, None, None]
+        onehot = (jnp.arange(k_cache.shape[1])[None, :, None, None] == idx)
+        k_cache = jnp.where(onehot, k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(onehot, v_new.astype(v_cache.dtype), v_cache)
+        k_eff = k_cache.astype(jnp.float32)
+        v_eff = v_cache.astype(jnp.float32)
+        new_cache = (k_cache, v_cache)
+    skv = k_cache.shape[1]
+    qg = q.reshape(b, 1, nkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k_eff) * hd ** -0.5
+    valid = (jnp.arange(skv)[None, :] <= cache_len[:, None])
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v_eff)
+    out = out.reshape(b, 1, nh * hd).astype(x.dtype) @ p["wo"]
+    return out, new_cache
+
+
+def attention_cross(p: Params, x: jnp.ndarray, memory: jnp.ndarray, cfg):
+    """Cross-attention (decoder -> encoder memory), no mask, no rope."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    k = (memory @ p["wk"]).reshape(b, sm, nkv, hd)
+    v = (memory @ p["wv"]).reshape(b, sm, nkv, hd)
+    out = _sdpa(q, k, v, cfg, None) @ p["wo"]
+    return shard(out, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg, d_ff: int | None = None) -> Params:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": _init(ks[0], (d, f), d ** -0.5, dt),
+        "w_up": _init(ks[1], (d, f), d ** -0.5, dt),
+        "w_down": _init(ks[2], (f, d), f ** -0.5, dt),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = shard(x @ p["w_gate"], "batch", "seq", "ff")
+    u = shard(x @ p["w_up"], "batch", "seq", "ff")
+    return shard((jax.nn.silu(g) * u) @ p["w_down"], "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embed(rng, cfg) -> Params:
+    dt = _dtype(cfg)
+    p = {"embed": _init(rng, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init(jax.random.fold_in(rng, 1),
+                             (cfg.d_model, cfg.vocab_size),
+                             cfg.d_model ** -0.5, dt)
+    return p
+
+
+def embed(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return shard(jnp.take(p["embed"], tokens, axis=0),
+                 "batch", "seq", None)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "lm_head" in p:
+        logits = x @ p["lm_head"]
+    else:
+        logits = x @ p["embed"].T
+    return shard(logits.astype(jnp.float32), "batch", "seq", "vocab")

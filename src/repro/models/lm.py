@@ -1,0 +1,292 @@
+"""Unified causal LM: init / train forward / prefill / decode for every
+assigned decoder-only architecture (dense, MoE, Mamba2-hybrid, xLSTM, VLM
+backbone).  Layer stacks are scan-grouped (blocks.grouped layouts) so the
+lowered HLO stays compact on 512-device meshes; per-layer remat is applied
+in train mode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (block_decode, block_init_cache, block_prefill,
+                     block_train, init_block, layout)
+from .config import BlockKind, ModelConfig
+from .layers import embed, init_embed, init_rmsnorm, rmsnorm, unembed
+
+Group = tuple  # ("scan", kind, count) | ("rep", ((kind, count), ...), n_rep)
+
+
+def grouped_layout(cfg: ModelConfig) -> list[Group]:
+    segs = layout(cfg)
+    if cfg.family == "ssm" and cfg.slstm_every:
+        k = cfg.slstm_every
+        n_rep = cfg.n_layers // k
+        groups: list[Group] = [("rep",
+                               ((BlockKind.MLSTM, k - 1),
+                                (BlockKind.SLSTM, 1)), n_rep)]
+        tail = cfg.n_layers - n_rep * k
+        if tail:
+            groups.append(("scan", BlockKind.MLSTM, tail))
+        return groups
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        n_rep = cfg.n_layers // k
+        groups = [("rep", ((BlockKind.MAMBA2, k),
+                           (BlockKind.SHARED_ATTN, 1)), n_rep)]
+        tail = cfg.n_layers - n_rep * k
+        if tail:
+            groups.append(("scan", BlockKind.MAMBA2, tail))
+        return groups
+    return [("scan", k, c) for k, c in segs]
+
+
+def _stack_init(rng, cfg, kind: BlockKind, shape: tuple[int, ...]):
+    """Init a (prod(shape),)-stacked block param tree with leading dims."""
+    n = 1
+    for s in shape:
+        n *= s
+    rngs = jax.random.split(rng, n)
+    stacked = jax.vmap(lambda r: init_block(r, cfg, kind))(rngs)
+    if len(shape) > 1:
+        stacked = jax.tree_util.tree_map(
+            lambda x: x.reshape(shape + x.shape[1:]), stacked)
+    return stacked
+
+
+def init_lm(rng, cfg: ModelConfig) -> dict[str, Any]:
+    ks = jax.random.split(rng, 8)
+    params: dict[str, Any] = {
+        "embed": init_embed(ks[0], cfg),
+        "final_norm": init_rmsnorm(cfg.d_model, None),
+        "groups": [],
+    }
+    for i, g in enumerate(grouped_layout(cfg)):
+        kg = jax.random.fold_in(ks[1], i)
+        if g[0] == "scan":
+            _, kind, count = g
+            params["groups"].append(_stack_init(kg, cfg, kind, (count,)))
+        else:
+            _, inner, n_rep = g
+            gp = {}
+            for j, (kind, count) in enumerate(inner):
+                if kind == BlockKind.SHARED_ATTN:
+                    continue  # single shared set at top level
+                gp[f"seg{j}"] = _stack_init(jax.random.fold_in(kg, j), cfg,
+                                            kind, (n_rep, count))
+            params["groups"].append(gp)
+    if cfg.shared_attn_every:
+        params["shared_attn"] = init_block(ks[2], cfg,
+                                           BlockKind.SHARED_ATTN)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+
+REMAT_POLICIES = ("full", "dots", "block_outs")
+
+_ACTIVE_REMAT_POLICY = ["full"]
+
+
+def set_remat_policy(name: str) -> None:
+    assert name in REMAT_POLICIES, name
+    _ACTIVE_REMAT_POLICY[0] = name
+
+
+def _checkpoint(fn):
+    name = _ACTIVE_REMAT_POLICY[0]
+    if name == "dots":
+        # save every matmul output: no recompute flops/collectives but
+        # O(all intermediates) memory — measured infeasible at 4k seq
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_saveable)
+    if name == "block_outs":
+        # save ONLY the post-all-reduce block outputs (see blocks._name):
+        # one (b, s, d) tensor per block — the recompute pass re-derives
+        # everything else locally, re-issuing NO tensor-parallel collectives
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names(
+                "block_out"))
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _scan_train(stack_params, x, cfg, kind, remat: bool):
+    def body(carry, p):
+        h, aux = carry
+        h2, a = block_train(p, h, cfg, kind)
+        return (h2, aux + a), None
+    if remat:
+        body = _checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stack_params)
+    return x, aux
+
+
+def lm_forward(params, tokens: jnp.ndarray, cfg: ModelConfig,
+               remat: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (b, s) -> (logits (b, s, v) f32, aux loss)."""
+    x = embed(params["embed"], tokens)
+    aux = jnp.zeros((), jnp.float32)
+    for g, gp in zip(grouped_layout(cfg), params["groups"]):
+        if g[0] == "scan":
+            _, kind, count = g
+            x, a = _scan_train(gp, x, cfg, kind, remat)
+            aux = aux + a
+        else:
+            _, inner, n_rep = g
+            shared = params.get("shared_attn")
+
+            def rep_body(carry, rep_p):
+                h, acc = carry
+                for j, (kind, count) in enumerate(inner):
+                    if kind == BlockKind.SHARED_ATTN:
+                        fn = jax.checkpoint(
+                            functools.partial(block_train, cfg=cfg,
+                                              kind=kind),
+                            prevent_cse=False) if remat else \
+                            functools.partial(block_train, cfg=cfg,
+                                              kind=kind)
+                        h, a = fn(shared, h)
+                        acc = acc + a
+                    else:
+                        h, a = _scan_train(rep_p[f"seg{j}"], h, cfg, kind,
+                                           remat)
+                        acc = acc + a
+                return (h, acc), None
+
+            (x, aux), _ = jax.lax.scan(rep_body, (x, aux), gp)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), aux
+
+
+def lm_loss(params, tokens: jnp.ndarray, cfg: ModelConfig,
+            aux_weight: float = 0.01) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross entropy over tokens (b, s)."""
+    logits, aux = lm_forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    caches = []
+    for g in grouped_layout(cfg):
+        if g[0] == "scan":
+            _, kind, count = g
+            one = block_init_cache(cfg, kind, batch, max_seq)
+            caches.append(jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (count,) + x.shape), one))
+        else:
+            _, inner, n_rep = g
+            gc = {}
+            for j, (kind, count) in enumerate(inner):
+                one = block_init_cache(cfg, kind, batch, max_seq)
+                gc[f"seg{j}"] = jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x, (n_rep, count) + x.shape),
+                    one)
+            caches.append(gc)
+    return caches
+
+
+def lm_prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_seq: int):
+    """Prefill a prompt; returns (last-token logits, caches)."""
+    x = embed(params["embed"], tokens)
+    caches = []
+    for g, gp in zip(grouped_layout(cfg), params["groups"]):
+        if g[0] == "scan":
+            _, kind, count = g
+
+            def body(h, p):
+                h2, c = block_prefill(p, h, cfg, kind, max_seq)
+                return h2, c
+            x, cache = jax.lax.scan(body, x, gp)
+            caches.append(cache)
+        else:
+            _, inner, n_rep = g
+            shared = params.get("shared_attn")
+
+            def rep_body(h, rep_p):
+                cs = {}
+                for j, (kind, count) in enumerate(inner):
+                    if kind == BlockKind.SHARED_ATTN:
+                        h, c = block_prefill(shared, h, cfg, kind, max_seq)
+                        cs[f"seg{j}"] = jax.tree_util.tree_map(
+                            lambda y: y[None], c)
+                    else:
+                        def inner_body(hh, p):
+                            hh2, c2 = block_prefill(p, hh, cfg, kind,
+                                                    max_seq)
+                            return hh2, c2
+                        h, c = jax.lax.scan(inner_body, h, rep_p[f"seg{j}"])
+                        cs[f"seg{j}"] = c
+                return h, cs
+            x, cache = jax.lax.scan(rep_body, x, gp)
+            caches.append(cache)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x[:, -1:])
+    return logits, caches
+
+
+def lm_decode(params, token: jnp.ndarray, caches, cache_len: jnp.ndarray,
+              cfg: ModelConfig):
+    """One decode step.  token (b, 1) ids; cache_len (b,) valid lengths.
+    Returns (logits (b, 1, v), new caches)."""
+    x = embed(params["embed"], token)
+    new_caches = []
+    for g, gp, cache in zip(grouped_layout(cfg), params["groups"], caches):
+        if g[0] == "scan":
+            _, kind, count = g
+
+            def body(h, pc):
+                p, c = pc
+                h2, c2 = block_decode(p, h, cfg, kind, c, cache_len)
+                return h2, c2
+            x, c2 = jax.lax.scan(body, x, (gp, cache))
+            new_caches.append(c2)
+        else:
+            _, inner, n_rep = g
+            shared = params.get("shared_attn")
+
+            def rep_body(h, pc):
+                rep_p, rep_c = pc
+                out_c = {}
+                for j, (kind, count) in enumerate(inner):
+                    cj = rep_c[f"seg{j}"]
+                    if kind == BlockKind.SHARED_ATTN:
+                        c1 = jax.tree_util.tree_map(lambda y: y[0], cj)
+                        h, c2 = block_decode(shared, h, cfg, kind, c1,
+                                             cache_len)
+                        out_c[f"seg{j}"] = jax.tree_util.tree_map(
+                            lambda y: y[None], c2)
+                    else:
+                        def inner_body(hh, pc2):
+                            p, c = pc2
+                            hh2, c2 = block_decode(p, hh, cfg, kind, c,
+                                                   cache_len)
+                            return hh2, c2
+                        h, c2 = jax.lax.scan(inner_body, h,
+                                             (rep_p[f"seg{j}"], cj))
+                        out_c[f"seg{j}"] = c2
+                return h, out_c
+            x, c2 = jax.lax.scan(rep_body, x, (gp, cache))
+            new_caches.append(c2)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return unembed(params["embed"], x), new_caches

@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) block: chunked state-space duality for training/prefill and
+O(1)-state recurrence for decode.  Single B/C group, scalar-per-head A —
+the Mamba2 paper's default ([arXiv:2405.21060])."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import Params, _dtype, _init
+
+CONV_K = 4
+
+
+def dims(cfg) -> tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def init_mamba2(rng, cfg) -> Params:
+    d = cfg.d_model
+    d_in, nh, n = dims(cfg)
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 6)
+    conv_ch = d_in + 2 * n
+    return {
+        # z (gate) + x + B + C + dt heads
+        "in_proj": _init(ks[0], (d, 2 * d_in + 2 * n + nh), d ** -0.5, dt),
+        "conv_w": _init(ks[1], (CONV_K, conv_ch), 0.5, dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_proj": _init(ks[2], (d_in, d), d_in ** -0.5, dt),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_in, nh, n = dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:2 * d_in + 2 * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc, conv_state=None):
+    """Depthwise causal conv (k=4).  xbc: (b, s, ch).  If conv_state (b,
+    k-1, ch) given (decode), uses and returns the rolled state."""
+    if conv_state is not None:
+        window = jnp.concatenate([conv_state, xbc], axis=1)  # (b, k, ch)
+        out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        return jax.nn.silu(out)[:, None], window[:, 1:]
+    b, s, ch = xbc.shape
+    pad = jnp.zeros((b, CONV_K - 1, ch), xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + s] * p["conv_w"][i] for i in range(CONV_K))
+    return jax.nn.silu(out + p["conv_b"]), None
+
+
+def _ssd_chunked(x, dtv, B, C, a_log, chunk: int):
+    """SSD scan. x: (b, s, nh, P); dtv: (b, s, nh); B, C: (b, s, N).
+    Returns y (b, s, nh, P)."""
+    b, s, nh, P = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    nc = s // Q
+    A = -jnp.exp(a_log)                                  # (nh,) negative
+    xc = x.reshape(b, nc, Q, nh, P).astype(jnp.float32)
+    dtc = dtv.reshape(b, nc, Q, nh)
+    Bc = B.reshape(b, nc, Q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, Q, n).astype(jnp.float32)
+    loga = dtc * A                                        # (b, nc, Q, nh)
+    cum = jnp.cumsum(loga, axis=2)
+
+    # intra-chunk (quadratic within chunks).  Mask BEFORE exp: exp(li-lj)
+    # overflows for masked upper-triangular entries (li > lj there) and
+    # where(mask, inf, 0) still propagates NaN through the backward pass.
+    li = cum[:, :, :, None, :]                            # i index
+    lj = cum[:, :, None, :, :]                            # j index
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    ldiff = jnp.where(mask[None, None, :, :, None], li - lj, -1e30)
+    L = jnp.exp(ldiff)                                    # (b,nc,Q,Q,nh)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)            # (b,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp",
+                         cb, L, dtc, xc)
+
+    # chunk state contributions
+    tail = cum[:, :, -1:, :] - cum                        # prod_{k>j} a_k
+    states = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn",
+                        jnp.exp(tail), dtc, xc, Bc)       # (b,nc,nh,P,N)
+    decay_chunk = jnp.exp(cum[:, :, -1, :])               # (b,nc,nh)
+
+    def scan_fn(h, inp):
+        st, dc = inp
+        h_new = h * dc[:, :, None, None] + st
+        return h_new, h
+
+    h0 = jnp.zeros((b, nh, P, n), jnp.float32)
+    _, h_in = jax.lax.scan(scan_fn, h0,
+                           (states.swapaxes(0, 1), decay_chunk.swapaxes(0, 1)))
+    h_in = h_in.swapaxes(0, 1)                            # (b,nc,nh,P,N)
+
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                         Cc, jnp.exp(cum), h_in)
+    y = (y_intra + y_inter).reshape(b, s, nh, P)
+    return y
+
+
+def mamba2_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Training/prefill path.  x: (b, s, d) -> (b, s, d)."""
+    b, s0, d = x.shape
+    pad = (-s0) % min(cfg.ssm_chunk, max(s0, 1))
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = x.shape[1]
+    d_in, nh, n = dims(cfg)
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc, _ = _causal_conv(p, xbc)
+    xs = xbc[..., :d_in].reshape(b, s, nh, cfg.ssm_head_dim)
+    B = xbc[..., d_in:d_in + n]
+    C = xbc[..., d_in + n:]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y = _ssd_chunked(xs, dtv, B, C, p["a_log"], cfg.ssm_chunk)
+    if pad:
+        y, xs, z, x = y[:, :s0], xs[:, :s0], z[:, :s0], x[:, :s0]
+        s = s0
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    # gated RMS-norm then out projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return shard(y @ p["out_proj"], "batch", "seq", None)
+
+
+def mamba2_init_state(cfg, batch: int):
+    d_in, nh, n = dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_ch), jnp.dtype(cfg.dtype)),
+    }
+
+
+def mamba2_decode(p: Params, x: jnp.ndarray, cfg, state):
+    """One-token recurrence.  x: (b, 1, d); state: {'h', 'conv'}."""
+    b = x.shape[0]
+    d_in, nh, n = dims(cfg)
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    conv_out, conv_state = _causal_conv(p, xbc, state["conv"])
+    xs = conv_out[:, 0, :d_in].reshape(b, nh, cfg.ssm_head_dim)
+    B = conv_out[:, 0, d_in:d_in + n].astype(jnp.float32)
+    C = conv_out[:, 0, d_in + n:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(dtv * -jnp.exp(p["a_log"]))               # (b, nh)
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dtv, xs.astype(jnp.float32), B)
+    y = jnp.einsum("bn,bhpn->bhp", C, h)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts MLP: top-k routing with capacity (GShard-style einsum
+dispatch at group granularity), optional shared experts (DeepSeekMoE).
+
+Experts are sharded over the 'experts' logical axis (EP on the model mesh
+axis).  Group size bounds the dispatch/combine tensor to
+(group, E, capacity), keeping memory modest while staying fully static for
+the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import Params, _dtype, _init, mlp
+
+
+def init_moe(rng, cfg) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": _init(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "experts_gate": _init(ks[1], (e, d, f), d ** -0.5, dt),
+        "experts_up": _init(ks[2], (e, d, f), d ** -0.5, dt),
+        "experts_down": _init(ks[3], (e, f, d), f ** -0.5, dt),
+    }
+    if cfg.n_shared_experts:
+        sub = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": _init(sub[0], (d, f * cfg.n_shared_experts),
+                            d ** -0.5, dt),
+            "w_up": _init(sub[1], (d, f * cfg.n_shared_experts),
+                          d ** -0.5, dt),
+            "w_down": _init(sub[2], (f * cfg.n_shared_experts, d),
+                            f ** -0.5, dt),
+        }
+    return p
+
+
+def moe_mlp(p: Params, x: jnp.ndarray, cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    # largest divisor of b*s not exceeding the configured group size
+    # (seq is often 4095 after the next-token shift, so don't assume 2^k)
+    g = min(cfg.router_group_size, b * s)
+    while (b * s) % g:
+        g -= 1
+    n_groups = (b * s) // g
+    cap = max(int(g * k * cfg.capacity_factor / e), 1)
+
+    xt = x.reshape(n_groups, g, d)
+    logits = (xt.astype(jnp.float32) @ p["router"])           # (G, g, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # top-k selection
+    topv, topi = jax.lax.top_k(probs, k)                       # (G, g, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+
+    # position of each (token, choice) in its expert's queue
+    sel = jax.nn.one_hot(topi, e, dtype=jnp.float32)           # (G, g, k, e)
+    flat = sel.reshape(n_groups, g * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, g, k, e)
+    pos = jnp.sum(pos * sel, axis=-1)                          # (G, g, k)
+    keep = pos < cap
+    weights = topv * keep                                      # dropped = 0
+
+    # dispatch/combine tensors: (G, g, e, cap)
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)       # (G, g, k, cap)
+    disp = jnp.einsum("Ggke,Ggkc->Ggec", sel, pos_oh * keep[..., None])
+    comb = jnp.einsum("Ggke,Ggkc,Ggk->Ggec", sel, pos_oh, weights)
+    disp = shard(disp, "batch", None, "experts", None)
+    comb = shard(comb, "batch", None, "experts", None)
+
+    xin = jnp.einsum("Ggd,Ggec->Gecd", xt.astype(jnp.float32), disp)
+    xin = shard(xin.astype(x.dtype), "batch", "experts", None, None)
+
+    gate = jnp.einsum("Gecd,edf->Gecf", xin, p["experts_gate"])
+    up = jnp.einsum("Gecd,edf->Gecf", xin, p["experts_up"])
+    act = shard(jax.nn.silu(gate) * up, "batch", "experts", None, None)
+    eout = jnp.einsum("Gecf,efd->Gecd", act, p["experts_down"])
+
+    out = jnp.einsum("Gecd,Ggec->Ggd", eout.astype(jnp.float32), comb)
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    if "shared" in p:
+        out = out + mlp(p["shared"], x)
+
+    # load-balancing aux loss (Switch): e * sum_e f_e * P_e
+    me = jnp.mean(sel.sum(axis=2).reshape(-1, e), axis=0)
+    pe = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux = e * jnp.sum(me * pe)
+    return shard(out, "batch", "seq", None), aux

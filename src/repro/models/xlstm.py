@@ -1,0 +1,257 @@
+"""xLSTM blocks ([arXiv:2405.04517]): mLSTM (matrix memory, parallel
+quadratic form for training, O(1) recurrence for decode) and sLSTM (scalar
+memory, sequential scan with exponential gating)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard
+from .layers import Params, _dtype, _init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg) -> Params:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "mq": _init(ks[0], (d, d), d ** -0.5, dt),
+        "mk": _init(ks[1], (d, d), d ** -0.5, dt),
+        "mv": _init(ks[2], (d, d), d ** -0.5, dt),
+        "w_i": _init(ks[3], (d, nh), d ** -0.5, jnp.float32),
+        "w_f": _init(ks[4], (d, nh), d ** -0.5, jnp.float32),
+        "f_bias": jnp.full((nh,), 3.0, jnp.float32),  # forget ~ 1 at init
+        "m_out": _init(ks[5], (d, d), d ** -0.5, dt),
+        "norm_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    q = shard((x @ p["mq"]).reshape(b, s, nh, hd), "batch", "seq", "heads",
+              None)
+    k = shard((x @ p["mk"]).reshape(b, s, nh, hd), "batch", "seq", "heads",
+              None)
+    v = shard((x @ p["mv"]).reshape(b, s, nh, hd), "batch", "seq", "heads",
+              None)
+    logi = (x.astype(jnp.float32) @ p["w_i"])                  # (b, s, nh)
+    logf = -jax.nn.softplus(-(x.astype(jnp.float32) @ p["w_f"]
+                              + p["f_bias"]))                  # log sigmoid
+    return q, k, v, logi, logf
+
+
+# Chunkwise form above this sequence length: at 4k the quadratic D-matrix
+# costs 8x the chunkwise form's flops (S/chunk = 4096/512), and mLSTM's
+# recurrence makes them mathematically equivalent — §Perf hillclimb #3
+# lowered this from 4096 (prefill-only) to cover train_4k too.
+MLSTM_CHUNK_THRESHOLD = 2048
+MLSTM_CHUNK = 512
+
+
+def mlstm_block_chunked(p: Params, x: jnp.ndarray, cfg,
+                        chunk: int = MLSTM_CHUNK) -> jnp.ndarray:
+    """Chunkwise-parallel mLSTM: O(s*chunk) memory instead of O(s^2).
+
+    Within-chunk quadratic D-matrix + inter-chunk (C, n, M) recurrent state
+    with running max-stabilizers (the xLSTM chunkwise formulation)."""
+    b, s0, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    pad = (-s0) % chunk
+    q, k, v, logi, logf = _mlstm_qkv(p, x, cfg)
+    if pad:
+        zl = jnp.zeros((b, pad, nh, hd), q.dtype)
+        q = jnp.concatenate([q, zl], axis=1)
+        k = jnp.concatenate([k, zl], axis=1)
+        v = jnp.concatenate([v, zl], axis=1)
+        logi = jnp.concatenate(
+            [logi, jnp.full((b, pad, nh), -1e30)], axis=1)
+        logf = jnp.concatenate(
+            [logf, jnp.zeros((b, pad, nh))], axis=1)
+    s = s0 + pad
+    nc = s // chunk
+    qc = (q.reshape(b, nc, chunk, nh, hd).astype(jnp.float32)
+          * hd ** -0.5)
+    kc = k.reshape(b, nc, chunk, nh, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, chunk, nh, hd).astype(jnp.float32)
+    lic = logi.reshape(b, nc, chunk, nh)
+    lfc = logf.reshape(b, nc, chunk, nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, inp):
+        C, n, M = carry                       # (b,nh,hd,hd),(b,nh,hd),(b,nh)
+        qi, ki, vi, li, lf = inp
+        g = jnp.cumsum(lf, axis=1)            # (b, Q, nh)
+        bmat = (g[:, :, None, :] - g[:, None, :, :]
+                + li[:, None, :, :])          # (b, i, j, nh)
+        bmat = jnp.where(tri[None, :, :, None], bmat, -1e30)
+        s_inter = g + M[:, None, :]           # (b, Q, nh)
+        m = jnp.maximum(jnp.max(bmat, axis=2), s_inter)   # (b, Q, nh)
+        dexp = jnp.exp(bmat - m[:, :, None, :])
+        scores = jnp.einsum("bihd,bjhd->bijh", qi, ki)
+        w = scores * dexp
+        inter_scale = jnp.exp(s_inter - m)                # (b, Q, nh)
+        num = (jnp.einsum("bijh,bjhd->bihd", w, vi)
+               + inter_scale[..., None]
+               * jnp.einsum("bihd,bhde->bihe", qi, C))
+        den_dot = (jnp.sum(w, axis=2)
+                   + inter_scale * jnp.einsum("bihd,bhd->bih", qi, n))
+        den = jnp.maximum(jnp.abs(den_dot), jnp.exp(-m))
+        y = num / den[..., None]
+        # state update
+        tot = g[:, -1]                                     # (b, nh)
+        decay_j = tot[:, None, :] - g + li                 # (b, Q, nh)
+        M_new = jnp.maximum(tot + M, jnp.max(decay_j, axis=1))
+        carry_scale = jnp.exp(tot + M - M_new)
+        wj = jnp.exp(decay_j - M_new[:, None, :])
+        C_new = (carry_scale[:, :, None, None] * C
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", wj, ki, vi))
+        n_new = (carry_scale[..., None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", wj, ki))
+        return (C_new, n_new, M_new), y
+
+    C0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, nh, hd), jnp.float32)
+    M0 = jnp.full((b, nh), -1e30, jnp.float32)
+    xs = (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+          lic.swapaxes(0, 1), lfc.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, (C0, n0, M0), xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, d)[:, :s0]
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return shard(y @ p["m_out"], "batch", "seq", None)
+
+
+def mlstm_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Parallel (stabilized) quadratic form; x: (b, s, d)."""
+    b, s, d = x.shape
+    if s >= MLSTM_CHUNK_THRESHOLD:
+        return mlstm_block_chunked(p, x, cfg)
+    nh = cfg.n_heads
+    hd = d // nh
+    q, k, v, logi, logf = _mlstm_qkv(p, x, cfg)
+    cumf = jnp.cumsum(logf, axis=1)                            # (b, s, nh)
+    # log D_ij = cumf_i - cumf_j + logi_j  (i >= j)
+    dmat = (cumf[:, :, None, :] - cumf[:, None, :, :]
+            + logi[:, None, :, :])                             # (b,si,sj,nh)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)                   # row stabilizer
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bihd,bjhd->bijh", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2, keepdims=True)),
+                       jnp.exp(-m))                            # (b,si,1,nh)
+    y = jnp.einsum("bijh,bjhd->bihd", w / norm, v.astype(jnp.float32))
+    y = y.reshape(b, s, d)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return shard(y @ p["m_out"], "batch", "seq", None)
+
+
+def mlstm_init_state(cfg, batch: int):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, cfg, state):
+    """One-token recurrence; x: (b, 1, d)."""
+    b, _, d = x.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    q, k, v, logi, logf = _mlstm_qkv(p, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]
+    logi, logf = logi[:, 0], logf[:, 0]                        # (b, nh)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    a = jnp.exp(logf + state["m"] - m_new)
+    bgt = jnp.exp(logi - m_new)
+    C = state["C"] * a[..., None, None] + bgt[..., None, None] * jnp.einsum(
+        "bhk,bhv->bhkv", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = state["n"] * a[..., None] + bgt[..., None] * k.astype(jnp.float32)
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, d)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return y @ p["m_out"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg) -> Params:
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    ks = jax.random.split(rng, 2)
+    return {
+        "w_x": _init(ks[0], (d, 4 * d), d ** -0.5, jnp.float32),
+        "w_h": _init(ks[1], (d, 4 * d), d ** -0.5, jnp.float32),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "norm_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30)}
+
+
+def _slstm_step(p, state, xt):
+    """xt: (b, d) f32; exponential-gated scalar LSTM cell."""
+    pre = xt @ p["w_x"] + state["h"] @ p["w_h"] + p["bias"]
+    d = xt.shape[-1]
+    zi, zf, zz, zo = jnp.split(pre, 4, axis=-1)
+    logi = zi
+    logf = -jax.nn.softplus(-zf)
+    m_new = jnp.maximum(logf + state["m"], logi)
+    a = jnp.exp(logf + state["m"] - m_new)
+    bgt = jnp.exp(logi - m_new)
+    c = state["c"] * a + bgt * jnp.tanh(zz)
+    n = state["n"] * a + bgt
+    h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_block(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Sequential scan over time; x: (b, s, d)."""
+    b, s, d = x.shape
+
+    def step(state, xt):
+        new = _slstm_step(p, state, xt)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, slstm_init_state(cfg, b),
+                         x.astype(jnp.float32).swapaxes(0, 1))
+    y = hs.swapaxes(0, 1)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return shard(y, "batch", "seq", None)
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, cfg, state):
+    new = _slstm_step(p, state, x[:, 0].astype(jnp.float32))
+    y = new["h"][:, None]
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return y, new

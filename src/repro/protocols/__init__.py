@@ -1,0 +1,1 @@
+"""SC protocol drivers for MAGE's engine: garbled circuits and CKKS."""

@@ -1,0 +1,6 @@
+from .cipher import CkksContext
+from .driver import Batch, CkksCostModel, CkksDriver, Plain
+from .params import CkksParams
+
+__all__ = ["Batch", "CkksContext", "CkksCostModel", "CkksDriver",
+           "CkksParams", "Plain"]

@@ -1,0 +1,282 @@
+"""CKKS cipher operations in RNS form (add / mul / relin / rescale).
+
+Secret-key RLWE over Z_q[X]/(X^N+1) with an RNS modulus chain and hybrid
+key-switching through one special prime P (GHS): relinearization noise stays
+~e instead of ~q*e.  Per-level evaluation keys are generated at context init
+(levels <= 2, so a handful of keys).
+
+Ciphertexts are COEFFICIENT-domain uint64 arrays shaped (ncomp, level+1, N):
+flat buffers — the representation the paper suggests SEAL could use to avoid
+its serialization overhead (§7.4); swapping them to storage is a plain byte
+copy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from .encoding import decode, encode
+from .ntt import ntt_forward, ntt_inverse
+from .params import CkksParams
+
+
+def _center(vals: np.ndarray, q: int) -> np.ndarray:
+    """[0,q) -> centered signed int64 in (-q/2, q/2]."""
+    v = vals.astype(np.int64)
+    return np.where(v > q // 2, v - q, v)
+
+
+def _reduce_signed(vals: np.ndarray, q: int) -> np.ndarray:
+    return np.mod(vals, q).astype(np.uint64)
+
+
+@dataclasses.dataclass
+class EvalKey:
+    """Per-digit key over extended basis primes[:level+1] + [P], NTT domain."""
+    b: np.ndarray  # (level+2, N)
+    a: np.ndarray  # (level+2, N)
+
+
+class CkksContext:
+    def __init__(self, params: CkksParams, seed: int = 0xCEC5):
+        self.p = params
+        rng = np.random.default_rng(seed)
+        n = params.n_ring
+        self.s_int = rng.integers(-1, 2, n).astype(np.int64)  # ternary
+        self._s_ntt: dict[int, np.ndarray] = {}
+        for q in params.primes + [params.special_prime]:
+            self._s_ntt[q] = ntt_forward(_reduce_signed(self.s_int, q), q)
+        self._rng = rng
+        self._evk: dict[int, list[EvalKey]] = {}
+        for lvl in range(1, params.levels + 1):
+            self._evk[lvl] = self._make_evk(lvl)
+
+    # -- helpers ------------------------------------------------------------------
+
+    def _sample_error(self, n: int) -> np.ndarray:
+        return np.round(self._rng.normal(0.0, self.p.noise_std, n)
+                        ).astype(np.int64)
+
+    def _sample_uniform_int(self, n: int) -> np.ndarray:
+        # one "integer" ring element, reduced per prime later (close enough
+        # to uniform mod Q for functional purposes)
+        return self._rng.integers(0, 1 << 62, n, dtype=np.int64)
+
+    def _s2_ntt(self, q: int) -> np.ndarray:
+        s = self._s_ntt[q]
+        return (s * s) % np.uint64(q)
+
+    def _make_evk(self, level: int) -> list[EvalKey]:
+        """Keys for relinearizing a level-`level` product."""
+        p = self.p
+        primes = p.level_primes(level)
+        basis = primes + [p.special_prime]
+        P = p.special_prime
+        Q = 1
+        for q in primes:
+            Q *= q
+        keys = []
+        for i, qi in enumerate(primes):
+            qhat = Q // qi
+            qtilde = qhat * pow(qhat, -1, qi)      # CRT interpolant for q_i
+            a_int = self._sample_uniform_int(p.n_ring)
+            e_int = self._sample_error(p.n_ring)
+            b = np.zeros((len(basis), p.n_ring), dtype=np.uint64)
+            a = np.zeros_like(b)
+            for j, qj in enumerate(basis):
+                aj = ntt_forward(_reduce_signed(a_int, qj), qj)
+                ej = ntt_forward(_reduce_signed(e_int, qj), qj)
+                term = (P % qj) * (qtilde % qj) % qj
+                bj = (np.uint64(qj) * np.uint64(2) + ej
+                      + np.uint64(term) * self._s2_ntt(qj)
+                      - (aj * self._s_ntt[qj]) % np.uint64(qj)
+                      ) % np.uint64(qj)
+                b[j] = bj
+                a[j] = aj
+            keys.append(EvalKey(b=b, a=a))
+        return keys
+
+    # -- encode / encrypt ------------------------------------------------------------
+
+    def encode(self, z: np.ndarray, level: int | None = None,
+               scale: float | None = None) -> np.ndarray:
+        """Real/complex slots -> plaintext poly over the FULL chain (so the
+        same encoded plaintext works at any level).  Shape (levels+1, N)."""
+        p = self.p
+        coeffs = encode(z, p.n_ring, scale or p.scale)
+        return np.stack([_reduce_signed(coeffs, q) for q in p.primes])
+
+    def encrypt(self, pt_full: np.ndarray) -> np.ndarray:
+        """Plaintext poly (levels+1, N) -> fresh ct (2, levels+1, N)."""
+        p = self.p
+        a_int = self._sample_uniform_int(p.n_ring)
+        e_int = self._sample_error(p.n_ring)
+        c0 = np.zeros_like(pt_full)
+        c1 = np.zeros_like(pt_full)
+        for j, qj in enumerate(p.primes):
+            qq = np.uint64(qj)
+            aj = _reduce_signed(a_int, qj)
+            as_ = ntt_inverse((ntt_forward(aj, qj) * self._s_ntt[qj]) % qq, qj)
+            c0[j] = (pt_full[j] + _reduce_signed(e_int, qj)
+                     + (qq - as_)) % qq
+            c1[j] = aj
+        return np.stack([c0, c1])
+
+    def decrypt(self, ct: np.ndarray, level: int) -> np.ndarray:
+        """ct (ncomp, level+1, N) -> plaintext coeffs (level+1, N)."""
+        p = self.p
+        primes = p.level_primes(level)
+        ncomp = ct.shape[0]
+        out = np.zeros((len(primes), p.n_ring), dtype=np.uint64)
+        for j, qj in enumerate(primes):
+            qq = np.uint64(qj)
+            acc = ct[0, j] % qq
+            spow = self._s_ntt[qj]
+            cur = spow.copy()
+            for k in range(1, ncomp):
+                ck = ntt_forward(ct[k, j] % qq, qj)
+                acc = (acc + ntt_inverse((ck * cur) % qq, qj)) % qq
+                cur = (cur * spow) % qq
+            out[j] = acc
+        return out
+
+    def decode(self, pt: np.ndarray, level: int, scale: float) -> np.ndarray:
+        """CRT-combine centered coefficients and decode to slots."""
+        p = self.p
+        primes = p.level_primes(level)
+        if len(primes) == 1:
+            coeffs = _center(pt[0], primes[0]).astype(np.float64)
+        else:
+            Q = 1
+            for q in primes:
+                Q *= q
+            acc = np.zeros(p.n_ring, dtype=object)
+            for j, qj in enumerate(primes):
+                qhat = Q // qj
+                w = qhat * pow(qhat, -1, qj)
+                acc = acc + pt[j].astype(object) * w
+            acc = np.mod(acc, Q)
+            acc = np.where(acc > Q // 2, acc - Q, acc)
+            coeffs = acc.astype(np.float64)
+        return decode(coeffs, p.n_ring, scale)
+
+    # -- homomorphic ops ------------------------------------------------------------
+
+    def add(self, c1: np.ndarray, c2: np.ndarray, level: int) -> np.ndarray:
+        primes = self.p.level_primes(level)
+        ncomp = max(c1.shape[0], c2.shape[0])
+        out = np.zeros((ncomp, len(primes), self.p.n_ring), dtype=np.uint64)
+        for j, qj in enumerate(primes):
+            qq = np.uint64(qj)
+            for k in range(ncomp):
+                x = c1[k, j] if k < c1.shape[0] else 0
+                y = c2[k, j] if k < c2.shape[0] else 0
+                out[k, j] = (x + y) % qq
+        return out
+
+    def sub(self, c1: np.ndarray, c2: np.ndarray, level: int) -> np.ndarray:
+        primes = self.p.level_primes(level)
+        ncomp = max(c1.shape[0], c2.shape[0])
+        out = np.zeros((ncomp, len(primes), self.p.n_ring), dtype=np.uint64)
+        for j, qj in enumerate(primes):
+            qq = np.uint64(qj)
+            for k in range(ncomp):
+                x = c1[k, j] if k < c1.shape[0] else 0
+                y = c2[k, j] if k < c2.shape[0] else 0
+                out[k, j] = (x + qq - y % qq) % qq
+        return out
+
+    def mul_tensor(self, c1: np.ndarray, c2: np.ndarray,
+                   level: int) -> np.ndarray:
+        """(c0,c1) x (d0,d1) -> 3-component ct at the same level (no relin)."""
+        primes = self.p.level_primes(level)
+        n = self.p.n_ring
+        out = np.zeros((3, len(primes), n), dtype=np.uint64)
+        for j, qj in enumerate(primes):
+            qq = np.uint64(qj)
+            a0 = ntt_forward(c1[0, j] % qq, qj)
+            a1 = ntt_forward(c1[1, j] % qq, qj)
+            b0 = ntt_forward(c2[0, j] % qq, qj)
+            b1 = ntt_forward(c2[1, j] % qq, qj)
+            out[0, j] = ntt_inverse((a0 * b0) % qq, qj)
+            out[1, j] = ntt_inverse(((a0 * b1) % qq + (a1 * b0) % qq) % qq, qj)
+            out[2, j] = ntt_inverse((a1 * b1) % qq, qj)
+        return out
+
+    def relinearize(self, ct3: np.ndarray, level: int) -> np.ndarray:
+        """3-comp -> 2-comp at the same level (hybrid key switching)."""
+        p = self.p
+        primes = p.level_primes(level)
+        basis = primes + [p.special_prime]
+        P = p.special_prime
+        evk = self._evk[level]
+        n = p.n_ring
+        acc0 = np.zeros((len(basis), n), dtype=np.uint64)
+        acc1 = np.zeros_like(acc0)
+        for i, qi in enumerate(primes):
+            digit = ct3[2, i]  # integer < q_i
+            for j, qj in enumerate(basis):
+                qq = np.uint64(qj)
+                dj = ntt_forward(digit % qq, qj)
+                acc0[j] = (acc0[j] + dj * evk[i].b[j]) % qq
+                acc1[j] = (acc1[j] + dj * evk[i].a[j]) % qq
+        out = np.zeros((2, len(primes), n), dtype=np.uint64)
+        inv_np = {qj: pow(P, -1, qj) for qj in primes}
+        d0P = _center(ntt_inverse(acc0[-1], P), P)
+        d1P = _center(ntt_inverse(acc1[-1], P), P)
+        for j, qj in enumerate(primes):
+            qq = np.uint64(qj)
+            a0 = ntt_inverse(acc0[j], qj)
+            a1 = ntt_inverse(acc1[j], qj)
+            t0 = (a0 + _reduce_signed(-d0P, qj)) % qq
+            t1 = (a1 + _reduce_signed(-d1P, qj)) % qq
+            out[0, j] = (ct3[0, j] + t0 * np.uint64(inv_np[qj])) % qq
+            out[1, j] = (ct3[1, j] + t1 * np.uint64(inv_np[qj])) % qq
+        return out
+
+    def rescale(self, ct: np.ndarray, level: int) -> np.ndarray:
+        """Drop the last prime; divides the message scale by q_level."""
+        p = self.p
+        primes = p.level_primes(level)
+        ql = primes[-1]
+        inv = {qj: pow(ql, -1, qj) for qj in primes[:-1]}
+        ncomp = ct.shape[0]
+        out = np.zeros((ncomp, len(primes) - 1, p.n_ring), dtype=np.uint64)
+        for k in range(ncomp):
+            last = _center(ct[k, len(primes) - 1], ql)
+            for j, qj in enumerate(primes[:-1]):
+                qq = np.uint64(qj)
+                t = (ct[k, j] + _reduce_signed(-last, qj)) % qq
+                out[k, j] = (t * np.uint64(inv[qj])) % qq
+        return out
+
+    def mul(self, c1: np.ndarray, c2: np.ndarray, level: int) -> np.ndarray:
+        """Full multiply: tensor + relinearize + rescale -> level-1 ct."""
+        t = self.mul_tensor(c1, c2, level)
+        r = self.relinearize(t, level)
+        return self.rescale(r, level)
+
+    def mul_plain(self, ct: np.ndarray, pt_full: np.ndarray,
+                  level: int, rescale: bool = True) -> np.ndarray:
+        primes = self.p.level_primes(level)
+        n = self.p.n_ring
+        ncomp = ct.shape[0]
+        out = np.zeros((ncomp, len(primes), n), dtype=np.uint64)
+        for j, qj in enumerate(primes):
+            qq = np.uint64(qj)
+            ptj = ntt_forward(pt_full[j] % qq, qj)
+            for k in range(ncomp):
+                cj = ntt_forward(ct[k, j] % qq, qj)
+                out[k, j] = ntt_inverse((cj * ptj) % qq, qj)
+        return self.rescale(out, level) if rescale else out
+
+    def add_plain(self, ct: np.ndarray, pt_full: np.ndarray,
+                  level: int) -> np.ndarray:
+        primes = self.p.level_primes(level)
+        out = ct.copy()
+        for j, qj in enumerate(primes):
+            out[0, j] = (ct[0, j] + pt_full[j]) % np.uint64(qj)
+        return out

@@ -1,0 +1,254 @@
+"""CKKS protocol driver for MAGE's engine (§7.4) + the Batch DSL.
+
+The address space is word-addressed (one slot = 8 bytes); a ciphertext at
+level l occupies ncomp*(l+1)*N slots, an encoded plaintext (levels+1)*N.
+Ciphertexts are flat buffers (no serialization step — the improvement the
+paper itself suggests over SEAL's pointer-laden objects; we model SEAL's
+serialize cost separately in the Fig. 7 benchmark).
+
+The Add-Multiply *engine* is trivial here (CKKS gates ARE adds/multiplies),
+so the driver maps bytecode ops 1:1 onto cipher.py, including the paper's
+lazy-relinearization optimization (CT_MUL_NR + CT_ADD on 3-component
+ciphertexts + one CT_RELIN), which §7.4 calls out as crucial for rstats and
+the linear-algebra workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from ...core.bytecode import Instr, Op
+from ...core.dsl import Value
+from ...core.engine import ProtocolDriver
+from .cipher import CkksContext
+from .params import CkksParams
+
+InputProvider = Callable[[int], np.ndarray]
+
+
+@dataclasses.dataclass
+class CkksCostModel:
+    """Per-op seconds from NTT counts (calibrated to single-core SEAL-era
+    throughput: an N-point NTT ~ kappa*N*log2(N) seconds)."""
+    kappa: float = 2.0e-9
+    pointwise: float = 0.3e-9     # per-coefficient modmul epilogue
+    instr_overhead_s: float = 2e-6
+
+    def ntt_s(self, n: int) -> float:
+        return self.kappa * n * math.log2(max(n, 2))
+
+    def cost(self, instr: Instr, n_ring: int) -> float:
+        op, imm = instr.op, instr.imm
+        t = self.instr_overhead_s
+        if op == Op.CT_ADD:
+            lvl, nc = imm[0], max(imm[1], imm[2])
+            t += nc * (lvl + 1) * n_ring * self.pointwise
+        elif op in (Op.CT_MUL, Op.CT_MUL_NR, Op.CT_RELIN, Op.CT_MUL_PLAIN):
+            lvl = imm[0]
+            nprime = lvl + 1
+            if op in (Op.CT_MUL, Op.CT_MUL_NR):
+                ntts = 7 * nprime                      # 4 fwd + 3 inv
+            else:
+                ntts = 0
+            if op in (Op.CT_MUL, Op.CT_RELIN):
+                ntts += nprime * (nprime + 1) + 2 * (nprime + 1) + 2 * nprime
+            if op == Op.CT_MUL_PLAIN:
+                ntts += 2 * 2 * nprime + nprime
+            t += ntts * self.ntt_s(n_ring)
+            t += nprime * n_ring * 6 * self.pointwise
+        elif op in (Op.CT_ADD_PLAIN,):
+            lvl = imm[0]
+            t += (lvl + 1) * n_ring * self.pointwise
+        elif op in (Op.INPUT, Op.OUTPUT):
+            t += 4 * self.ntt_s(n_ring)
+        return t
+
+
+class CkksDriver(ProtocolDriver):
+    lane = 1
+    dtype = np.uint64
+    name = "ckks"
+
+    def __init__(self, params: CkksParams,
+                 input_provider: InputProvider | None = None,
+                 seed: int = 0xCEC5):
+        self.p = params
+        self.ctx = CkksContext(params, seed=seed)
+        self.input_provider = input_provider
+        self.outputs: dict[int, np.ndarray] = {}
+        self.cost_model = CkksCostModel()
+
+    def cost(self, instr: Instr) -> float:
+        return self.cost_model.cost(instr, self.p.n_ring)
+
+    # -- layout helpers ------------------------------------------------------------
+
+    def _ct(self, view: np.ndarray, level: int, ncomp: int = 2) -> np.ndarray:
+        return view[:, 0].reshape(ncomp, level + 1, self.p.n_ring)
+
+    def _pt(self, view: np.ndarray) -> np.ndarray:
+        return view[:, 0].reshape(self.p.levels + 1, self.p.n_ring)
+
+    def execute(self, op: Op, imm: tuple, outs, ins) -> None:
+        ctx, p = self.ctx, self.p
+        if op == Op.INPUT:
+            tag, kind = imm[0], imm[1]
+            z = np.asarray(self.input_provider(tag), dtype=np.float64)
+            pt = ctx.encode(z)
+            if kind == 1:
+                outs[0][:, 0] = pt.reshape(-1)
+            else:
+                outs[0][:, 0] = ctx.encrypt(pt).reshape(-1)
+        elif op == Op.OUTPUT:
+            tag, level, ncomp, scale = imm[0], imm[1], imm[2], imm[3]
+            ct = self._ct(ins[0], level, ncomp)
+            z = ctx.decode(ctx.decrypt(ct, level), level, scale)
+            self.outputs[tag] = z.real
+        elif op == Op.COPY:
+            outs[0][...] = ins[0]
+        elif op == Op.CT_ADD:
+            level, nc1, nc2 = imm[0], imm[1], imm[2]
+            sub = bool(imm[3]) if len(imm) > 3 else False
+            fn = ctx.sub if sub else ctx.add
+            r = fn(self._ct(ins[0], level, nc1),
+                   self._ct(ins[1], level, nc2), level)
+            outs[0][:, 0] = r.reshape(-1)
+        elif op == Op.CT_MUL:
+            level = imm[0]
+            r = ctx.mul(self._ct(ins[0], level), self._ct(ins[1], level),
+                        level)
+            outs[0][:, 0] = r.reshape(-1)
+        elif op == Op.CT_MUL_NR:
+            level = imm[0]
+            r = ctx.mul_tensor(self._ct(ins[0], level),
+                               self._ct(ins[1], level), level)
+            outs[0][:, 0] = r.reshape(-1)
+        elif op == Op.CT_RELIN:
+            level = imm[0]
+            r = ctx.rescale(ctx.relinearize(self._ct(ins[0], level, 3),
+                                            level), level)
+            outs[0][:, 0] = r.reshape(-1)
+        elif op == Op.CT_MUL_PLAIN:
+            level = imm[0]
+            r = ctx.mul_plain(self._ct(ins[0], level), self._pt(ins[1]),
+                              level)
+            outs[0][:, 0] = r.reshape(-1)
+        elif op == Op.CT_ADD_PLAIN:
+            level = imm[0]
+            r = ctx.add_plain(self._ct(ins[0], level), self._pt(ins[1]),
+                              level)
+            outs[0][:, 0] = r.reshape(-1)
+        else:
+            raise NotImplementedError(f"ckks driver: {op}")
+
+
+# ---------------------------------------------------------------------------
+# Batch DSL (§7.4: "Batches" + Add-Multiply engine)
+# ---------------------------------------------------------------------------
+
+
+class Plain(Value):
+    """An encoded plaintext vector (usable at any level)."""
+
+    __slots__ = ("params",)
+
+    def __init__(self, params: CkksParams, builder=None):
+        super().__init__(params.pt_slots(), builder)
+        self.params = params
+
+    def mark_input(self, tag: int) -> "Plain":
+        self.builder.emit(Op.INPUT, outs=(self.span,), imm=(tag, 1))
+        return self
+
+
+class Batch(Value):
+    """One CKKS ciphertext: a vector of N/2 encrypted reals."""
+
+    __slots__ = ("params", "level", "ncomp", "scale")
+
+    def __init__(self, params: CkksParams, level: int | None = None,
+                 ncomp: int = 2, scale: float | None = None, builder=None):
+        level = params.levels if level is None else level
+        super().__init__(params.ct_slots(level, ncomp), builder)
+        self.params = params
+        self.level = level
+        self.ncomp = ncomp
+        self.scale = params.scale if scale is None else scale
+
+    def mark_input(self, tag: int) -> "Batch":
+        assert self.level == self.params.levels and self.ncomp == 2
+        self.builder.emit(Op.INPUT, outs=(self.span,), imm=(tag, 0))
+        return self
+
+    def mark_output(self, tag: int) -> None:
+        self.builder.emit(Op.OUTPUT, ins=(self.span,),
+                          imm=(tag, self.level, self.ncomp, self.scale))
+
+    # -- ops -------------------------------------------------------------------
+
+    def __add__(self, o: "Batch") -> "Batch":
+        assert self.level == o.level, "CKKS add: level mismatch"
+        r = Batch(self.params, self.level, max(self.ncomp, o.ncomp),
+                  max(self.scale, o.scale), self.builder)
+        self.builder.emit(Op.CT_ADD, outs=(r.span,),
+                          ins=(self.span, o.span),
+                          imm=(self.level, self.ncomp, o.ncomp, 0))
+        return r
+
+    def __sub__(self, o: "Batch") -> "Batch":
+        assert self.level == o.level, "CKKS sub: level mismatch"
+        r = Batch(self.params, self.level, max(self.ncomp, o.ncomp),
+                  max(self.scale, o.scale), self.builder)
+        self.builder.emit(Op.CT_ADD, outs=(r.span,),
+                          ins=(self.span, o.span),
+                          imm=(self.level, self.ncomp, o.ncomp, 1))
+        return r
+
+    def __mul__(self, o: "Batch") -> "Batch":
+        assert self.level == o.level and self.level >= 1, \
+            f"CKKS mul needs level>=1 (have {self.level})"
+        assert self.ncomp == 2 and o.ncomp == 2
+        drop = self.params.level_primes(self.level)[-1]
+        r = Batch(self.params, self.level - 1, 2,
+                  self.scale * o.scale / drop, self.builder)
+        self.builder.emit(Op.CT_MUL, outs=(r.span,),
+                          ins=(self.span, o.span), imm=(self.level,))
+        return r
+
+    def mul_norelin(self, o: "Batch") -> "Batch":
+        """Tensor product without relinearization (lazy-relin sums)."""
+        assert self.level == o.level and self.ncomp == 2 and o.ncomp == 2
+        r = Batch(self.params, self.level, 3, self.scale * o.scale,
+                  self.builder)
+        self.builder.emit(Op.CT_MUL_NR, outs=(r.span,),
+                          ins=(self.span, o.span), imm=(self.level,))
+        return r
+
+    def relin(self) -> "Batch":
+        assert self.ncomp == 3 and self.level >= 1
+        drop = self.params.level_primes(self.level)[-1]
+        r = Batch(self.params, self.level - 1, 2, self.scale / drop,
+                  self.builder)
+        self.builder.emit(Op.CT_RELIN, outs=(r.span,), ins=(self.span,),
+                          imm=(self.level,))
+        return r
+
+    def mul_plain(self, pt: Plain) -> "Batch":
+        assert self.level >= 1 and self.ncomp == 2
+        drop = self.params.level_primes(self.level)[-1]
+        r = Batch(self.params, self.level - 1, 2,
+                  self.scale * self.params.scale / drop, self.builder)
+        self.builder.emit(Op.CT_MUL_PLAIN, outs=(r.span,),
+                          ins=(self.span, pt.span), imm=(self.level,))
+        return r
+
+    def add_plain(self, pt: Plain) -> "Batch":
+        r = Batch(self.params, self.level, self.ncomp, self.scale,
+                  self.builder)
+        self.builder.emit(Op.CT_ADD_PLAIN, outs=(r.span,),
+                          ins=(self.span, pt.span), imm=(self.level,))
+        return r

@@ -1,0 +1,112 @@
+"""Negacyclic NTT over NTT-friendly primes (numpy; the engine's hot path).
+
+Longa–Naehrig iterative butterflies: forward (CT/DIT) takes standard order
+to bit-reversed; inverse (GS/DIF) takes bit-reversed back to standard.
+Pointwise products happen in the bit-reversed domain, so the order never
+needs fixing up.  Each stage is one fully-vectorized numpy expression — the
+same schedule the Pallas kernel (repro.kernels.ntt) tiles into VMEM.
+
+All arithmetic is mod q < 2^31, so uint64 products never overflow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from .params import primitive_2n_root
+
+
+def bit_reverse_indices(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+@functools.lru_cache(maxsize=None)
+def ntt_tables(q: int, n: int) -> tuple[np.ndarray, np.ndarray, int]:
+    """(psi powers bit-reversed, psi^-1 powers bit-reversed, N^-1 mod q)."""
+    psi = primitive_2n_root(q, n)
+    psi_inv = pow(psi, q - 2, q)
+    pw = np.empty(n, dtype=np.uint64)
+    pwi = np.empty(n, dtype=np.uint64)
+    x = y = 1
+    for i in range(n):
+        pw[i] = x
+        pwi[i] = y
+        x = x * psi % q
+        y = y * psi_inv % q
+    rev = bit_reverse_indices(n)
+    return pw[rev], pwi[rev], pow(n, q - 2, q)
+
+
+def ntt_forward(a: np.ndarray, q: int) -> np.ndarray:
+    """Negacyclic forward NTT; a is (..., N) uint64 standard order."""
+    n = a.shape[-1]
+    psis, _, _ = ntt_tables(q, n)
+    qq = np.uint64(q)
+    v = a.copy()
+    lead = v.shape[:-1]
+    t = n
+    m = 1
+    while m < n:
+        t //= 2
+        w = v.reshape(*lead, m, 2, t)
+        s = psis[m:2 * m].reshape((1,) * len(lead) + (m, 1))
+        u = w[..., 0, :]
+        x = (w[..., 1, :] * s) % qq
+        w0 = (u + x) % qq
+        w1 = (u + qq - x) % qq
+        v = np.stack([w0, w1], axis=-2).reshape(*lead, n)
+        m *= 2
+    return v
+
+
+def ntt_inverse(a: np.ndarray, q: int) -> np.ndarray:
+    """Inverse negacyclic NTT; input bit-reversed, output standard order."""
+    n = a.shape[-1]
+    _, psis_inv, n_inv = ntt_tables(q, n)
+    qq = np.uint64(q)
+    v = a.copy()
+    lead = v.shape[:-1]
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        w = v.reshape(*lead, h, 2, t)
+        s = psis_inv[h:2 * h].reshape((1,) * len(lead) + (h, 1))
+        u = w[..., 0, :]
+        x = w[..., 1, :]
+        w0 = (u + x) % qq
+        w1 = ((u + qq - x) % qq * s) % qq
+        v = np.stack([w0, w1], axis=-2).reshape(*lead, n)
+        t *= 2
+        m = h
+    return (v * np.uint64(n_inv)) % qq
+
+
+def negacyclic_mul(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """c = a*b mod (X^N + 1, q) — reference composition of the above."""
+    fa = ntt_forward(a % np.uint64(q), q)
+    fb = ntt_forward(b % np.uint64(q), q)
+    return ntt_inverse((fa * fb) % np.uint64(q), q)
+
+
+def negacyclic_mul_naive(a: np.ndarray, b: np.ndarray, q: int) -> np.ndarray:
+    """O(N^2) oracle for tests."""
+    n = a.shape[-1]
+    c = np.zeros(n, dtype=np.object_)
+    av = [int(x) for x in a]
+    bv = [int(x) for x in b]
+    for i in range(n):
+        for j in range(n):
+            k = i + j
+            if k < n:
+                c[k] = (c[k] + av[i] * bv[j]) % q
+            else:
+                c[k - n] = (c[k - n] - av[i] * bv[j]) % q
+    return c.astype(np.uint64)

@@ -1,0 +1,6 @@
+from .driver import (EvaluatorDriver, GarblerDriver, PartyChannel,
+                     PlaintextDriver, run_two_party)
+from .dsl import Bit, Integer, Party
+
+__all__ = ["EvaluatorDriver", "GarblerDriver", "PartyChannel",
+           "PlaintextDriver", "run_two_party", "Bit", "Integer", "Party"]

@@ -1,0 +1,137 @@
+"""Fixed-key AES-128 for half-gates garbling (Bellare et al. [5]).
+
+Labels are 128-bit values stored as uint64 pairs (little-endian lanes).  The
+gate hash is the Davies–Meyer-style construction used by classic EMP-toolkit:
+
+    H(x, i) = AES_k(sigma(x) XOR i) XOR sigma(x) XOR i,   sigma(x) = 2*x
+
+where 2*x is doubling in GF(2^128) (poly x^128 + x^7 + x^2 + x + 1) and the
+tweak ``i`` is the gate index.  The key is fixed and public.
+
+This module is the *numpy* implementation used on the engine's hot path; a
+jnp oracle and the TPU Pallas kernel (constant-time, lookup-free S-box) live
+in ``repro.kernels.garble``.  All three must agree bit-exactly — tested
+against each other and the FIPS-197 vector.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# AES tables
+# ---------------------------------------------------------------------------
+
+
+def _build_sbox() -> np.ndarray:
+    # GF(2^8) inverse via log/antilog tables (generator 3)
+    exp = np.zeros(256, dtype=np.int32)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x ^= ((x << 1) ^ (0x1B if x & 0x80 else 0)) & 0xFF  # x *= 3
+    inv = np.zeros(256, dtype=np.uint8)
+    for a in range(1, 256):
+        inv[a] = exp[(255 - log[a]) % 255]
+    s = np.zeros(256, dtype=np.uint8)
+    for a in range(256):
+        b = int(inv[a])
+        res = 0x63
+        for sh in range(5):
+            res ^= ((b << sh) | (b >> (8 - sh))) & 0xFF
+        s[a] = res
+    return s
+
+
+SBOX = _build_sbox()
+
+# ShiftRows permutation on the 16-byte state (column-major AES state):
+# byte i sits at row i%4, col i//4; row r rotates left by r.
+SHIFT_ROWS = np.array([(i + 4 * (i % 4)) % 16 for i in range(16)],
+                      dtype=np.intp)
+
+FIXED_KEY = np.frombuffer(bytes(range(16)), dtype=np.uint8).copy()
+
+RCON = np.array([0x01, 0x02, 0x04, 0x08, 0x10,
+                 0x20, 0x40, 0x80, 0x1B, 0x36], dtype=np.uint8)
+
+
+def key_schedule(key: np.ndarray = FIXED_KEY) -> np.ndarray:
+    """Returns the 11 round keys as a (11, 16) uint8 array."""
+    w = [key[4 * i:4 * i + 4].copy() for i in range(4)]
+    for i in range(4, 44):
+        t = w[i - 1].copy()
+        if i % 4 == 0:
+            t = np.roll(t, -1)
+            t = SBOX[t]
+            t[0] ^= RCON[i // 4 - 1]
+        w.append(w[i - 4] ^ t)
+    return np.concatenate(w).reshape(11, 16)
+
+
+ROUND_KEYS = key_schedule()
+
+
+def _xtime(b: np.ndarray) -> np.ndarray:
+    return (((b.astype(np.uint16) << 1) ^
+             np.where(b & 0x80, 0x1B, 0)) & 0xFF).astype(np.uint8)
+
+
+def aes128_encrypt_blocks(blocks: np.ndarray,
+                          round_keys: np.ndarray = ROUND_KEYS) -> np.ndarray:
+    """AES-128 over a batch: blocks is (n, 16) uint8 -> (n, 16) uint8."""
+    s = blocks ^ round_keys[0]
+    for rnd in range(1, 10):
+        s = SBOX[s]
+        s = s[:, SHIFT_ROWS]
+        # MixColumns on column-major state: columns are s[:, 4c:4c+4]
+        v = s.reshape(-1, 4, 4)
+        x = _xtime(v)
+        rot1 = np.roll(v, -1, axis=2)
+        rot2 = np.roll(v, -2, axis=2)
+        rot3 = np.roll(v, -3, axis=2)
+        mixed = x ^ rot1 ^ _xtime(rot1) ^ rot2 ^ rot3
+        s = mixed.reshape(-1, 16) ^ round_keys[rnd]
+    s = SBOX[s]
+    s = s[:, SHIFT_ROWS]
+    return s ^ round_keys[10]
+
+
+# ---------------------------------------------------------------------------
+# 128-bit label helpers (uint64 pairs, little-endian lanes)
+# ---------------------------------------------------------------------------
+
+
+def labels_to_blocks(lbl: np.ndarray) -> np.ndarray:
+    """(n, 2) uint64 -> (n, 16) uint8 little-endian."""
+    return lbl.astype("<u8").view(np.uint8).reshape(-1, 16)
+
+
+def blocks_to_labels(blk: np.ndarray) -> np.ndarray:
+    blk = np.ascontiguousarray(blk.reshape(-1, 16))
+    return blk.view("<u8").reshape(-1, 2).astype(np.uint64)
+
+
+def gf128_double(lbl: np.ndarray) -> np.ndarray:
+    """x -> 2*x in GF(2^128) with poly 0x87 reduction; lbl is (n,2) uint64."""
+    lo, hi = lbl[:, 0], lbl[:, 1]
+    carry = hi >> np.uint64(63)
+    nhi = (hi << np.uint64(1)) | (lo >> np.uint64(63))
+    nlo = (lo << np.uint64(1)) ^ (carry * np.uint64(0x87))
+    return np.stack([nlo, nhi], axis=1)
+
+
+def tweak(gate_ids: np.ndarray) -> np.ndarray:
+    """(n,) int64 gate indices -> (n, 2) uint64 tweak blocks."""
+    t = np.zeros((len(gate_ids), 2), dtype=np.uint64)
+    t[:, 0] = gate_ids.astype(np.uint64)
+    return t
+
+
+def hash_labels(lbl: np.ndarray, gate_ids: np.ndarray) -> np.ndarray:
+    """H(x, i) = AES_k(2x ^ i) ^ 2x ^ i over a batch of labels."""
+    y = gf128_double(lbl) ^ tweak(gate_ids)
+    enc = aes128_encrypt_blocks(labels_to_blocks(y))
+    return blocks_to_labels(enc) ^ y

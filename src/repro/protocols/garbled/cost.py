@@ -1,0 +1,166 @@
+"""Analytic gate counts + timing/bandwidth model for garbled circuits.
+
+``gate_cost(op, imm)`` mirrors the subcircuits in engineops.py exactly (a
+test asserts formula == batcher counters for every op), so the timing
+simulator can price paper-scale traces without executing cryptography.
+
+Timing constants are calibrated to the paper's era (fixed-key AES-NI
+garbling, §8: ~10-20M AND gates/s on a D16d_v4 core): garbling an AND
+costs 4 AES calls + a 32 B table write, evaluation 2 AES calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ...core.bytecode import DIRECTIVES, Instr, Op
+
+
+def _adder_ands(w: int, want_carry: bool = False) -> int:
+    return w if want_carry else w - 1
+
+
+def _tree_widen_ands(n: int, w0: int, cap: int) -> int:
+    """ANDs for a pairwise reduction tree over n values of width w0 where
+    each level widens by one bit up to ``cap`` (matches dot8/popcount)."""
+    total = 0
+    vals = n
+    w = w0
+    while vals > 1:
+        w = min(w + 1, cap)
+        pairs = vals // 2
+        total += pairs * _adder_ands(w)
+        vals = pairs + (vals % 2)
+    return total
+
+
+def _mul_widening_ands(w: int) -> int:
+    # per element: w partial-product rows of w ANDs + a (w-1)-adder tree
+    # at full 2w width (shifted+zero-extended rows)
+    return w * w + (w - 1) * _adder_ands(2 * w)
+
+
+def _bitonic_sort_ce(n: int) -> int:
+    """compare-exchanges in a bitonic sort of n lanes."""
+    total = 0
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            total += n // 2
+            j //= 2
+        k *= 2
+    return total
+
+
+def _bitonic_merge_ce(n: int) -> int:
+    total = 0
+    j = n // 2
+    while j >= 1:
+        total += n // 2
+        j //= 2
+    return total
+
+
+def gate_cost(op: Op, imm: tuple) -> tuple[int, int]:
+    """Returns (AND gates, const wires) for one instruction.  XORs are free
+    and not modeled for time (they are ~50x cheaper than ANDs)."""
+    if op in (Op.XOR, Op.AND, Op.OR, Op.NOT):
+        n, w = imm[0], imm[1]
+        if op == Op.AND:
+            return n * w, 0
+        if op == Op.OR:
+            return n * w, 0
+        return 0, 0
+    if op in (Op.ADD,):
+        n, w = imm[0], imm[1]
+        return n * _adder_ands(w), 0
+    if op == Op.SUB:
+        n, w = imm[0], imm[1]
+        return n * _adder_ands(w), n
+    if op == Op.MUL:
+        n, w = imm[0], imm[1]
+        # truncated school multiplier
+        ands = sum(w - i for i in range(w))            # partial products
+        ands += sum(_adder_ands(w - i) for i in range(1, w))
+        return n * ands, 0
+    if op == Op.CMP_GE:
+        n, w, kw = imm[0], imm[1], imm[2]
+        return n * kw, n
+    if op == Op.CMP_EQ:
+        n, w, kw = imm[0], imm[1], imm[2]
+        return n * (kw - 1), 0         # xnor is free; AND tree costs kw-1
+    if op == Op.SELECT:
+        n, w = imm[0], imm[1]
+        return n * w, 0
+    if op == Op.MINMAX:
+        n, w, kw = imm[0], imm[1], imm[2]
+        return n * (kw + 2 * w), n
+    if op == Op.SORT_LOCAL:
+        n, w, kw = imm[0], imm[1], imm[2]
+        merge_only = bool(imm[4]) if len(imm) > 4 else False
+        ce = _bitonic_merge_ce(n) if merge_only else _bitonic_sort_ce(n)
+        return ce * (kw + 2 * w), ce
+    if op == Op.REVERSE:
+        return 0, 0
+    if op == Op.PAIR_JOIN:
+        na, nb, w, kw = imm[0], imm[1], imm[2], imm[3]
+        m = na * nb
+        return m * ((kw - 1) + w), m
+    if op == Op.MAC8:
+        nr, nj, acc_w = imm[0], imm[1], imm[2]
+        ands = nr * nj * _mul_widening_ands(8)
+        ands += nr * _tree_widen_ands(nj, 16, acc_w)
+        ands += nr * _adder_ands(acc_w)               # final acc add
+        return ands, nr * nj                          # const zero per product
+    if op == Op.XNOR_POP_SIGN:
+        nr, nj = imm[0], imm[1]
+        ands = nr * _tree_widen_ands(nj, 1, 64)
+        wc = _final_tree_width(nj, 1, 64)
+        ands += nr * wc                                # cmp_ge vs constant
+        return ands, nr * (wc + _tree_consts(nj))
+    if op == Op.REDUCE_ADD:
+        n, w = imm[0], imm[1]
+        return (n - 1) * _adder_ands(w), 0
+    if op in (Op.INPUT, Op.OUTPUT, Op.COPY, Op.REVERSE):
+        return 0, 0
+    if op in (Op.NET_SEND, Op.NET_RECV, Op.NET_BARRIER) or op in DIRECTIVES:
+        return 0, 0
+    raise NotImplementedError(f"gate_cost: {op}")
+
+
+def _final_tree_width(n: int, w0: int, cap: int) -> int:
+    w = w0
+    vals = n
+    while vals > 1:
+        w = min(w + 1, cap)
+        vals = vals // 2 + (vals % 2)
+    return w
+
+
+def _tree_consts(n: int) -> int:
+    """zero-extension const wires per row in the widening tree (upper bound
+    folded into the timing model only; exact count asserted in tests via the
+    batcher counters, not this helper)."""
+    return 0
+
+
+@dataclasses.dataclass
+class GCCostModel:
+    """Seconds/bytes per gate for the timing simulator."""
+    and_s: float = 80e-9          # garble an AND (4 fixed-key AES + table)
+    and_eval_s: float = 40e-9     # evaluate an AND (2 AES)
+    xor_s: float = 2e-9
+    instr_overhead_s: float = 2e-7
+    table_bytes: int = 32         # 2 ciphertexts per AND (half gates)
+    label_bytes: int = 16
+    role: str = "garbler"
+
+    def cost(self, instr: Instr) -> float:
+        ands, consts = gate_cost(instr.op, instr.imm)
+        per = self.and_s if self.role == "garbler" else self.and_eval_s
+        return self.instr_overhead_s + ands * per
+
+    def bytes_of(self, instr: Instr) -> int:
+        ands, consts = gate_cost(instr.op, instr.imm)
+        return ands * self.table_bytes + consts * self.label_bytes

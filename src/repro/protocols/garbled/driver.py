@@ -1,0 +1,357 @@
+"""Garbled-circuit protocol drivers for MAGE's engine (§7.3).
+
+Wire-addressed address space: one slot = one 128-bit wire label (lane=2
+uint64).  The garbler's array holds zero-labels, the evaluator's the active
+labels — swapping either to storage is sound because labels are flat data
+(no pointers, §7.1).
+
+Both parties interpret the SAME bytecode; the AND-XOR engine expands each
+instruction identically on both sides, keeping the streamed garbled tables
+in lock-step.  ``PlaintextDriver`` executes the bytecode in the clear: it is
+the correctness oracle and the cheap stand-in for paper-scale real
+executions (the cryptography's cost enters through the timing model).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+import numpy as np
+
+from ...core.bytecode import Instr, Op, Program
+from ...core.engine import Channels, Engine, ProtocolDriver
+from .cost import GCCostModel
+from .engineops import AndXorOps
+from .gates import EvaluatorGates, GarblerGates, PartyChannel
+
+InputProvider = Callable[[int], np.ndarray]  # tag -> uint64 vector
+
+
+def _split_bits(vals: np.ndarray, w: int) -> np.ndarray:
+    """(n,) uint64 -> (n, w) uint8 little-endian bits."""
+    n = len(vals)
+    out = np.zeros((n, w), dtype=np.uint8)
+    for i in range(w):
+        out[:, i] = (vals >> np.uint64(i)) & np.uint64(1)
+    return out
+
+
+def _join_bits(bits: np.ndarray) -> np.ndarray:
+    n, w = bits.shape
+    out = np.zeros(n, dtype=np.uint64)
+    for i in range(w):
+        out |= bits[:, i].astype(np.uint64) << np.uint64(i)
+    return out
+
+
+class _GCDriverBase(ProtocolDriver):
+    lane = 2
+    dtype = np.uint64
+
+    def __init__(self, gates, input_provider: InputProvider | None = None):
+        self.gates = gates
+        self.ops = AndXorOps(gates)
+        self.input_provider = input_provider
+        self.outputs: dict[int, np.ndarray] = {}
+        self._const_cache: dict[int, np.ndarray] = {}
+        self.cost_model = GCCostModel(
+            role="garbler" if isinstance(gates, GarblerGates) else "evaluator")
+
+    def cost(self, instr: Instr) -> float:
+        return self.cost_model.cost(instr)
+
+    # -- helpers ----------------------------------------------------------------
+
+    @staticmethod
+    def _shape(view: np.ndarray, n: int, w: int) -> np.ndarray:
+        return view.reshape(n, w, 2)
+
+    def execute(self, op: Op, imm: tuple, outs, ins) -> None:
+        o = self.ops
+        if op == Op.INPUT:
+            n, w, party, tag = imm[0], imm[1], imm[2], imm[3]
+            outs[0][...] = self._input(n, w, party, tag).reshape(-1, 2)
+        elif op == Op.OUTPUT:
+            n, w, tag = imm[0], imm[1], imm[2]
+            self._output(self._shape(ins[0], n, w), n, w, tag)
+        elif op == Op.COPY:
+            outs[0][...] = ins[0]
+        elif op in (Op.XOR, Op.AND, Op.OR, Op.NOT):
+            n, w = imm[0], imm[1]
+            a = self._shape(ins[0], n, w)
+            g = self.gates
+            if op == Op.NOT:
+                r = np.stack([g.not_(a[:, i]) for i in range(w)], axis=1)
+            else:
+                b = self._shape(ins[1], n, w)
+                if op == Op.XOR:
+                    r = np.stack([g.xor(a[:, i], b[:, i])
+                                  for i in range(w)], axis=1)
+                elif op == Op.AND:
+                    r = np.stack([g.and_(a[:, i], b[:, i])
+                                  for i in range(w)], axis=1)
+                else:  # OR: a ^ b ^ (a & b)
+                    r = np.stack(
+                        [g.xor(g.xor(a[:, i], b[:, i]),
+                               g.and_(a[:, i], b[:, i])) for i in range(w)],
+                        axis=1)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.ADD:
+            n, w = imm[0], imm[1]
+            r = o.add(self._shape(ins[0], n, w), self._shape(ins[1], n, w))
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.SUB:
+            n, w = imm[0], imm[1]
+            r = o.sub(self._shape(ins[0], n, w), self._shape(ins[1], n, w))
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.MUL:
+            n, w = imm[0], imm[1]
+            r = o.mul(self._shape(ins[0], n, w), self._shape(ins[1], n, w))
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.CMP_GE:
+            n, w, kw = imm[0], imm[1], imm[2]
+            r = o.cmp_ge(self._shape(ins[0], n, w),
+                         self._shape(ins[1], n, w), kw)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.CMP_EQ:
+            n, w, kw = imm[0], imm[1], imm[2]
+            r = o.cmp_eq(self._shape(ins[0], n, w),
+                         self._shape(ins[1], n, w), kw)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.SELECT:
+            n, w = imm[0], imm[1]
+            r = o.select(self._shape(ins[0], n, 1),
+                         self._shape(ins[1], n, w),
+                         self._shape(ins[2], n, w))
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.MINMAX:
+            n, w, kw = imm[0], imm[1], imm[2]
+            mn, mx = o.minmax(self._shape(ins[0], n, w),
+                              self._shape(ins[1], n, w), kw)
+            outs[0][...] = mn.reshape(-1, 2)
+            outs[1][...] = mx.reshape(-1, 2)
+        elif op == Op.SORT_LOCAL:
+            n, w, kw = imm[0], imm[1], imm[2]
+            desc = bool(imm[3]) if len(imm) > 3 else False
+            merge_only = bool(imm[4]) if len(imm) > 4 else False
+            r = o.sort_local(self._shape(ins[0], n, w), kw,
+                             direction_up=not desc, merge_only=merge_only)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.REVERSE:
+            n, w = imm[0], imm[1]
+            r = self._shape(ins[0], n, w)[::-1]
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.PAIR_JOIN:
+            na, nb, w, kw = imm[0], imm[1], imm[2], imm[3]
+            r = o.pair_join(self._shape(ins[0], na, w),
+                            self._shape(ins[1], nb, w), kw)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.MAC8:
+            nr, nj, acc_w = imm[0], imm[1], imm[2]
+            r = o.dot8(self._shape(ins[0], nr * nj, 8),
+                       self._shape(ins[1], nj, 8),
+                       self._shape(ins[2], nr, acc_w), nr, nj, acc_w)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.XNOR_POP_SIGN:
+            nr, nj = imm[0], imm[1]
+            r = o.xnor_pop_sign(self._shape(ins[0], nr * nj, 1),
+                                self._shape(ins[1], nj, 1), nr, nj)
+            outs[0][...] = r.reshape(-1, 2)
+        elif op == Op.REDUCE_ADD:
+            n, w = imm[0], imm[1]
+            r = o.reduce_add(self._shape(ins[0], n, w))
+            outs[0][...] = r.reshape(-1, 2)
+        else:
+            raise NotImplementedError(f"GC driver: {op}")
+
+    # party-specific:
+    def _input(self, n, w, party, tag):
+        raise NotImplementedError
+
+    def _output(self, labels, n, w, tag):
+        raise NotImplementedError
+
+
+class GarblerDriver(_GCDriverBase):
+    name = "gc-garbler"
+    PARTY = 0
+
+    def __init__(self, channel: PartyChannel,
+                 input_provider: InputProvider | None = None, seed: int = 7):
+        super().__init__(GarblerGates(channel, seed=seed), input_provider)
+
+    def _input(self, n, w, party, tag):
+        g = self.gates
+        if party == GarblerDriver.PARTY:
+            vals = self.input_provider(tag)
+            bits = _split_bits(np.asarray(vals, dtype=np.uint64), w)
+            return g.input_garbler(bits.reshape(-1)).reshape(n, w, 2)
+        return g.input_evaluator(n * w).reshape(n, w, 2)
+
+    def _output(self, labels, n, w, tag):
+        self.gates.output(labels.reshape(-1, 2))
+
+
+class EvaluatorDriver(_GCDriverBase):
+    name = "gc-evaluator"
+    PARTY = 1
+
+    def __init__(self, channel: PartyChannel,
+                 input_provider: InputProvider | None = None):
+        super().__init__(EvaluatorGates(channel), input_provider)
+
+    def _input(self, n, w, party, tag):
+        g = self.gates
+        if party == EvaluatorDriver.PARTY:
+            vals = self.input_provider(tag)
+            bits = _split_bits(np.asarray(vals, dtype=np.uint64), w)
+            return g.input_evaluator(bits.reshape(-1)).reshape(n, w, 2)
+        return g.input_garbler(n * w).reshape(n, w, 2)
+
+    def _output(self, labels, n, w, tag):
+        bits = self.gates.output(labels.reshape(-1, 2)).reshape(n, w)
+        self.outputs[tag] = _join_bits(bits)
+
+
+class PlaintextDriver(ProtocolDriver):
+    """Executes the same bytecode in the clear (lane=1).  Oracle + stand-in
+    for paper-scale real executions; cost model = garbler's."""
+
+    lane = 1
+    dtype = np.uint64
+    name = "gc-plaintext"
+
+    def __init__(self, input_provider: InputProvider | None = None):
+        self.input_provider = input_provider
+        self.outputs: dict[int, np.ndarray] = {}
+        self.cost_model = GCCostModel(role="garbler")
+
+    def cost(self, instr: Instr) -> float:
+        return self.cost_model.cost(instr)
+
+    @staticmethod
+    def _m(w: int) -> np.uint64:
+        return np.uint64((1 << w) - 1 if w < 64 else 0xFFFFFFFFFFFFFFFF)
+
+    def execute(self, op: Op, imm: tuple, outs, ins) -> None:
+        # The bytecode is wire-addressed (count*width slots per value); a
+        # plaintext value lives at its element's first wire slot (stride w).
+        w = imm[1] if len(imm) > 1 else 1
+        if op == Op.MAC8:
+            v = [ins[0][::8, 0], ins[1][::8, 0], ins[2][::imm[2], 0]]
+        elif op == Op.XNOR_POP_SIGN:
+            v = [ins[0][::1, 0], ins[1][::1, 0]]
+        elif op == Op.SELECT:
+            v = [ins[0][::1, 0], ins[1][::w, 0], ins[2][::w, 0]]
+        elif op == Op.PAIR_JOIN:
+            v = []  # handled inline (imm layout differs: na, nb, w, kw)
+        else:
+            v = [x[::w, 0] for x in ins]
+        if op == Op.INPUT:
+            n, w, party, tag = imm[0], imm[1], imm[2], imm[3]
+            outs[0][::w, 0] = np.asarray(self.input_provider(tag),
+                                         dtype=np.uint64) & self._m(w)
+        elif op == Op.OUTPUT:
+            n, w, tag = imm[0], imm[1], imm[2]
+            self.outputs[tag] = np.array(v[0]) & self._m(w)
+        elif op == Op.COPY:
+            outs[0][...] = ins[0]
+        elif op == Op.ADD:
+            outs[0][::w, 0] = (v[0] + v[1]) & self._m(w)
+        elif op == Op.SUB:
+            outs[0][::w, 0] = (v[0] - v[1]) & self._m(w)
+        elif op == Op.MUL:
+            outs[0][::w, 0] = (v[0] * v[1]) & self._m(w)
+        elif op == Op.XOR:
+            outs[0][::w, 0] = v[0] ^ v[1]
+        elif op == Op.AND:
+            outs[0][::w, 0] = v[0] & v[1]
+        elif op == Op.OR:
+            outs[0][::w, 0] = v[0] | v[1]
+        elif op == Op.NOT:
+            outs[0][::w, 0] = (~v[0]) & self._m(w)
+        elif op == Op.CMP_GE:
+            kw = imm[2]
+            outs[0][:, 0] = ((v[0] & self._m(kw)) >=
+                             (v[1] & self._m(kw))).astype(np.uint64)
+        elif op == Op.CMP_EQ:
+            kw = imm[2]
+            outs[0][:, 0] = ((v[0] & self._m(kw)) ==
+                             (v[1] & self._m(kw))).astype(np.uint64)
+        elif op == Op.SELECT:
+            outs[0][::w, 0] = np.where(v[0].astype(bool), v[1], v[2])
+        elif op == Op.MINMAX:
+            kw = imm[2]
+            ge = (v[0] & self._m(kw)) >= (v[1] & self._m(kw))
+            outs[0][::w, 0] = np.where(ge, v[1], v[0])
+            outs[1][::w, 0] = np.where(ge, v[0], v[1])
+        elif op == Op.SORT_LOCAL:
+            kw = imm[2]
+            desc = bool(imm[3]) if len(imm) > 3 else False
+            order = np.argsort(v[0] & self._m(kw), kind="stable")
+            if desc:
+                order = order[::-1]
+            outs[0][::w, 0] = v[0][order]
+        elif op == Op.REVERSE:
+            outs[0][::w, 0] = v[0][::-1]
+        elif op == Op.PAIR_JOIN:
+            na, nb, w, kw = imm[0], imm[1], imm[2], imm[3]
+            a = np.repeat(ins[0][::w, 0].copy(), nb)
+            b = np.tile(ins[1][::w, 0].copy(), na)
+            km = self._m(kw)
+            eq = (a & km) == (b & km)
+            half = (w - kw) // 2
+            pa = (a >> np.uint64(kw)) & self._m(half)
+            pb = (b >> np.uint64(kw)) & self._m(w - kw - half)
+            packed = ((a & km) | (pa << np.uint64(kw))
+                      | (pb << np.uint64(kw + half))) & self._m(w)
+            outs[0][::w, 0] = np.where(eq, packed, np.uint64(0))
+        elif op == Op.MAC8:
+            nr, nj, acc_w = imm[0], imm[1], imm[2]
+            m = (v[0] & self._m(8)).reshape(nr, nj)
+            vec = (v[1] & self._m(8))[None, :]
+            prod = (m * vec) & self._m(16)
+            tot = prod.astype(np.uint64).sum(axis=1) & self._m(acc_w)
+            outs[0][::acc_w, 0] = (v[2] + tot) & self._m(acc_w)
+        elif op == Op.XNOR_POP_SIGN:
+            nr, nj = imm[0], imm[1]
+            m = (v[0] & np.uint64(1)).reshape(nr, nj)
+            vec = (v[1] & np.uint64(1))[None, :]
+            cnt = (1 - (m ^ vec).astype(np.int64)).sum(axis=1)
+            outs[0][:, 0] = (cnt >= (nj + 1) // 2).astype(np.uint64)
+        elif op == Op.REDUCE_ADD:
+            n, w = imm[0], imm[1]
+            outs[0][0, 0] = np.uint64(int(v[0].sum()) & int(self._m(w)))
+        else:
+            raise NotImplementedError(f"plaintext driver: {op}")
+
+
+def run_two_party(garbler_prog: Program, evaluator_prog: Program,
+                  garbler_inputs: InputProvider,
+                  evaluator_inputs: InputProvider,
+                  use_memmap: bool = False,
+                  channel_depth: int = 256,
+                  ) -> dict[int, np.ndarray]:
+    """Run garbler + evaluator engines on threads; returns evaluator outputs.
+
+    The two programs must come from the same bytecode but may be planned with
+    different memory budgets (each party swaps independently, §4)."""
+    ch = PartyChannel(maxsize=channel_depth)
+    gd = GarblerDriver(ch, garbler_inputs)
+    ed = EvaluatorDriver(ch, evaluator_inputs)
+    err: list[Exception] = []
+
+    def _g():
+        try:
+            Engine(garbler_prog, gd, use_memmap=use_memmap).run()
+        except Exception as e:  # pragma: no cover
+            err.append(e)
+
+    tg = threading.Thread(target=_g, daemon=True)
+    tg.start()
+    Engine(evaluator_prog, ed, use_memmap=use_memmap).run()
+    tg.join()
+    if err:
+        raise err[0]
+    return ed.outputs

@@ -1,0 +1,310 @@
+"""The AND-XOR *engine* (§4.2/§4.3): expands each bytecode instruction into a
+subcircuit of AND/XOR gates at runtime.
+
+The same code drives both parties (it only talks to the `Gates` interface),
+which is what guarantees the two interpreters stay in lock-step on the table
+stream.  Values are label tensors shaped (n, w, 2): n vector elements of w
+bits; bit 0 is the LSB.  Wire shuffles (shifts, broadcasts, bit packing) are
+free — they are just numpy reindexing of labels.
+
+Subcircuits follow the classic constructions (Kolesnikov–Schneider adders,
+§7.3 'based on those used by Obliv-C'): ripple-carry add/sub (w-1 ANDs),
+comparison via borrow chain (w ANDs), mux (w ANDs), school multiplier
+(~w^2 ANDs), bitonic compare-exchange networks for sort/merge.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .gates import Gates
+
+
+def _bit(x, i):
+    return x[:, i]
+
+
+def _stack(cols):
+    return np.stack(cols, axis=1)
+
+
+class AndXorOps:
+    def __init__(self, gb: Gates):
+        self.gb = gb
+
+    # -- arithmetic -----------------------------------------------------------
+
+    def add(self, a, b, cin=None, want_carry: bool = False):
+        gb = self.gb
+        n, w, _ = a.shape
+        outs = []
+        c = cin
+        for i in range(w):
+            ai, bi = _bit(a, i), _bit(b, i)
+            if c is None:
+                outs.append(gb.xor(ai, bi))
+                if i < w - 1 or want_carry:
+                    c = gb.and_(ai, bi)
+            else:
+                axc = gb.xor(ai, c)
+                bxc = gb.xor(bi, c)
+                outs.append(gb.xor(axc, bi))
+                if i < w - 1 or want_carry:
+                    c = gb.xor(gb.and_(axc, bxc), c)
+        s = _stack(outs)
+        return (s, c) if want_carry else s
+
+    def sub(self, a, b):
+        gb = self.gb
+        n, w, _ = a.shape
+        nb = _stack([gb.not_(_bit(b, i)) for i in range(w)])
+        cin = gb.const_ones(n)
+        return self.add(a, nb, cin=cin)
+
+    def mul(self, a, b):
+        """Truncated w-bit product (school method)."""
+        gb = self.gb
+        n, w, _ = a.shape
+        acc = None
+        for i in range(w):
+            bi = np.broadcast_to(_bit(b, i)[:, None, :], (n, w - i, 2))
+            pp = _stack([gb.and_(bi[:, k], _bit(a, k)) for k in range(w - i)])
+            if acc is None:
+                acc = pp
+            else:
+                hi = self.add(acc[:, i:], pp)
+                acc = np.concatenate([acc[:, :i], hi], axis=1)
+        return acc
+
+    def reduce_add(self, a):
+        """(n, w) -> (1, w): tree sum over the n vector elements."""
+        vals = a
+        while vals.shape[0] > 1:
+            m = vals.shape[0] // 2
+            s = self.add(vals[:m], vals[m:2 * m])
+            if vals.shape[0] % 2:
+                s = np.concatenate([s, vals[2 * m:]], axis=0)
+            vals = s
+        return vals
+
+    # -- comparison / selection -------------------------------------------------
+
+    def cmp_ge(self, a, b, key_w: int | None = None):
+        """Unsigned a >= b: carry-out of a + ~b + 1.  Returns (n, 1, 2)."""
+        gb = self.gb
+        n, w, _ = a.shape
+        kw = key_w or w
+        c = gb.const_ones(n)
+        for i in range(kw):
+            ai = _bit(a, i)
+            nbi = gb.not_(_bit(b, i))
+            axc = gb.xor(ai, c)
+            bxc = gb.xor(nbi, c)
+            c = gb.xor(gb.and_(axc, bxc), c)
+        return c[:, None, :]
+
+    def cmp_eq(self, a, b, key_w: int | None = None):
+        gb = self.gb
+        n, w, _ = a.shape
+        kw = key_w or w
+        bits = [gb.not_(gb.xor(_bit(a, i), _bit(b, i))) for i in range(kw)]
+        while len(bits) > 1:
+            nxt = [gb.and_(bits[i], bits[i + 1])
+                   for i in range(0, len(bits) - 1, 2)]
+            if len(bits) % 2:
+                nxt.append(bits[-1])
+            bits = nxt
+        return bits[0][:, None, :]
+
+    def select(self, s, a, b):
+        """s ? a : b, bitwise mux; s is (n, 1, 2)."""
+        gb = self.gb
+        n, w, _ = a.shape
+        sb = np.broadcast_to(s, (n, w, 2))
+        out = []
+        for i in range(w):
+            d = gb.xor(_bit(a, i), _bit(b, i))
+            out.append(gb.xor(gb.and_(sb[:, i], d), _bit(b, i)))
+        return _stack(out)
+
+    def minmax(self, a, b, key_w: int):
+        ge = self.cmp_ge(a, b, key_w)          # a >= b on keys
+        mn = self.select(ge, b, a)
+        mx = self.select(ge, a, b)
+        return mn, mx
+
+    # -- composite workload kernels ----------------------------------------------
+
+    def sort_local(self, a, key_w: int, direction_up: bool = True,
+                   merge_only: bool = False):
+        """Bitonic sort (or, with ``merge_only``, just the final merging
+        network applied to an already-bitonic input) of the n elements
+        within one value (n power of two).
+
+        The network layout is public, so lane shuffles are free; only the
+        compare-exchanges cost gates.
+        """
+        n, w, _ = a.shape
+        assert n & (n - 1) == 0, "bitonic sort needs power-of-two chunk"
+        v = a
+        k = 2 * n if merge_only else 2
+        while k <= 2 * n if merge_only else k <= n:
+            j = min(k, n) // 2 if merge_only else k // 2
+            while j >= 1:
+                idx = np.arange(n)
+                partner = idx ^ j
+                lo = idx[idx < partner]
+                hi = lo ^ j
+                up = ((lo & k) == 0) == direction_up  # per-pair direction
+                if merge_only:
+                    up = np.full(len(lo), direction_up)
+                mn, mx = self.minmax(v[lo], v[hi], key_w)
+                new = np.array(v)
+                new[lo] = np.where(up[:, None, None], mn, mx)
+                new[hi] = np.where(up[:, None, None], mx, mn)
+                v = new
+                j //= 2
+            if merge_only:
+                break
+            k *= 2
+        return v
+
+    def bitonic_merge(self, a, key_w: int):
+        """Sort a BITONIC sequence (n, w) ascending: log(n) half-cleaner
+        stages — cheaper than a full bitonic sort's log^2(n) stages."""
+        n, w, _ = a.shape
+        assert n & (n - 1) == 0
+        v = a
+        j = n // 2
+        while j >= 1:
+            idx = np.arange(n)
+            partner = idx ^ j
+            lo = idx[idx < partner]
+            hi = lo ^ j
+            mn, mx = self.minmax(v[lo], v[hi], key_w)
+            new = np.array(v)
+            new[lo] = mn
+            new[hi] = mx
+            v = new
+            j //= 2
+        return v
+
+    def merge_step(self, a, b, key_w: int):
+        """Merge two sorted chunks (each (n, w)) -> (low, high) sorted chunks.
+
+        Comparing ascending `a` against reversed `b` half-cleans the pair:
+        the element-wise mins and maxes are each bitonic, so one
+        bitonic_merge per side finishes the job.  This is the building block
+        of the chunked 'merge'/'sort' workloads.
+        """
+        mn, mx = self.minmax(a, b[::-1], key_w)
+        return (self.bitonic_merge(mn, key_w), self.bitonic_merge(mx, key_w))
+
+    def pair_join(self, a, b, key_w: int):
+        """Loop-join cell: all (i, j) pairs, equality on keys, output packed
+        record (key | payload_a | payload_b) or zeros.  a is (na, w), b is
+        (nb, w); output (na*nb, w)."""
+        na, w, _ = a.shape
+        nb = b.shape[0]
+        aa = np.repeat(a, nb, axis=0)
+        bb = np.tile(b, (na, 1, 1))
+        eq = self.cmp_eq(aa, bb, key_w)
+        half = (w - key_w) // 2
+        packed = np.concatenate(
+            [aa[:, :key_w], aa[:, key_w:key_w + half],
+             bb[:, key_w:key_w + (w - key_w - half)]], axis=1)
+        zeros = _stack([self.gb.const_bits(np.zeros(na * nb, dtype=np.uint8))
+                        for _ in range(1)])
+        zeros = np.broadcast_to(zeros, packed.shape)
+        return self.select(eq, packed, zeros)
+
+    def dot8(self, m, v, acc, nr: int, nj: int, acc_w: int = 32):
+        """acc[r] += sum_j M[r,j] * v[j] with 8-bit operands.
+
+        m is (nr*nj, 8), v is (nj, 8), acc is (nr, acc_w).
+        Products are computed at 16 bits, the j-reduction tree widens to
+        acc_w, and the result is added into acc.
+        """
+        mm = m.reshape(nr, nj, 8, 2)
+        vv = np.broadcast_to(v[None], (nr, nj, 8, 2))
+        prods = []
+        a2 = mm.reshape(nr * nj, 8, 2)
+        b2 = vv.reshape(nr * nj, 8, 2)
+        prod16 = self._mul_widening(a2, b2)          # (nr*nj, 16)
+        prod16 = prod16.reshape(nr, nj, 16, 2)
+        # reduce over j with width growth
+        vals = [prod16[:, j] for j in range(nj)]
+        width = 16
+        while len(vals) > 1:
+            width = min(width + 1, acc_w)
+            nxt = []
+            for i in range(0, len(vals) - 1, 2):
+                x = self._zext(vals[i], width)
+                y = self._zext(vals[i + 1], width)
+                nxt.append(self.add(x, y))
+            if len(vals) % 2:
+                nxt.append(self._zext(vals[-1], width))
+            vals = nxt
+        total = self._zext(vals[0], acc_w)
+        return self.add(acc, total)
+
+    def _mul_widening(self, a, b):
+        """(n, w) x (n, w) -> (n, 2w) full product.
+
+        Shifted, zero-extended partial products summed with a pairwise adder
+        tree (shifts/extensions are free wire placement; the single constant
+        zero wire is fanned out)."""
+        n, w, _ = a.shape
+        gb = self.gb
+        zero = gb.const_bits(np.zeros(n, dtype=np.uint8))[:, None, :]
+        pps = []
+        for i in range(w):
+            bi = np.broadcast_to(_bit(b, i)[:, None, :], (n, w, 2))
+            pp = _stack([gb.and_(bi[:, k], _bit(a, k)) for k in range(w)])
+            low = np.broadcast_to(zero, (n, i, 2))
+            high = np.broadcast_to(zero, (n, w - i, 2))
+            pps.append(np.concatenate([low, pp, high], axis=1))
+        while len(pps) > 1:
+            nxt = [self.add(pps[j], pps[j + 1])
+                   for j in range(0, len(pps) - 1, 2)]
+            if len(pps) % 2:
+                nxt.append(pps[-1])
+            pps = nxt
+        return pps[0]
+
+    def _zext(self, a, w: int):
+        n, cur, _ = a.shape
+        if cur >= w:
+            return a[:, :w]
+        z = self.gb.const_bits(np.zeros(n, dtype=np.uint8))
+        pad = np.broadcast_to(z[:, None, :], (n, w - cur, 2))
+        return np.concatenate([a, pad], axis=1)
+
+    def xnor_pop_sign(self, m, v, nr: int, nj: int):
+        """Binary FC layer cell (XONN): out[r] = sign(2*popcount_j(
+        xnor(M[r,j], v[j])) - nj) as a single bit.  m is (nr*nj, 1),
+        v is (nj, 1); output (nr, 1)."""
+        gb = self.gb
+        mm = m.reshape(nr, nj, 2)
+        vv = np.broadcast_to(v[:, 0, :][None], (nr, nj, 2))
+        xn = gb.not_(gb.xor(mm.reshape(-1, 2), vv.reshape(-1, 2)))
+        bits = xn.reshape(nr, nj, 2)
+        # popcount: adder tree over 1-bit values with width growth
+        vals = [bits[:, j][:, None, :] for j in range(nj)]
+        while len(vals) > 1:
+            nxt = []
+            w = vals[0].shape[1]
+            for i in range(0, len(vals) - 1, 2):
+                x = self._zext(vals[i], w + 1)
+                y = self._zext(vals[i + 1], w + 1)
+                nxt.append(self.add(x, y))
+            if len(vals) % 2:
+                nxt.append(self._zext(vals[-1], w + 1))
+            vals = nxt
+        cnt = vals[0]                              # (nr, wc)
+        thresh = (nj + 1) // 2
+        wc = cnt.shape[1]
+        tbits = np.array([(thresh >> i) & 1 for i in range(wc)], dtype=np.uint8)
+        tlab = _stack([gb.const_bits(np.full(nr, tbits[i], dtype=np.uint8))
+                       for i in range(wc)])
+        return self.cmp_ge(cnt, tlab)

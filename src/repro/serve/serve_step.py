@@ -1,0 +1,82 @@
+"""Serving steps: prefill and decode, batched requests.
+
+``serve_step`` = one decode step (one new token for every sequence in the
+batch against its KV cache) — this is what decode_32k / long_500k lower.
+``prefill_step`` processes the full prompt — what prefill_32k lowers.
+Sampling is greedy/temperature; the batcher groups requests to the model's
+batch size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import (ModelConfig, encdec_decode, encdec_init_caches, encode,
+                      init_caches, lm_decode, lm_prefill)
+
+
+def prefill_step(params, tokens: jnp.ndarray, cfg: ModelConfig,
+                 max_seq: int):
+    """Prompt processing; returns (next-token logits, caches)."""
+    return lm_prefill(params, tokens, cfg, max_seq)
+
+
+def serve_step(params, token: jnp.ndarray, caches, cache_len: jnp.ndarray,
+               cfg: ModelConfig, temperature: float = 0.0,
+               rng: jax.Array | None = None):
+    """One decode step; returns (next token ids (b, 1), caches, logits)."""
+    logits, caches = lm_decode(params, token, caches, cache_len, cfg)
+    if temperature > 0.0 and rng is not None:
+        nxt = jax.random.categorical(rng, logits[:, -1] / temperature)
+        nxt = nxt[:, None]
+    else:
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    return nxt.astype(jnp.int32), caches, logits
+
+
+def serve_step_encdec(params, token, memory, caches, cache_len,
+                      cfg: ModelConfig):
+    logits, caches = encdec_decode(params, token, memory, caches, cache_len,
+                                   cfg)
+    nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    return nxt.astype(jnp.int32), caches, logits
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Any            # np.ndarray of token ids
+    max_new: int = 16
+    done: bool = False
+    output: list = dataclasses.field(default_factory=list)
+
+
+class Batcher:
+    """Greedy static batcher: fills slots with pending requests; a slot
+    frees when its request finishes (continuous batching lite)."""
+
+    def __init__(self, batch_size: int):
+        self.batch = batch_size
+        self.pending: list[Request] = []
+        self.active: list[Request | None] = [None] * batch_size
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def fill(self) -> list[tuple[int, Request]]:
+        placed = []
+        for i in range(self.batch):
+            if self.active[i] is None and self.pending:
+                self.active[i] = self.pending.pop(0)
+                placed.append((i, self.active[i]))
+        return placed
+
+    def retire(self, i: int):
+        self.active[i] = None
+
+    def busy(self) -> bool:
+        return any(self.active) or bool(self.pending)

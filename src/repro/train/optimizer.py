@@ -1,0 +1,90 @@
+"""AdamW with WSD (warmup–stable–decay) schedule (MiniCPM [arXiv:2404.06395])
+and global-norm clipping.  Pure pytree implementation (no optax dependency):
+moments in f32, params may be bf16 (f32 master copies optional)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    stable_steps: int = 1000
+    decay_steps: int = 100
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "wsd"       # wsd | cosine | const
+
+
+def wsd_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    w, st, d = cfg.warmup_steps, cfg.stable_steps, cfg.decay_steps
+    warm = s / jnp.maximum(w, 1)
+    if cfg.schedule == "const":
+        frac = jnp.minimum(warm, 1.0)
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((s - w) / jnp.maximum(st + d - w, 1), 0, 1)
+        frac = jnp.where(s < w, warm,
+                         cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    else:  # wsd: linear warmup, flat, then linear decay to min_lr_frac
+        decay_t = jnp.clip((s - w - st) / jnp.maximum(d, 1), 0, 1)
+        frac = jnp.where(s < w, warm,
+                         jnp.where(s < w + st, 1.0,
+                                   1.0 - (1.0 - cfg.min_lr_frac) * decay_t))
+    return cfg.peak_lr * frac
+
+
+def init_opt_state(params: Any) -> dict:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree_util.tree_map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any, state: dict
+                 ) -> tuple[Any, dict, dict]:
+    step = state["step"] + 1
+    lr = wsd_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu2, nu2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, metrics

