@@ -21,7 +21,6 @@ import time
 
 sys.path.insert(0, "src")
 
-import numpy as np  # noqa: E402
 
 from repro.core import (DeviceModel, PlanConfig, plan, simulate_os_paging,  # noqa: E402
                         simulate_unbounded)

@@ -17,7 +17,7 @@ from common import STORAGE, cost_fn, GC_PLAN, CKKS_PLAN, OS_PAGE_BYTES, \
 sys.path.insert(0, "src")
 
 from repro.core import PlanConfig, plan, simulate_os_paging  # noqa: E402
-from repro.core.bytecode import NET_DIRECTIVES, Op, strip_frees  # noqa: E402
+from repro.core.bytecode import NET_DIRECTIVES, strip_frees  # noqa: E402
 from repro.core.liveness import compute_touches, working_set_pages  # noqa: E402
 from repro.core.simulator import simulate_memory_program, simulate_unbounded  # noqa: E402
 from repro.workloads import get  # noqa: E402

@@ -20,7 +20,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import Engine, trace  # noqa: E402
+from repro.core import Engine  # noqa: E402
 from repro.protocols.garbled.driver import GarblerDriver  # noqa: E402
 from repro.protocols.garbled.gates import PartyChannel  # noqa: E402
 from repro.workloads import get  # noqa: E402

@@ -8,7 +8,7 @@ report the capacity ratio at equal time."""
 
 from __future__ import annotations
 
-from common import fmt_row, run_workload
+from common import run_workload
 
 
 def run(check: bool = True):

@@ -22,15 +22,12 @@ sys.path.insert(0, "src")
 
 from repro.core import Engine, trace  # noqa: E402
 from repro.protocols.ckks import Batch, CkksContext, CkksDriver, CkksParams  # noqa: E402
-from repro.protocols.garbled.driver import PlaintextDriver  # noqa: E402
 from repro.protocols.garbled.engineops import AndXorOps  # noqa: E402
-from repro.protocols.garbled.gates import GarblerGates, PartyChannel  # noqa: E402
-from repro.workloads import get  # noqa: E402
+from repro.protocols.garbled.gates import GarblerGates  # noqa: E402
 
 
 def gc_compare(n_batches: int = 40, m: int = 256):
     """Batched 32-bit adds: engine(bytecode+driver) vs direct gate calls."""
-    from repro.core import current_builder
     from repro.protocols.garbled.dsl import Integer, Party
 
     def program():

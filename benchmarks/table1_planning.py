@@ -4,29 +4,180 @@ Claims (§8.5): planning time and memory-program size are linear in the
 COMPUTATION size (we check near-linear scaling across 2x problem sizes);
 CKKS planning is much cheaper than GC planning (coarser instructions); and
 the planner's own memory stays far below the runtime budget.
+
+``--streaming`` additionally sweeps synthetic programs past the planner's
+own memory cap: the legacy in-memory planner materializes the whole program
+(peak memory linear in length), while the streaming pipeline
+(``plan_streaming``: file -> annotate -> replace -> schedule -> file) holds
+only chunk-sized buffers plus O(frames + lookahead) state, so it plans
+programs 10x+ larger than the cap with flat peak memory — the paper's
+"nearly zero-cost" planning claim at scale.
+
+Usage:
+  python benchmarks/table1_planning.py                # workload table
+  python benchmarks/table1_planning.py --streaming    # out-of-core sweep
+  python benchmarks/table1_planning.py --tiny --json out.json   # CI smoke
 """
 
 from __future__ import annotations
 
-from common import run_workload
+import argparse
+import dataclasses
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+import numpy as np  # noqa: E402
+
+from common import run_workload  # noqa: E402
+
+from repro.core import PlanConfig, plan, plan_streaming  # noqa: E402
+from repro.core.bytecode import (Instr, Op, Program,  # noqa: E402
+                                 ProgramWriter, RECORD_BYTES)
 
 CASES = [("merge", 8192), ("sort", 8192), ("ljoin", 256), ("mvmul", 256),
          ("binfclayer", 2048), ("rsum", 256), ("rstats", 128),
          ("rmvmul", 16), ("n_rmatmul", 8), ("t_rmatmul", 8)]
+TINY_CASES = [("merge", 2048), ("rsum", 128)]
+
+# --- streaming sweep configuration ------------------------------------------
+#
+# The planner memory cap is what Table 1 bounds: the planner's own peak
+# memory, independent of how large the planned program is.  The sweep's
+# largest size exceeds 10x the cap in on-disk program bytes.
+
+PLANNER_CAP_MB = 8.0
+SWEEP_SIZES = [40_000, 160_000, 560_000]
+TINY_SWEEP_SIZES = [3_000, 9_000]
+LEGACY_MAX = 200_000            # materializing beyond this is the point...
+SWEEP_CHUNK = 2048
+LIVE_PAGES = 2048
+PAGE_SHIFT = 6
 
 
-def run(check: bool = True):
+def synth_instrs(n: int, live_pages: int = LIVE_PAGES,
+                 page_shift: int = PAGE_SHIFT, seed: int = 0,
+                 local_frac: float = 0.9):
+    """Deterministic synthetic GC-style trace with skewed page locality.
+
+    A generator, so the streaming path never materializes the program: one
+    value per page, writes round-robin over ``live_pages``, reads mostly
+    nearby pages with a tail of far references (what makes Belady work)."""
+    psize = 1 << page_shift
+    rng = np.random.default_rng(seed)
+    for i in range(live_pages):
+        yield Instr(Op.INPUT, outs=((i * psize, psize),), imm=(i,))
+    i = live_pages
+    while i < n:
+        m = min(4096, n - i)
+        loc = rng.random(m) < local_frac
+        near = rng.integers(1, 64, m)
+        far = rng.integers(0, live_pages, m)
+        r2 = rng.integers(1, 128, m)
+        for j in range(m):
+            wp = (i + j) % live_pages
+            a = (wp - int(near[j])) % live_pages if loc[j] else int(far[j])
+            b = (wp - int(r2[j])) % live_pages
+            yield Instr(Op.ADD, outs=((wp * psize, psize),),
+                        ins=((a * psize, psize), (b * psize, psize)))
+        i += m
+
+
+def _sweep_config() -> PlanConfig:
+    return PlanConfig(num_frames=512 + 64, lookahead=1000, prefetch_pages=64)
+
+
+def run_streaming(sizes=None, check: bool = True, cap_mb: float = PLANNER_CAP_MB,
+                  legacy_max: int = LEGACY_MAX) -> list[dict]:
+    sizes = sizes or SWEEP_SIZES
+    cfg = _sweep_config()
+    rows = []
+    print(f"{'instrs':>9s} {'file (MiB)':>11s} "
+          f"{'legacy s':>9s} {'legacy MiB':>11s} "
+          f"{'stream s':>9s} {'stream MiB':>11s}")
+    for n in sizes:
+        wd = tempfile.mkdtemp(prefix="mage_table1_")
+        try:
+            vpath = os.path.join(wd, "virtual.bc")
+            w = ProgramWriter(vpath, page_shift=PAGE_SHIFT, protocol="gc",
+                              vspace_slots=LIVE_PAGES << PAGE_SHIFT,
+                              chunk_instrs=SWEEP_CHUNK)
+            w.extend(synth_instrs(n))
+            pf = w.close()
+            file_mb = os.path.getsize(vpath) / 2**20
+
+            t0 = time.perf_counter()
+            mem, rep = plan_streaming(pf, cfg, workdir=wd,
+                                      track_memory=True,
+                                      chunk_instrs=SWEEP_CHUNK)
+            stream_s = time.perf_counter() - t0
+            stream_mb = rep.peak_mem_bytes / 2**20
+
+            legacy_s = legacy_mb = None
+            if n <= legacy_max:
+                prog = Program(instrs=list(synth_instrs(n)),
+                               page_shift=PAGE_SHIFT, protocol="gc",
+                               vspace_slots=LIVE_PAGES << PAGE_SHIFT)
+                t0 = time.perf_counter()
+                _, lrep = plan(prog, cfg, track_memory=True)
+                legacy_s = time.perf_counter() - t0
+                legacy_mb = lrep.peak_mem_bytes / 2**20
+                del prog
+
+            rows.append(dict(
+                instrs=n, file_mb=file_mb, memory_prog_instrs=len(mem),
+                legacy_s=legacy_s, legacy_peak_mb=legacy_mb,
+                stream_s=stream_s, stream_peak_mb=stream_mb,
+                annotate_s=rep.annotate_s, replacement_s=rep.replacement_s,
+                scheduling_s=rep.scheduling_s))
+            fmt = lambda v, p: ("   skipped" if v is None  # noqa: E731
+                                else f"{v:{p}}")
+            print(f"{n:9d} {file_mb:11.1f} "
+                  f"{fmt(legacy_s, '9.2f')} {fmt(legacy_mb, '11.1f')} "
+                  f"{stream_s:9.2f} {stream_mb:11.1f}")
+        finally:
+            shutil.rmtree(wd, ignore_errors=True)
+    if check:
+        biggest = rows[-1]
+        assert biggest["file_mb"] >= 10 * cap_mb, \
+            f"sweep too small: {biggest['file_mb']:.0f} MiB < 10x{cap_mb} cap"
+        for r in rows:
+            assert r["stream_peak_mb"] <= cap_mb, \
+                f"planner peak {r['stream_peak_mb']:.1f} MiB over the " \
+                f"{cap_mb} MiB cap at n={r['instrs']}"
+        # sub-linear: program grows >=10x, streaming peak must stay ~flat
+        growth = rows[-1]["stream_peak_mb"] / max(rows[0]["stream_peak_mb"],
+                                                  1e-9)
+        scale = rows[-1]["instrs"] / rows[0]["instrs"]
+        assert growth < max(scale / 4, 2.0), \
+            f"streaming peak grew {growth:.1f}x over a {scale:.0f}x sweep"
+        print(f"checks OK: file {biggest['file_mb']:.0f} MiB >= "
+              f"10x{cap_mb:.0f} MiB cap; peak growth {growth:.2f}x "
+              f"over {scale:.0f}x instructions")
+    return rows
+
+
+def run(check: bool = True, cases=None) -> dict:
+    cases = cases or CASES
     rows = {}
     print(f"{'workload':12s} {'instrs':>8s} {'plan (s)':>9s} "
           f"{'peak (MiB)':>11s} {'s / 10k instr':>14s}")
-    for name, n in CASES:
+    for name, n in cases:
         r = run_workload(name, n)
         rows[name] = r
         print(f"{name:12s} {r.instructions:8d} {r.plan_s:9.3f} "
               f"{r.plan_peak_mb:11.2f} {1e4 * r.plan_s / r.instructions:14.4f}")
     # linearity: doubling the problem ~doubles planning time (within 3x)
     lin = {}
-    for name, n in [("merge", 16384), ("rsum", 512)]:
+    for name, n in [("merge", cases[0][1] * 2), ("rsum", 512)]:
+        if name not in rows:
+            continue
         r2 = run_workload(name, n)
         base = rows[name]
         ratio = (r2.plan_s / max(base.plan_s, 1e-9)) / \
@@ -36,12 +187,39 @@ def run(check: bool = True):
     if check:
         for name, ratio in lin.items():
             assert 0.3 < ratio < 3.0, f"{name} planning not ~linear: {ratio}"
-        gc_rate = rows["merge"].plan_s / rows["merge"].instructions
-        ck_rate = rows["rsum"].plan_s / rows["rsum"].instructions
-        print(f"per-instr plan cost: gc={gc_rate*1e6:.1f}us "
-              f"ckks={ck_rate*1e6:.1f}us")
+        if "merge" in rows and "rsum" in rows:
+            gc_rate = rows["merge"].plan_s / rows["merge"].instructions
+            ck_rate = rows["rsum"].plan_s / rows["rsum"].instructions
+            print(f"per-instr plan cost: gc={gc_rate*1e6:.1f}us "
+                  f"ckks={ck_rate*1e6:.1f}us")
     return rows
 
 
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--streaming", action="store_true",
+                    help="run the out-of-core planner sweep")
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sizes + no scale assertions (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write results as JSON (CI artifact)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip claim assertions")
+    args = ap.parse_args(argv)
+    check = not args.no_check and not args.tiny
+
+    results: dict = {"record_bytes": RECORD_BYTES}
+    if args.streaming or args.tiny:
+        results["streaming"] = run_streaming(
+            sizes=TINY_SWEEP_SIZES if args.tiny else None, check=check)
+    if not args.streaming:
+        rows = run(check=check, cases=TINY_CASES if args.tiny else None)
+        results["table1"] = {k: dataclasses.asdict(v) for k, v in rows.items()}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

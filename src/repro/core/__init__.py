@@ -4,14 +4,18 @@ Pipeline (paper §6): DSL trace → placement → replacement (Belady MIN) →
 scheduling (lookahead prefetch) → memory program → engine.
 """
 
-from .bytecode import DIRECTIVES, INF, Instr, Op, Program
+from .bytecode import (DIRECTIVES, INF, Instr, Op, Program, ProgramFile,
+                       ProgramWriter, write_program)
 from .dsl import Builder, Value, current_builder, trace
 from .engine import Channels, Engine, EngineStats, ProtocolDriver
+from .liveness import AnnotationReader, annotate_next_use
 from .placement import PageAllocator
-from .planner import PlanConfig, PlanReport, plan, plan_unbounded
+from .planner import (PlanConfig, PlanReport, plan, plan_streaming,
+                      plan_unbounded)
 from .replacement import (POLICIES, MinCleanPolicy, MinPolicy,
-                          ReplacementStats, plan_replacement)
-from .scheduling import ScheduleStats, plan_schedule
+                          ReplacementStats, plan_replacement,
+                          plan_replacement_file)
+from .scheduling import ScheduleStats, plan_schedule, plan_schedule_file
 from .simulator import (DeviceModel, SimResult, simulate_memory_program,
                         simulate_os_paging, simulate_unbounded)
 from .storage import AsyncIO, MemmapStorage, RamStorage
@@ -19,14 +23,16 @@ from .workers import (ProgramOptions, plan_workers, recv_into, run_workers,
                       send_value, trace_workers)
 
 __all__ = [
-    "DIRECTIVES", "INF", "Instr", "Op", "Program",
+    "DIRECTIVES", "INF", "Instr", "Op", "Program", "ProgramFile",
+    "ProgramWriter", "write_program",
     "Builder", "Value", "current_builder", "trace",
     "Channels", "Engine", "EngineStats", "ProtocolDriver",
+    "AnnotationReader", "annotate_next_use",
     "PageAllocator",
-    "PlanConfig", "PlanReport", "plan", "plan_unbounded",
+    "PlanConfig", "PlanReport", "plan", "plan_streaming", "plan_unbounded",
     "POLICIES", "MinCleanPolicy", "MinPolicy", "ReplacementStats",
-    "plan_replacement",
-    "ScheduleStats", "plan_schedule",
+    "plan_replacement", "plan_replacement_file",
+    "ScheduleStats", "plan_schedule", "plan_schedule_file",
     "DeviceModel", "SimResult", "simulate_memory_program",
     "simulate_os_paging", "simulate_unbounded",
     "AsyncIO", "MemmapStorage", "RamStorage",

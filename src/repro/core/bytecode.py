@@ -17,7 +17,12 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Iterator, Sequence
+import json
+import os
+import struct
+from typing import Iterable, Iterator, Sequence
+
+import numpy as np
 
 INF = 1 << 62  # "never used again" sentinel for next-use times
 
@@ -150,3 +155,288 @@ class Program:
 
 def strip_frees(instrs: Sequence[Instr]) -> list[Instr]:
     return [i for i in instrs if i.op != Op.FREE]
+
+
+# ---------------------------------------------------------------------------
+# On-disk chunked bytecode format (§6.1: the planner is out-of-core).
+#
+# A program file is a small self-describing header followed by fixed-width
+# 152-byte instruction records.  Fixed width is what makes every pipeline
+# stage streamable: forward and *reverse* chunk iteration are both a seek
+# plus one contiguous read, and record k of the annotation sidecar can be
+# written at offset k while scanning the program backward.
+#
+#   header:  MAGIC(8) | u32 json_len | json (page_shift, protocol, phase, ...)
+#   records: n x RECORD_WORDS little-endian int64
+#
+# Record layout (int64 words):
+#   word 0          op | n_outs<<16 | n_ins<<20 | n_imm<<24 | float_mask<<28
+#   1 .. 4          outs[0..MAX_OUTS): (addr, n_slots) pairs
+#   5 .. 12         ins[0..MAX_INS):   (addr, n_slots) pairs
+#   13 .. 18        imm values; float64 immediates are stored bit-exactly via
+#                   their IEEE-754 pattern, flagged in float_mask
+# ---------------------------------------------------------------------------
+
+FILE_MAGIC = b"MAGEBC01"
+MAX_OUTS = 2
+MAX_INS = 4
+MAX_IMM = 6
+_OUT_OFF = 1
+_IN_OFF = _OUT_OFF + 2 * MAX_OUTS
+_IMM_OFF = _IN_OFF + 2 * MAX_INS
+RECORD_WORDS = _IMM_OFF + MAX_IMM
+RECORD_BYTES = RECORD_WORDS * 8
+DEFAULT_CHUNK_INSTRS = 8192
+
+_REC_DTYPE = np.dtype("<i8")
+
+_HEADER_FIELDS = ("page_shift", "protocol", "phase", "worker", "num_workers",
+                  "vspace_slots", "num_frames", "prefetch_slots")
+
+
+def _float_to_bits(v: float) -> int:
+    return struct.unpack("<q", struct.pack("<d", v))[0]
+
+
+def _bits_to_float(x: int) -> float:
+    return struct.unpack("<d", struct.pack("<q", x))[0]
+
+
+def encode_chunk(instrs: Sequence[Instr]) -> np.ndarray:
+    """Encode instructions into an [n, RECORD_WORDS] int64 record array.
+
+    Field packing happens in plain Python lists with one bulk np.array
+    conversion at the end — per-element assignment into a NumPy array is
+    ~10x slower and this is the writer's hot path.
+    """
+    rows: list[list[int]] = []
+    for ins in instrs:
+        outs, inss, imm = ins.outs, ins.ins, ins.imm
+        if len(outs) > MAX_OUTS or len(inss) > MAX_INS or len(imm) > MAX_IMM:
+            raise ValueError(
+                f"instruction exceeds record arity "
+                f"(outs<={MAX_OUTS}, ins<={MAX_INS}, imm<={MAX_IMM}): {ins}")
+        row = [0] * RECORD_WORDS
+        k = _OUT_OFF
+        for a, n in outs:
+            row[k] = a
+            row[k + 1] = n
+            k += 2
+        k = _IN_OFF
+        for a, n in inss:
+            row[k] = a
+            row[k + 1] = n
+            k += 2
+        fmask = 0
+        for j, v in enumerate(imm):
+            if isinstance(v, float):
+                fmask |= 1 << j
+                row[_IMM_OFF + j] = _float_to_bits(v)
+            elif isinstance(v, (int, np.integer)):
+                row[_IMM_OFF + j] = int(v)
+            else:
+                raise TypeError(
+                    f"imm values must be int or float for the on-disk "
+                    f"format, got {type(v).__name__}: {ins}")
+        row[0] = (int(ins.op) | len(outs) << 16 | len(inss) << 20
+                  | len(imm) << 24 | fmask << 28)
+        rows.append(row)
+    if not rows:
+        return np.zeros((0, RECORD_WORDS), dtype=_REC_DTYPE)
+    return np.array(rows, dtype=_REC_DTYPE)
+
+
+def decode_chunk(arr: np.ndarray) -> list[Instr]:
+    """Decode an [n, RECORD_WORDS] record array back into instructions."""
+    out: list[Instr] = []
+    ops = Op._value2member_map_
+    for row in arr.tolist():              # bulk convert: python ints are fast
+        w0 = row[0]
+        n_outs = (w0 >> 16) & 0xF
+        n_ins = (w0 >> 20) & 0xF
+        n_imm = (w0 >> 24) & 0xF
+        fmask = (w0 >> 28) & 0x3F
+        out.append(Instr(
+            ops[w0 & 0xFFFF],
+            tuple((row[_OUT_OFF + 2 * j], row[_OUT_OFF + 2 * j + 1])
+                  for j in range(n_outs)),
+            tuple((row[_IN_OFF + 2 * j], row[_IN_OFF + 2 * j + 1])
+                  for j in range(n_ins)),
+            tuple(_bits_to_float(row[_IMM_OFF + j]) if fmask >> j & 1
+                  else row[_IMM_OFF + j] for j in range(n_imm))))
+    return out
+
+
+class ProgramWriter:
+    """Append-only writer for a bytecode program file.
+
+    Records are buffered and flushed as encoded chunks; ``meta`` must be
+    JSON-serializable (the planner only stores plain config dicts there).
+    """
+
+    def __init__(self, path: str | os.PathLike, *, page_shift: int,
+                 protocol: str, phase: str = "virtual", worker: int = 0,
+                 num_workers: int = 1, vspace_slots: int = 0,
+                 num_frames: int = 0, prefetch_slots: int = 0,
+                 meta: dict | None = None,
+                 chunk_instrs: int = DEFAULT_CHUNK_INSTRS):
+        self.path = os.fspath(path)
+        self.chunk_instrs = chunk_instrs
+        self.num_records = 0
+        self._buf: list[Instr] = []
+        header = {"page_shift": page_shift, "protocol": protocol,
+                  "phase": phase, "worker": worker,
+                  "num_workers": num_workers, "vspace_slots": vspace_slots,
+                  "num_frames": num_frames, "prefetch_slots": prefetch_slots,
+                  "record_words": RECORD_WORDS}
+        header["meta"] = meta or {}
+        payload = json.dumps(header).encode()
+        self._f = open(self.path, "wb")
+        self._f.write(FILE_MAGIC)
+        self._f.write(struct.pack("<I", len(payload)))
+        self._f.write(payload)
+
+    def append(self, instr: Instr) -> None:
+        self._buf.append(instr)
+        if len(self._buf) >= self.chunk_instrs:
+            self._flush()
+
+    def extend(self, instrs: Iterable[Instr]) -> None:
+        for i in instrs:
+            self.append(i)
+
+    def append_records(self, arr: np.ndarray) -> None:
+        """Pass already-encoded records through without a decode/encode."""
+        if arr.ndim != 2 or arr.shape[1] != RECORD_WORDS:
+            raise ValueError(f"bad record array shape {arr.shape}")
+        self._flush()
+        self._f.write(np.ascontiguousarray(arr, dtype=_REC_DTYPE).tobytes())
+        self.num_records += arr.shape[0]
+
+    def _flush(self) -> None:
+        if self._buf:
+            self._f.write(encode_chunk(self._buf).tobytes())
+            self.num_records += len(self._buf)
+            self._buf.clear()
+
+    def close(self) -> "ProgramFile":
+        self._flush()
+        self._f.close()
+        return ProgramFile(self.path)
+
+    def __enter__(self) -> "ProgramWriter":
+        return self
+
+    def __exit__(self, exc_type, *exc) -> None:
+        if exc_type is None:
+            self.close()
+        else:
+            self._f.close()
+
+
+class ProgramFile:
+    """A bytecode program on disk: Program-compatible header attributes plus
+    chunked forward/reverse record iteration.
+
+    The engine and every planner stage accept this in place of an in-memory
+    ``Program``; only a chunk of instructions is ever materialized.
+    """
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        with open(self.path, "rb") as f:
+            if f.read(8) != FILE_MAGIC:
+                raise ValueError(f"not a MAGE bytecode file: {self.path}")
+            (jlen,) = struct.unpack("<I", f.read(4))
+            header = json.loads(f.read(jlen))
+        self._data_off = 12 + jlen
+        data_bytes = os.path.getsize(self.path) - self._data_off
+        if header.get("record_words") != RECORD_WORDS:
+            raise ValueError(
+                f"record width mismatch: file has {header.get('record_words')}"
+                f" words, reader expects {RECORD_WORDS}")
+        if data_bytes % RECORD_BYTES:
+            raise ValueError(f"truncated bytecode file: {self.path}")
+        self.num_records = data_bytes // RECORD_BYTES
+        for k in _HEADER_FIELDS:
+            setattr(self, k, header[k])
+        self.meta: dict = header.get("meta", {})
+
+    # -- Program-compatible surface ------------------------------------------
+
+    @property
+    def page_slots(self) -> int:
+        return 1 << self.page_shift
+
+    def pages_of(self, span: Span) -> range:
+        lo = span[0] >> self.page_shift
+        hi = (span[0] + span[1] - 1) >> self.page_shift
+        return range(lo, hi + 1)
+
+    def num_vpages(self) -> int:
+        return (self.vspace_slots + self.page_slots - 1) >> self.page_shift
+
+    def __len__(self) -> int:
+        return self.num_records
+
+    # -- chunked access -------------------------------------------------------
+
+    def iter_chunks(self, chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+                    reverse: bool = False
+                    ) -> Iterator[tuple[int, np.ndarray]]:
+        """Yield (start_record_index, [m, RECORD_WORDS] array) windows."""
+        n = self.num_records
+        starts = range(0, n, chunk_instrs)
+        if reverse:
+            starts = reversed(starts)
+        with open(self.path, "rb") as f:
+            for s in starts:
+                m = min(chunk_instrs, n - s)
+                f.seek(self._data_off + s * RECORD_BYTES)
+                raw = f.read(m * RECORD_BYTES)
+                yield s, np.frombuffer(raw, dtype=_REC_DTYPE).reshape(
+                    m, RECORD_WORDS)
+
+    def iter_instrs(self, chunk_instrs: int = DEFAULT_CHUNK_INSTRS
+                    ) -> Iterator[Instr]:
+        for _, arr in self.iter_chunks(chunk_instrs):
+            yield from decode_chunk(arr)
+
+    def read_program(self) -> Program:
+        """Materialize the whole file (tests / small programs only)."""
+        prog = Program(instrs=list(self.iter_instrs()),
+                       page_shift=self.page_shift, protocol=self.protocol,
+                       phase=self.phase, worker=self.worker,
+                       num_workers=self.num_workers,
+                       vspace_slots=self.vspace_slots,
+                       num_frames=self.num_frames,
+                       prefetch_slots=self.prefetch_slots,
+                       meta=dict(self.meta))
+        return prog
+
+
+def writer_like(src: Program | ProgramFile, path: str | os.PathLike, *,
+                phase: str | None = None, num_frames: int | None = None,
+                prefetch_slots: int | None = None, meta: dict | None = None,
+                chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> ProgramWriter:
+    """A ProgramWriter inheriting header fields from ``src`` with overrides."""
+    return ProgramWriter(
+        path, page_shift=src.page_shift, protocol=src.protocol,
+        phase=src.phase if phase is None else phase,
+        worker=src.worker, num_workers=src.num_workers,
+        vspace_slots=src.vspace_slots,
+        num_frames=src.num_frames if num_frames is None else num_frames,
+        prefetch_slots=(src.prefetch_slots if prefetch_slots is None
+                        else prefetch_slots),
+        meta=dict(src.meta) if meta is None else meta,
+        chunk_instrs=chunk_instrs)
+
+
+def write_program(prog: Program, path: str | os.PathLike,
+                  strip_free: bool = False,
+                  chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> ProgramFile:
+    """Serialize an in-memory Program.  ``strip_free=True`` drops FREE
+    pseudo-instructions, matching what the planner stages expect."""
+    w = writer_like(prog, path, chunk_instrs=chunk_instrs)
+    w.extend(strip_frees(prog.instrs) if strip_free else prog.instrs)
+    return w.close()

@@ -20,7 +20,7 @@ from typing import Any, Callable
 
 import numpy as np
 
-from .bytecode import Instr, Op, Program
+from .bytecode import Instr, Op, Program, ProgramFile
 from .storage import AsyncIO, MemmapStorage, RamStorage, StorageBackend
 
 
@@ -81,7 +81,13 @@ class EngineStats:
 
 
 class Engine:
-    def __init__(self, program: Program, driver: ProtocolDriver,
+    """Interprets a memory program — in-memory ``Program`` or on-disk
+    ``ProgramFile``.  With a ProgramFile the engine is a *streaming
+    executor*: instructions are decoded chunk-by-chunk straight from the
+    file, so executing a paper-scale memory program costs O(chunk) planner-
+    side memory on top of the engine's own frames (§7.1)."""
+
+    def __init__(self, program: Program | ProgramFile, driver: ProtocolDriver,
                  storage: StorageBackend | None = None,
                  channels: Channels | None = None,
                  io_threads: int = 2,
@@ -121,13 +127,17 @@ class Engine:
         if fut is not None:
             fut.result()
 
+    def _instructions(self):
+        instrs = getattr(self.prog, "instrs", None)
+        return iter(instrs) if instrs is not None else self.prog.iter_instrs()
+
     # -- main loop ---------------------------------------------------------------
 
     def run(self, on_output: Callable[[Instr, list[np.ndarray]], None] | None = None
             ) -> EngineStats:
         drv = self.driver
         w = self.prog.worker
-        for instr in self.prog.instrs:
+        for instr in self._instructions():
             op = instr.op
             if op == Op.SWAP_IN:
                 self.stats.directives += 1

@@ -20,10 +20,13 @@ benefit from MAGE's own techniques, so it must be lean).
 from __future__ import annotations
 
 import dataclasses
+import os
+import struct
 
 import numpy as np
 
-from .bytecode import INF, Instr, Op, Program
+from .bytecode import (DEFAULT_CHUNK_INSTRS, INF, MAX_INS, MAX_OUTS,
+                       _IN_OFF, _OUT_OFF, Instr, Op, Program, ProgramFile)
 
 W_WRITE = 1       # touch includes a write
 W_READ = 2        # touch includes a read
@@ -97,6 +100,251 @@ def compute_touches(prog: Program, instrs: list[Instr]) -> Touches:
 
     num_pages = int(pg.max()) + 1 if n_t else 0
     return Touches(offs, pg, fl, next_any, next_read, num_pages)
+
+
+# ---------------------------------------------------------------------------
+# Streaming annotation (§6.3's single backward pass, out-of-core).
+#
+# ``annotate_next_use`` scans a bytecode file's chunks in *reverse* file
+# order and writes a fixed-width sidecar: for every instruction, its page
+# touches with (page, flags, next_any, next_read).  Because the records are
+# fixed width, the sidecar chunk for instructions [s, s+m) is written at
+# offset s while the program is scanned backward — the planner never holds
+# more than one chunk plus an O(live pages) carry dict.  The per-chunk math
+# is vectorized NumPy (lexsort + segmented scans), replacing the
+# per-instruction Python loop of ``compute_touches`` on the hot path.
+# ---------------------------------------------------------------------------
+
+ANN_MAGIC = b"MAGEAN01"
+ANN_TOUCH_SLOTS = MAX_INS + MAX_OUTS
+ANN_WORDS = 1 + 4 * ANN_TOUCH_SLOTS
+ANN_BYTES = ANN_WORDS * 8
+_ANN_HEADER = struct.Struct("<8s4qQ")
+
+
+_DIGEST_MIX = np.uint64(0x9E3779B97F4A7C15)   # golden-ratio odd constant
+
+
+def records_digest(acc: int, arr: np.ndarray, start: int) -> int:
+    """XOR-combine per-record hashes of a record chunk into ``acc``.
+
+    Each record hashes from its content and its *global* index only, and
+    records combine by XOR — so the digest is independent of chunk size
+    and of visit order.  That lets the reverse annotation scan and the
+    forward replacement scan (possibly using different chunk_instrs)
+    agree on it, which is how a stale sidecar is detected even when
+    record counts happen to match (see plan_replacement_file)."""
+    if arr.shape[0] == 0:
+        return acc
+    u = arr.view(np.uint64)
+    w = (np.arange(1, arr.shape[1] + 1, dtype=np.uint64) * _DIGEST_MIX) | 1
+    rows = (u * w).sum(axis=1, dtype=np.uint64)
+    rows ^= np.arange(start, start + arr.shape[0],
+                      dtype=np.uint64) * _DIGEST_MIX
+    rows *= _DIGEST_MIX                      # finalize: mix high bits down
+    rows ^= rows >> np.uint64(33)
+    return acc ^ int(np.bitwise_xor.reduce(rows))
+
+
+@dataclasses.dataclass
+class AnnotationInfo:
+    path: str
+    n_records: int
+    num_pages: int
+    max_touches: int
+    prog_crc: int = 0
+
+
+def _chunk_touches(rec: np.ndarray, shift: int, psize: int
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized page-touch extraction for one record chunk.
+
+    Returns (pages, flags, present) of shape [m, ANN_TOUCH_SLOTS], slots
+    ordered ins-then-outs with per-instruction duplicates merged into the
+    first occurrence — byte-compatible with ``compute_touches``'s dict walk.
+    """
+    m = rec.shape[0]
+    w0 = rec[:, 0]
+    ops = w0 & 0xFFFF
+    if np.any(ops == int(Op.FREE)):
+        raise ValueError(
+            "bytecode file contains FREE pseudo-instructions; write it with "
+            "write_program(..., strip_free=True) before planning")
+    n_outs = (w0 >> 16) & 0xF
+    n_ins = (w0 >> 20) & 0xF
+    S = ANN_TOUCH_SLOTS
+    pages = np.full((m, S), -1, dtype=np.int64)
+    flags = np.zeros((m, S), dtype=np.int64)
+    covered = np.zeros((m, S), dtype=np.int64)
+    present = np.zeros((m, S), dtype=bool)
+
+    def fill(slot: int, sel: np.ndarray, addr: np.ndarray, n: np.ndarray,
+             is_write: bool) -> None:
+        sel = sel & (n > 0)
+        if not sel.any():
+            return
+        pg = addr >> shift
+        hi = (addr + n - 1) >> shift
+        if np.any(sel & (hi != pg)):
+            raise ValueError(
+                "operand span straddles a page boundary; the streaming "
+                "planner requires the §6.2.2 invariant (use the in-memory "
+                "planner for straddling spans)")
+        pages[sel, slot] = pg[sel]
+        flags[sel, slot] = W_WRITE if is_write else W_READ
+        if is_write:
+            covered[sel, slot] = n[sel]
+        present[:, slot] |= sel
+
+    for j in range(MAX_INS):
+        fill(j, n_ins > j, rec[:, _IN_OFF + 2 * j],
+             rec[:, _IN_OFF + 2 * j + 1], False)
+    for j in range(MAX_OUTS):
+        fill(MAX_INS + j, n_outs > j, rec[:, _OUT_OFF + 2 * j],
+             rec[:, _OUT_OFF + 2 * j + 1], True)
+
+    # merge duplicate pages within an instruction into the first slot
+    for j in range(1, S):
+        un = present[:, j].copy()
+        if not un.any():
+            continue
+        for k in range(j):
+            mm = un & present[:, k] & (pages[:, j] == pages[:, k])
+            if mm.any():
+                flags[mm, k] |= flags[mm, j]
+                covered[mm, k] += covered[mm, j]
+                un &= ~mm
+        present[:, j] = un
+
+    fw = (present & ((flags & W_WRITE) != 0) & ((flags & W_READ) == 0)
+          & (covered >= psize))
+    flags[fw] |= W_FULL_WRITE
+    return pages, flags, present
+
+
+def annotate_next_use(pf: ProgramFile, ann_path: str | os.PathLike,
+                      chunk_instrs: int = DEFAULT_CHUNK_INSTRS
+                      ) -> AnnotationInfo:
+    """The streaming backward pass: write the next-use sidecar for ``pf``."""
+    ann_path = os.fspath(ann_path)
+    shift = pf.page_shift
+    psize = pf.page_slots
+    carry_any: dict[int, int] = {}
+    carry_read: dict[int, int] = {}
+    num_pages = 0
+    max_touches = 0
+    crc = 0
+    with open(ann_path, "wb") as f:
+        f.write(_ANN_HEADER.pack(ANN_MAGIC, 0, ANN_WORDS, 0, 0, 0))
+        f.truncate(_ANN_HEADER.size + pf.num_records * ANN_BYTES)
+        for start, rec in pf.iter_chunks(chunk_instrs, reverse=True):
+            m = rec.shape[0]
+            crc = records_digest(crc, rec, start)
+            pages, flags, present = _chunk_touches(rec, shift, psize)
+            counts = present.sum(axis=1).astype(np.int64)
+            rows, slots = np.nonzero(present)       # row-major: touch order
+            tl_page = pages[rows, slots]
+            tl_flags = flags[rows, slots]
+            gi = start + rows
+            nt = len(rows)
+            ann = np.zeros((m, ANN_WORDS), dtype=np.int64)
+            ann[:, 0] = counts
+            if nt:
+                order = np.lexsort((gi, tl_page))
+                spage, sgi = tl_page[order], gi[order]
+                sread = (tl_flags[order] & W_READ) != 0
+                seg_start = np.empty(nt, dtype=bool)
+                seg_start[0] = True
+                seg_start[1:] = spage[1:] != spage[:-1]
+                seg_id = np.cumsum(seg_start) - 1
+                seg_first = np.where(seg_start)[0]
+                upages = spage[seg_first]
+
+                has_next = np.zeros(nt, dtype=bool)
+                has_next[:-1] = spage[:-1] == spage[1:]
+                nxt_in_chunk = np.empty(nt, dtype=np.int64)
+                nxt_in_chunk[:-1] = sgi[1:]
+                nxt_in_chunk[-1] = INF
+                c_any = np.fromiter(
+                    (carry_any.get(int(p), INF) for p in upages),
+                    np.int64, len(upages))
+                s_any = np.where(has_next, nxt_in_chunk, c_any[seg_id])
+
+                # suffix-min of read positions within each page segment
+                sent = nt
+                idx = np.arange(nt, dtype=np.int64)
+                rd_pos = np.where(sread, idx, sent)
+                big = nt + 2
+                key = seg_id * big + rd_pos
+                incl = np.minimum.accumulate(key[::-1])[::-1] - seg_id * big
+                excl = np.full(nt, sent, dtype=np.int64)
+                excl[:-1] = np.where(has_next[:-1], incl[1:], sent)
+                c_read = np.fromiter(
+                    (carry_read.get(int(p), INF) for p in upages),
+                    np.int64, len(upages))
+                s_read = np.where(excl < sent,
+                                  sgi[np.minimum(excl, nt - 1)],
+                                  c_read[seg_id])
+
+                t_any = np.empty(nt, dtype=np.int64)
+                t_read = np.empty(nt, dtype=np.int64)
+                t_any[order] = s_any
+                t_read[order] = s_read
+
+                # carries: this chunk is *earlier* in the program than
+                # everything processed so far
+                first_gi = sgi[seg_first]
+                first_rd = incl[seg_first]
+                for ui in range(len(upages)):
+                    p = int(upages[ui])
+                    carry_any[p] = int(first_gi[ui])
+                    if first_rd[ui] < sent:
+                        carry_read[p] = int(sgi[first_rd[ui]])
+
+                row_start = np.zeros(m, dtype=np.int64)
+                np.cumsum(counts[:-1], out=row_start[1:])
+                ordinal = np.arange(nt, dtype=np.int64) - \
+                    np.repeat(row_start, counts)
+                flat = ann.reshape(-1)
+                base = rows * ANN_WORDS + 1 + ordinal * 4
+                flat[base] = tl_page
+                flat[base + 1] = tl_flags
+                flat[base + 2] = t_any
+                flat[base + 3] = t_read
+                num_pages = max(num_pages, int(tl_page.max()) + 1)
+                max_touches = max(max_touches, int(counts.max()))
+            f.seek(_ANN_HEADER.size + start * ANN_BYTES)
+            f.write(ann.tobytes())
+        f.seek(0)
+        f.write(_ANN_HEADER.pack(ANN_MAGIC, pf.num_records, ANN_WORDS,
+                                 num_pages, max_touches, crc))
+    return AnnotationInfo(ann_path, pf.num_records, num_pages, max_touches,
+                          crc)
+
+
+class AnnotationReader:
+    """Forward chunk reader for the next-use sidecar."""
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        with open(self.path, "rb") as f:
+            magic, n, words, num_pages, max_touches, crc = \
+                _ANN_HEADER.unpack(f.read(_ANN_HEADER.size))
+        if magic != ANN_MAGIC or words != ANN_WORDS:
+            raise ValueError(f"not a MAGE annotation file: {self.path}")
+        self.n_records = n
+        self.num_pages = num_pages
+        self.max_touches = max_touches
+        self.prog_crc = crc
+
+    def iter_chunks(self, chunk_instrs: int = DEFAULT_CHUNK_INSTRS):
+        with open(self.path, "rb") as f:
+            for s in range(0, self.n_records, chunk_instrs):
+                m = min(chunk_instrs, self.n_records - s)
+                f.seek(_ANN_HEADER.size + s * ANN_BYTES)
+                raw = f.read(m * ANN_BYTES)
+                yield s, np.frombuffer(raw, dtype=np.int64).reshape(
+                    m, ANN_WORDS)
 
 
 def max_pages_per_instr(t: Touches) -> int:

@@ -3,17 +3,31 @@
 ``plan()`` turns a virtual-address bytecode into a memory program for a given
 physical memory budget; ``PlanReport`` captures the Table-1 metrics (planning
 time, planner peak memory) plus per-stage statistics.
+
+Two execution modes share the same stage cores (so their outputs are
+instruction-identical):
+
+  * ``plan()``           — in-memory, for small programs and tests;
+  * ``plan_streaming()`` — out-of-core: every stage reads the previous
+    stage's bytecode file chunk-by-chunk and appends to the next, so planner
+    peak memory is O(chunk + frames + lookahead) regardless of program
+    length (the paper's Table-1 claim).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
+import shutil
+import tempfile
 import time
 import tracemalloc
 
-from .bytecode import Program
-from .replacement import ReplacementStats, plan_replacement
-from .scheduling import ScheduleStats, plan_schedule
+from .bytecode import Program, ProgramFile, write_program
+from .liveness import annotate_next_use
+from .replacement import (ReplacementStats, plan_replacement,
+                          plan_replacement_file)
+from .scheduling import ScheduleStats, plan_schedule, plan_schedule_file
 
 
 @dataclasses.dataclass
@@ -34,6 +48,7 @@ class PlanConfig:
 @dataclasses.dataclass
 class PlanReport:
     placement_s: float = 0.0        # time spent tracing the DSL (if measured)
+    annotate_s: float = 0.0         # streaming-only: backward next-use pass
     replacement_s: float = 0.0
     scheduling_s: float = 0.0
     peak_mem_bytes: int = 0
@@ -42,7 +57,8 @@ class PlanReport:
 
     @property
     def total_s(self) -> float:
-        return self.placement_s + self.replacement_s + self.scheduling_s
+        return (self.placement_s + self.annotate_s + self.replacement_s
+                + self.scheduling_s)
 
 
 def plan(virtual_prog: Program, cfg: PlanConfig,
@@ -74,3 +90,82 @@ def plan(virtual_prog: Program, cfg: PlanConfig,
 def plan_unbounded(virtual_prog: Program) -> Program:
     """The Unbounded scenario: no budget, engine runs the virtual program."""
     return virtual_prog
+
+
+def plan_streaming(virtual: Program | ProgramFile, cfg: PlanConfig,
+                   out_path: str | os.PathLike | None = None,
+                   workdir: str | os.PathLike | None = None,
+                   track_memory: bool = False,
+                   chunk_instrs: int = 8192,
+                   keep_intermediates: bool = False,
+                   ) -> tuple[ProgramFile, PlanReport]:
+    """Out-of-core planning: file-to-file stages, bounded planner memory.
+
+    ``virtual`` is either an in-memory 'virtual' Program (serialized first,
+    FREEs stripped) or an already-written 'virtual' ProgramFile.  Returns
+    the memory program as a ProgramFile the streaming engine can execute
+    directly.  Output is instruction-identical to ``plan()``.
+
+    The caller owns the returned file: with ``workdir=None`` a fresh
+    temporary directory is created to hold it (intermediates are always
+    cleaned up, and the directory itself is removed if planning fails),
+    but after a successful call it is the caller's to delete when done —
+    the memory program can be far larger than RAM, so nothing here can
+    decide its lifetime.  Pass ``out_path`` to place the result somewhere
+    you already manage.
+    """
+    report = PlanReport()
+    if cfg.prefetch_pages >= cfg.num_frames:
+        raise ValueError("prefetch buffer must be smaller than the budget")
+    made_workdir = workdir is None
+    if made_workdir:
+        workdir = tempfile.mkdtemp(prefix="mage_plan_")
+    else:
+        os.makedirs(workdir, exist_ok=True)
+    vpath = os.path.join(workdir, "virtual.bc")
+    apath = os.path.join(workdir, "virtual.ann")
+    ppath = os.path.join(workdir, "physical.bc")
+    mpath = os.fspath(out_path) if out_path is not None \
+        else os.path.join(workdir, "memory.bc")
+
+    if track_memory:
+        tracemalloc.start()
+    wrote_virtual = False
+    done = False
+    try:
+        if isinstance(virtual, Program):
+            virtual = write_program(virtual, vpath, strip_free=True,
+                                    chunk_instrs=chunk_instrs)
+            wrote_virtual = True
+        assert virtual.phase == "virtual", virtual.phase
+
+        t0 = time.perf_counter()
+        ann = annotate_next_use(virtual, apath, chunk_instrs)
+        t1 = time.perf_counter()
+        phys, rstats = plan_replacement_file(
+            virtual, ppath, cfg.replacement_frames, policy=cfg.policy,
+            annotations=ann.path, chunk_instrs=chunk_instrs)
+        t2 = time.perf_counter()
+        mem, sstats = plan_schedule_file(
+            phys, mpath, cfg.lookahead, cfg.prefetch_pages,
+            swap_bypass=cfg.swap_bypass, chunk_instrs=chunk_instrs,
+            meta={**dict(virtual.meta), "plan": dataclasses.asdict(cfg)})
+        t3 = time.perf_counter()
+        done = True
+    finally:
+        if track_memory:
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            report.peak_mem_bytes = peak
+        if not done and made_workdir:
+            shutil.rmtree(workdir, ignore_errors=True)
+        elif not keep_intermediates:
+            for p in ([vpath] if wrote_virtual else []) + [apath, ppath]:
+                if os.path.exists(p):
+                    os.unlink(p)
+    report.annotate_s = t1 - t0
+    report.replacement_s = t2 - t1
+    report.scheduling_s = t3 - t2
+    report.replacement = rstats
+    report.schedule = sstats
+    return mem, report

@@ -20,10 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import os
+from typing import Callable, Iterable, Iterator
 
-from .bytecode import INF, Instr, Op, Program, strip_frees
-from .liveness import W_FULL_WRITE, W_WRITE, compute_touches, \
-    max_pages_per_instr
+from .bytecode import (DEFAULT_CHUNK_INSTRS, INF, Instr, Op, Program,
+                       ProgramFile, decode_chunk, strip_frees, writer_like)
+from .liveness import (W_FULL_WRITE, W_WRITE, AnnotationReader, Touches,
+                       annotate_next_use, compute_touches,
+                       max_pages_per_instr, records_digest)
 
 
 class EvictionPolicy:
@@ -53,6 +57,14 @@ class _HeapPolicy(EvictionPolicy):
     def _push(self, page: int, key: int) -> None:
         self._cur[page] = key
         heapq.heappush(self._heap, (self._sign * key, page))
+        if len(self._heap) > 64 + 4 * len(self._cur):
+            # compact stale lazy-deletion entries: without this the heap
+            # grows with total touches, breaking the planner's O(frames)
+            # memory bound.  Rebuilding from _cur keeps exactly the valid
+            # entries; duplicates later re-pushed from an evict stash are
+            # harmless (they turn stale once the page leaves _cur).
+            self._heap = [(self._sign * k, p) for p, k in self._cur.items()]
+            heapq.heapify(self._heap)
 
     def touch(self, page: int, next_use: int, now: int) -> None:
         self._push(page, next_use)
@@ -199,32 +211,24 @@ class ReplacementStats:
         return self.swap_ins + self.swap_outs
 
 
-def plan_replacement(prog: Program, num_frames: int,
-                     policy: str | EvictionPolicy = "min",
-                     ) -> tuple[Program, ReplacementStats]:
-    """Stage 2: rewrite a 'virtual' program into a 'physical' one."""
-    assert prog.phase == "virtual", prog.phase
-    instrs = strip_frees(prog.instrs)
-    touches = compute_touches(prog, instrs)
-    need = max_pages_per_instr(touches)
-    if num_frames < need:
-        raise ValueError(
-            f"num_frames={num_frames} < {need} pages touched by one "
-            f"instruction; budget too small for this chunking")
-    pol = POLICIES[policy]() if isinstance(policy, str) else policy
+# One instruction plus its annotated page touches, in touch order:
+# (instr, [(page, flags, next_any, next_read), ...]).  Both the in-memory
+# and the file-streaming paths feed this shape to the same transducer core,
+# which is what makes their outputs instruction-identical by construction.
+_TouchRow = tuple[int, int, int, int]
+_AnnotatedInstr = tuple[Instr, list[_TouchRow]]
 
-    shift = prog.page_shift
-    psize = prog.page_slots
+
+def _replacement_core(items: Iterable[_AnnotatedInstr], num_frames: int,
+                      pol: EvictionPolicy, shift: int, psize: int,
+                      emit: Callable[[Instr], None],
+                      stats: ReplacementStats) -> None:
+    """Streaming Belady transducer: O(frames + pages-on-storage) state."""
     page_table: dict[int, int] = {}          # vpage -> frame
     free_frames = list(range(num_frames - 1, -1, -1))
     dirty: set[int] = set()
     stored: set[int] = set()                 # storage holds current content
-    cur_next_read: dict[int, int] = {}       # valid at/after a page's last touch
-    stats = ReplacementStats(num_frames=num_frames,
-                             num_vpages=touches.num_pages,
-                             instructions=len(instrs),
-                             policy=getattr(pol, "name", str(policy)))
-    out: list[Instr] = []
+    cur_next_read: dict[int, int] = {}       # resident pages only
 
     def acquire_frame(pinned: set[int]) -> int:
         if free_frames:
@@ -233,15 +237,17 @@ def plan_replacement(prog: Program, num_frames: int,
         frame = page_table.pop(victim)
         if victim in dirty:
             dirty.discard(victim)
-            if cur_next_read.get(victim, INF) < INF:
-                out.append(Instr(Op.SWAP_OUT,
-                                 ins=((frame << shift, psize),),
-                                 imm=(victim,)))
+            if cur_next_read.pop(victim, INF) < INF:
+                emit(Instr(Op.SWAP_OUT,
+                           ins=((frame << shift, psize),),
+                           imm=(victim,)))
                 stats.swap_outs += 1
                 stored.add(victim)
             else:
                 stats.dropped_dirty += 1
                 stored.discard(victim)
+        else:
+            cur_next_read.pop(victim, None)
         # clean victim: storage copy (if any) is already current
         return frame
 
@@ -250,15 +256,9 @@ def plan_replacement(prog: Program, num_frames: int,
         vp = addr >> shift
         return ((page_table[vp] << shift) + (addr - (vp << shift)), n)
 
-    offs, pg, fl = touches.offsets, touches.pages, touches.flags
-    nxt, nxr = touches.next_any, touches.next_read
-
-    for i, ins in enumerate(instrs):
-        row = range(int(offs[i]), int(offs[i + 1]))
-        pinned = {int(pg[k]) for k in row}
-        for k in row:
-            p = int(pg[k])
-            f = int(fl[k])
+    for i, (ins, row) in enumerate(items):
+        pinned = {p for p, _, _, _ in row}
+        for p, f, nxt, nxr in row:
             if p not in page_table:
                 frame = acquire_frame(pinned)
                 if p in stored:
@@ -266,24 +266,114 @@ def plan_replacement(prog: Program, num_frames: int,
                         stored.discard(p)
                         stats.elided_swap_ins += 1
                     else:
-                        out.append(Instr(Op.SWAP_IN,
-                                         outs=((frame << shift, psize),),
-                                         imm=(p,)))
+                        emit(Instr(Op.SWAP_IN,
+                                   outs=((frame << shift, psize),),
+                                   imm=(p,)))
                         stats.swap_ins += 1
                 page_table[p] = frame
             if f & W_WRITE:
                 dirty.add(p)
-            cur_next_read[p] = int(nxr[k])
-            pol.touch(p, int(nxt[k]), i)
-        out.append(Instr(ins.op,
-                         tuple(translate(s) for s in ins.outs),
-                         tuple(translate(s) for s in ins.ins),
-                         ins.imm))
+            cur_next_read[p] = nxr
+            pol.touch(p, nxt, i)
+        emit(Instr(ins.op,
+                   tuple(translate(s) for s in ins.outs),
+                   tuple(translate(s) for s in ins.ins),
+                   ins.imm))
+        stats.instructions += 1
 
+
+def _items_from_touches(instrs: list[Instr], t: Touches
+                        ) -> Iterator[_AnnotatedInstr]:
+    offs, pg, fl = t.offsets, t.pages, t.flags
+    nxt, nxr = t.next_any, t.next_read
+    for i, ins in enumerate(instrs):
+        yield ins, [(int(pg[k]), int(fl[k]), int(nxt[k]), int(nxr[k]))
+                    for k in range(int(offs[i]), int(offs[i + 1]))]
+
+
+def _items_from_files(pf: ProgramFile, ann: AnnotationReader,
+                      chunk_instrs: int) -> Iterator[_AnnotatedInstr]:
+    crc = 0
+    for (s, rec), (s2, arr) in zip(pf.iter_chunks(chunk_instrs),
+                                   ann.iter_chunks(chunk_instrs)):
+        assert s == s2, "program/annotation chunking out of sync"
+        crc = records_digest(crc, rec, s)
+        for r, ins in enumerate(decode_chunk(rec)):
+            yield ins, [(int(arr[r, 1 + 4 * j]), int(arr[r, 2 + 4 * j]),
+                         int(arr[r, 3 + 4 * j]), int(arr[r, 4 + 4 * j]))
+                        for j in range(int(arr[r, 0]))]
+    if crc != ann.prog_crc:
+        raise ValueError(
+            "annotation sidecar does not match this program file "
+            "(content checksum mismatch); regenerate it with "
+            "annotate_next_use")
+
+
+def _check_budget(num_frames: int, need: int) -> None:
+    if num_frames < need:
+        raise ValueError(
+            f"num_frames={num_frames} < {need} pages touched by one "
+            f"instruction; budget too small for this chunking")
+
+
+def plan_replacement(prog: Program, num_frames: int,
+                     policy: str | EvictionPolicy = "min",
+                     ) -> tuple[Program, ReplacementStats]:
+    """Stage 2: rewrite a 'virtual' program into a 'physical' one."""
+    assert prog.phase == "virtual", prog.phase
+    instrs = strip_frees(prog.instrs)
+    touches = compute_touches(prog, instrs)
+    _check_budget(num_frames, max_pages_per_instr(touches))
+    pol = POLICIES[policy]() if isinstance(policy, str) else policy
+    stats = ReplacementStats(num_frames=num_frames,
+                             num_vpages=touches.num_pages,
+                             policy=getattr(pol, "name", str(policy)))
+    out: list[Instr] = []
+    _replacement_core(_items_from_touches(instrs, touches), num_frames, pol,
+                      prog.page_shift, prog.page_slots, out.append, stats)
     res = Program(
-        instrs=out, page_shift=shift, protocol=prog.protocol,
+        instrs=out, page_shift=prog.page_shift, protocol=prog.protocol,
         phase="physical", worker=prog.worker, num_workers=prog.num_workers,
         vspace_slots=prog.vspace_slots, num_frames=num_frames,
         meta=dict(prog.meta),
     )
     return res, stats
+
+
+def plan_replacement_file(pf: ProgramFile, out_path: str | os.PathLike,
+                          num_frames: int,
+                          policy: str | EvictionPolicy = "min",
+                          annotations: AnnotationReader | str | None = None,
+                          chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+                          ) -> tuple[ProgramFile, ReplacementStats]:
+    """Stage 2, out-of-core: stream a 'virtual' bytecode file (plus its
+    next-use sidecar) into a 'physical' bytecode file."""
+    assert pf.phase == "virtual", pf.phase
+    out_path = os.fspath(out_path)
+    own_ann = annotations is None
+    if own_ann:
+        annotations = annotate_next_use(pf, out_path + ".ann",
+                                        chunk_instrs).path
+    if not isinstance(annotations, AnnotationReader):
+        annotations = AnnotationReader(annotations)
+    try:
+        if annotations.n_records != pf.num_records:
+            raise ValueError(
+                f"annotation sidecar has {annotations.n_records} records "
+                f"but program has {pf.num_records}; stale sidecar?")
+        _check_budget(num_frames, annotations.max_touches)
+        pol = POLICIES[policy]() if isinstance(policy, str) else policy
+        stats = ReplacementStats(num_frames=num_frames,
+                                 num_vpages=annotations.num_pages,
+                                 policy=getattr(pol, "name", str(policy)))
+        with writer_like(pf, out_path, phase="physical",
+                         num_frames=num_frames,
+                         chunk_instrs=chunk_instrs) as w:
+            _replacement_core(
+                _items_from_files(pf, annotations, chunk_instrs),
+                num_frames, pol, pf.page_shift, pf.page_slots,
+                w.append, stats)
+    finally:
+        if own_ann and os.path.exists(annotations.path):
+            os.unlink(annotations.path)
+    return ProgramFile(out_path), stats

@@ -25,9 +25,12 @@ pipeline (planner.py) owns that arithmetic.
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import OrderedDict, deque
+from typing import Callable, Iterable
 
-from .bytecode import Instr, Op, Program
+from .bytecode import (DEFAULT_CHUNK_INSTRS, Instr, Op, Program, ProgramFile,
+                       writer_like)
 
 
 @dataclasses.dataclass
@@ -49,37 +52,43 @@ class _PendingWrite:
     order: int
 
 
-def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
-                  swap_bypass: bool = False,
-                  write_reserve: int | None = None
-                  ) -> tuple[Program, ScheduleStats]:
-    assert prog.phase == "physical", prog.phase
-    stats = ScheduleStats(lookahead=lookahead, prefetch_pages=prefetch_pages)
-    B = prefetch_pages
-    # Reserve a slice of the buffer for eviction traffic: if prefetched
-    # reads may occupy every slot, each eviction degrades to a synchronous
-    # (blocking) swap-out — measured to dominate MAGE's stall time on
-    # sort/merge (see EXPERIMENTS.md §Perf).
-    reserve = (max(B // 4, 1) if write_reserve is None else write_reserve) \
-        if B > 1 else 0
-    if B <= 0:  # degenerate: scheduling disabled, keep sync directives
-        out_prog = dataclasses.replace(prog, phase="memory", prefetch_slots=0)
-        return out_prog, stats
+def _schedule_core(src: Iterable[Instr], lookahead: int, B: int,
+                   swap_bypass: bool, reserve: int,
+                   emit: Callable[[Instr], None],
+                   stats: ScheduleStats) -> None:
+    """Streaming prefetch transducer: O(lookahead + B) state.
 
-    src = prog.instrs
-    # Pre-scan: upcoming swap-ins in stream order.  A read of page p must
-    # not be issued before p's latest preceding SWAP_OUT site (the page is
-    # not on storage yet before that point).
+    Instead of pre-scanning the whole program for upcoming swap-ins (which
+    would materialize it), the core keeps a sliding window of the next
+    ``lookahead`` instructions — by construction the only ones an
+    ISSUE_SWAP_IN may be hoisted across — and discovers reads as the window
+    advances.  A read of page p must not be issued before p's latest
+    preceding SWAP_OUT site (the page is not on storage yet before that
+    point); ``last_out`` tracks those sites as they are scanned.
+    """
+    it = iter(src)
+    window: deque[Instr] = deque()          # instructions [pos, scanned)
+    reads: deque[tuple[int, int, tuple, int]] = deque()
     last_out: dict[int, int] = {}
-    reads_list = []
-    for pos, ins in enumerate(src):
-        if ins.op == Op.SWAP_OUT:
-            last_out[ins.imm[0]] = pos
-        elif ins.op == Op.SWAP_IN:
-            p = ins.imm[0]
-            reads_list.append((pos, p, ins.outs[0],
-                               last_out.get(p, -1) + 1))
-    reads = deque(reads_list)
+    scanned = 0
+    exhausted = False
+
+    def scan_to(limit: int) -> None:
+        # ensure every position <= limit has been scanned into the window
+        nonlocal scanned, exhausted
+        while not exhausted and scanned <= limit:
+            nxt = next(it, None)
+            if nxt is None:
+                exhausted = True
+                return
+            if nxt.op == Op.SWAP_OUT:
+                last_out[nxt.imm[0]] = scanned
+            elif nxt.op == Op.SWAP_IN:
+                p = nxt.imm[0]
+                reads.append((scanned, p, nxt.outs[0],
+                              last_out.get(p, -1) + 1))
+            window.append(nxt)
+            scanned += 1
 
     free_slots = list(range(B - 1, -1, -1))
     # issued reads keyed by their USE SITE position (unique — a page can
@@ -88,14 +97,13 @@ def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
     issue_order: list[int] = []                # use_pos, youngest last
     writes: OrderedDict[int, _PendingWrite] = OrderedDict()  # vpage -> pending
     bypass_ready: dict[int, int] = {}          # use_pos -> slot
-    out: list[Instr] = []
     wcount = 0
 
     def finish_oldest_write() -> bool:
         if not writes:
             return False
         vp, pw = writes.popitem(last=False)
-        out.append(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
+        emit(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
         free_slots.append(pw.slot)
         stats.forced_write_finishes += 1
         return True
@@ -108,7 +116,7 @@ def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
             if up in read_slot:
                 slot = read_slot.pop(up)
                 # engine must still drain the in-flight DMA before reuse:
-                out.append(Instr(Op.FINISH_SWAP_OUT, imm=(slot,)))  # wait
+                emit(Instr(Op.FINISH_SWAP_OUT, imm=(slot,)))  # wait
                 free_slots.append(slot)
                 stats.canceled_prefetches += 1
                 return True
@@ -141,20 +149,25 @@ def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
                     stats.bypass_hits += 1
                     reads.popleft()
                     continue
-                out.append(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
+                emit(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
                 free_slots.append(pw.slot)
                 del writes[vpage]
                 stats.forced_write_finishes += 1
             slot = get_slot(allow_cancel=False)
             if slot is None:
                 break  # buffer full of useful work; retry next step
-            out.append(Instr(Op.ISSUE_SWAP_IN, imm=(vpage, slot)))
+            emit(Instr(Op.ISSUE_SWAP_IN, imm=(vpage, slot)))
             read_slot[use_pos] = slot
             issue_order.append(use_pos)
             stats.prefetched += 1
             reads.popleft()
 
-    for pos, ins in enumerate(src):
+    pos = 0
+    while True:
+        scan_to(pos + lookahead)
+        if not window:
+            break
+        ins = window.popleft()
         try_issue_read(pos)
         if ins.op == Op.SWAP_IN:
             vpage = ins.imm[0]
@@ -163,27 +176,27 @@ def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
             if pos in bypass_ready:
                 slot = bypass_ready.pop(pos)
                 # data already sits in the buffer: plain copy, no wait
-                out.append(Instr(Op.FINISH_SWAP_IN, outs=ins.outs,
-                                 imm=(vpage, slot, 1)))
+                emit(Instr(Op.FINISH_SWAP_IN, outs=ins.outs,
+                           imm=(vpage, slot, 1)))
                 free_slots.append(slot)
             elif pos in read_slot:
                 slot = read_slot.pop(pos)
-                out.append(Instr(Op.FINISH_SWAP_IN, outs=ins.outs,
-                                 imm=(vpage, slot, 0)))
+                emit(Instr(Op.FINISH_SWAP_IN, outs=ins.outs,
+                           imm=(vpage, slot, 0)))
                 free_slots.append(slot)
             else:
                 # sync fallback at the use site
                 if vpage in writes:
                     pw = writes.pop(vpage)
-                    out.append(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
+                    emit(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
                     free_slots.append(pw.slot)
                     stats.forced_write_finishes += 1
                 slot = get_slot(allow_cancel=True)
                 if slot is None:
                     raise RuntimeError("prefetch buffer unusable (B too small)")
-                out.append(Instr(Op.ISSUE_SWAP_IN, imm=(vpage, slot)))
-                out.append(Instr(Op.FINISH_SWAP_IN, outs=ins.outs,
-                                 imm=(vpage, slot, 0)))
+                emit(Instr(Op.ISSUE_SWAP_IN, imm=(vpage, slot)))
+                emit(Instr(Op.FINISH_SWAP_IN, outs=ins.outs,
+                           imm=(vpage, slot, 0)))
                 free_slots.append(slot)
                 stats.sync_fallbacks += 1
         elif ins.op == Op.SWAP_OUT:
@@ -192,20 +205,71 @@ def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
             # prefetched read for an eviction — degrade to sync swap-out.
             slot = get_slot(allow_cancel=False)
             if slot is None:
-                out.append(ins)  # degraded: synchronous swap-out
+                emit(ins)  # degraded: synchronous swap-out
                 stats.swap_outs += 1
+                pos += 1
                 continue
-            out.append(Instr(Op.COPY_OUT, ins=ins.ins, imm=(slot,)))
-            out.append(Instr(Op.ISSUE_SWAP_OUT, imm=(vpage, slot)))
+            emit(Instr(Op.COPY_OUT, ins=ins.ins, imm=(slot,)))
+            emit(Instr(Op.ISSUE_SWAP_OUT, imm=(vpage, slot)))
             writes[vpage] = _PendingWrite(vpage, slot, wcount)
             wcount += 1
             stats.swap_outs += 1
         else:
-            out.append(ins)
+            emit(ins)
+        pos += 1
 
     for vp, pw in writes.items():
-        out.append(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
+        emit(Instr(Op.FINISH_SWAP_OUT, imm=(pw.slot,)))
 
+
+def _reserve_for(B: int, write_reserve: int | None) -> int:
+    # Reserve a slice of the buffer for eviction traffic: if prefetched
+    # reads may occupy every slot, each eviction degrades to a synchronous
+    # (blocking) swap-out — measured to dominate MAGE's stall time on
+    # sort/merge (see EXPERIMENTS.md §Perf).
+    return (max(B // 4, 1) if write_reserve is None else write_reserve) \
+        if B > 1 else 0
+
+
+def plan_schedule(prog: Program, lookahead: int, prefetch_pages: int,
+                  swap_bypass: bool = False,
+                  write_reserve: int | None = None
+                  ) -> tuple[Program, ScheduleStats]:
+    assert prog.phase == "physical", prog.phase
+    stats = ScheduleStats(lookahead=lookahead, prefetch_pages=prefetch_pages)
+    B = prefetch_pages
+    if B <= 0:  # degenerate: scheduling disabled, keep sync directives
+        out_prog = dataclasses.replace(prog, phase="memory", prefetch_slots=0)
+        return out_prog, stats
+    out: list[Instr] = []
+    _schedule_core(prog.instrs, lookahead, B, swap_bypass,
+                   _reserve_for(B, write_reserve), out.append, stats)
     res = dataclasses.replace(prog, instrs=out, phase="memory",
                               prefetch_slots=B)
     return res, stats
+
+
+def plan_schedule_file(pf: ProgramFile, out_path: str | os.PathLike,
+                       lookahead: int, prefetch_pages: int,
+                       swap_bypass: bool = False,
+                       write_reserve: int | None = None,
+                       chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+                       meta: dict | None = None,
+                       ) -> tuple[ProgramFile, ScheduleStats]:
+    """Stage 3, out-of-core: stream a 'physical' bytecode file into the
+    final memory-program file, holding O(lookahead + B) state."""
+    assert pf.phase == "physical", pf.phase
+    stats = ScheduleStats(lookahead=lookahead, prefetch_pages=prefetch_pages)
+    B = prefetch_pages
+    with writer_like(pf, out_path, phase="memory", prefetch_slots=max(B, 0),
+                     meta=meta, chunk_instrs=chunk_instrs) as w:
+        if B <= 0:
+            # records are unchanged; copy raw chunks instead of paying the
+            # per-instruction decode/encode cost just to rewrite the header
+            for _, arr in pf.iter_chunks(chunk_instrs):
+                w.append_records(arr)
+        else:
+            _schedule_core(pf.iter_instrs(chunk_instrs), lookahead, B,
+                           swap_bypass, _reserve_for(B, write_reserve),
+                           w.append, stats)
+    return ProgramFile(os.fspath(out_path)), stats

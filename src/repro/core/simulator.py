@@ -24,8 +24,8 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable
 
-from .bytecode import INF, Instr, Op, Program, strip_frees
-from .liveness import W_FULL_WRITE, W_WRITE, compute_touches
+from .bytecode import Instr, Op, Program, strip_frees
+from .liveness import W_WRITE, compute_touches
 
 
 @dataclasses.dataclass

@@ -10,16 +10,18 @@ are generated in isolation (and could be generated in parallel).
 
 from __future__ import annotations
 
+import concurrent.futures as cf
 import dataclasses
+import os
 import threading
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
-from .bytecode import Op, Program
-from .dsl import Builder, Value, trace
+from .bytecode import Op, Program, ProgramFile
+from .dsl import Value, trace
 from .engine import Channels, Engine, ProtocolDriver
-from .planner import PlanConfig, PlanReport, plan
+from .planner import PlanConfig, PlanReport, plan, plan_streaming
 
 
 @dataclasses.dataclass
@@ -59,16 +61,33 @@ def trace_workers(fn: Callable[[ProgramOptions], None], *, protocol: str,
 
 
 def plan_workers(progs: Sequence[Program], cfg: PlanConfig,
-                 ) -> tuple[list[Program], list[PlanReport]]:
-    out, reports = [], []
-    for p in progs:
-        mp, rep = plan(p, cfg)
-        out.append(mp)
-        reports.append(rep)
-    return out, reports
+                 parallel: bool = False, streaming: bool = False,
+                 workdir: str | None = None,
+                 ) -> tuple[list[Program | ProgramFile], list[PlanReport]]:
+    """Plan each worker's program independently (§6.1).
+
+    Worker programs only touch their own address space, so planning them is
+    embarrassingly parallel: ``parallel=True`` runs one planner per worker
+    concurrently.  ``streaming=True`` uses the out-of-core file pipeline
+    (one subdirectory per worker) and returns ProgramFiles the engine
+    executes directly from disk.
+    """
+    def _one(w: int, p: Program) -> tuple[Program | ProgramFile, PlanReport]:
+        if streaming:
+            wd = os.path.join(workdir, f"worker{w}") if workdir else None
+            return plan_streaming(p, cfg, workdir=wd)
+        return plan(p, cfg)
+
+    if parallel and len(progs) > 1:
+        with cf.ThreadPoolExecutor(max_workers=len(progs),
+                                   thread_name_prefix="mage-plan") as ex:
+            results = list(ex.map(_one, range(len(progs)), progs))
+    else:
+        results = [_one(w, p) for w, p in enumerate(progs)]
+    return [r[0] for r in results], [r[1] for r in results]
 
 
-def run_workers(progs: Sequence[Program],
+def run_workers(progs: Sequence[Program | ProgramFile],
                 driver_factory: Callable[[int], ProtocolDriver],
                 use_memmap: bool = False,
                 on_output: Callable[[int, Any, list[np.ndarray]], None] | None = None,
@@ -78,7 +97,7 @@ def run_workers(progs: Sequence[Program],
     results: list = [None] * len(progs)
     errors: list = []
 
-    def _run(w: int, prog: Program):
+    def _run(w: int, prog: Program | ProgramFile):
         try:
             eng = Engine(prog, driver_factory(w), channels=channels,
                          use_memmap=use_memmap)

@@ -7,7 +7,6 @@ here); on TPU pass interpret=False.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -13,7 +13,6 @@ benchmarks/roofline.py and EXPERIMENTS.md.
 """  # noqa: E402
 
 import argparse
-import functools
 import json
 import time
 import traceback
@@ -166,6 +165,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, seq_shard: bool = False,
             t2 = time.time()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # jax returned [{...}] per device before 0.4.35ish, a flat dict
+            # after; normalize so both shapes work
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             coll = collective_bytes(compiled.as_text())
         n_chips = 1
         for v in mesh.shape.values():

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ShapeCell
-from ..distributed.sharding import AxisRules, params_pspecs
-from ..models import (ModelConfig, encdec_init_caches, grouped_layout,
+from ..distributed.sharding import AxisRules
+from ..models import (ModelConfig, grouped_layout,
                       init_caches, init_encdec, init_lm)
 from ..models.config import BlockKind
 from ..models.mamba2 import dims as mamba_dims

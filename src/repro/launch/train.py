@@ -16,7 +16,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from ..configs import get_config, reduced_config
 from ..data.pipeline import DataConfig, Prefetcher

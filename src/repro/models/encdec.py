@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from .config import ModelConfig
 from .layers import (attention, attention_cross, attention_decode,
-                     attention_prefill, embed, init_attention, init_embed,
+                     embed, init_attention, init_embed,
                      init_mlp, init_rmsnorm, mlp, rmsnorm, unembed)
 
 

@@ -8,7 +8,6 @@ distributed/sharding.py so the same model code runs under any rule set.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

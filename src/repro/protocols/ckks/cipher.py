@@ -14,7 +14,6 @@ copy.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 
-import numpy as np
 
 _MR_WITNESSES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37)
 

@@ -20,7 +20,7 @@ from typing import Callable
 import numpy as np
 
 from ...core.bytecode import Instr, Op, Program
-from ...core.engine import Channels, Engine, ProtocolDriver
+from ...core.engine import Engine, ProtocolDriver
 from .cost import GCCostModel
 from .engineops import AndXorOps
 from .gates import EvaluatorGates, GarblerGates, PartyChannel

@@ -13,7 +13,7 @@ from __future__ import annotations
 import enum
 
 from ...core.bytecode import Op
-from ...core.dsl import Value, current_builder
+from ...core.dsl import Value
 
 
 class Party(enum.IntEnum):

@@ -15,8 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..models import (ModelConfig, encdec_decode, encdec_init_caches, encode,
-                      init_caches, lm_decode, lm_prefill)
+from ..models import ModelConfig, encdec_decode, lm_decode, lm_prefill
 
 
 def prefill_step(params, tokens: jnp.ndarray, cfg: ModelConfig,

@@ -19,7 +19,6 @@ multi-host runtime):
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 
 import numpy as np

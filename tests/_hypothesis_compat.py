@@ -1,0 +1,83 @@
+"""Optional-`hypothesis` shim so the suite collects and runs offline.
+
+When `hypothesis` is installed (CI), this module re-exports the real
+`given` / `settings` / `strategies`.  When it is not (air-gapped dev
+boxes, minimal containers), a small deterministic fallback runs each
+property test over seeded-random draws plus the strategy's boundary
+values.  It intentionally supports only what the suite uses
+(`st.integers(lo, hi)`, `@settings(max_examples=..., deadline=...)`) —
+extend it if a test needs more, or install hypothesis.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    HAVE_HYPOTHESIS = False
+
+    class _Integers:
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def boundary(self) -> list[int]:
+            vals = {self.min_value, self.max_value,
+                    min(self.min_value + 1, self.max_value)}
+            return sorted(vals)
+
+        def draw(self, rng: random.Random) -> int:
+            return rng.randint(self.min_value, self.max_value)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value: int = 0, max_value: int = 2**63 - 1
+                     ) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    _DEFAULT_EXAMPLES = 20
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats: _Integers):
+        def deco(fn):
+            # like hypothesis, positional strategies fill the test's
+            # RIGHTMOST parameters; anything to their left stays visible to
+            # pytest (fixtures)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            keep, covered = params[:len(params) - len(strats)], \
+                [p.name for p in params[len(params) - len(strats):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_EXAMPLES)
+                # deterministic per-test seed (hash() is randomized per run)
+                seed = zlib.crc32(
+                    f"{fn.__module__}.{fn.__qualname__}".encode())
+                rng = random.Random(seed)
+                examples: list[tuple[int, ...]] = []
+                if strats:
+                    bounds = [s.boundary() for s in strats]
+                    examples.append(tuple(b[0] for b in bounds))
+                    examples.append(tuple(b[-1] for b in bounds))
+                while len(examples) < n:
+                    examples.append(tuple(s.draw(rng) for s in strats))
+                for ex in examples[:n]:
+                    fn(*args, **kwargs, **dict(zip(covered, ex)))
+
+            # stop pytest treating the strategy-filled params as fixtures
+            wrapper.__signature__ = sig.replace(parameters=keep)
+            return wrapper
+        return deco

@@ -3,7 +3,7 @@ lazy relinearization, engine-driver integration."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import Engine, PlanConfig, plan, trace
 from repro.protocols.ckks import Batch, CkksContext, CkksDriver, CkksParams, \

@@ -3,11 +3,11 @@ scheduling — unit + property tests (hypothesis) on randomized traces."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Engine, INF, Op, PlanConfig, plan, plan_replacement,
                         trace)
-from repro.core.bytecode import DIRECTIVES, Instr, Program, strip_frees
+from repro.core.bytecode import DIRECTIVES, Program, strip_frees
 from repro.core.dsl import Value, current_builder
 from repro.core.liveness import compute_touches, working_set_pages
 from repro.core.placement import PageAllocator
@@ -151,7 +151,6 @@ def test_min_beats_heuristics_on_swap_ins(seed, frames):
 def test_min_matches_bruteforce_on_tiny_traces():
     """Belady MIN is optimal in swap-ins: compare against exhaustive search
     over eviction choices on tiny traces."""
-    import itertools
 
     def sim_best(pages_seq, frames):
         # exhaustive: state = frozenset resident; dp over positions

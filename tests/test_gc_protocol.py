@@ -3,14 +3,13 @@ plaintext oracle (hypothesis), cost-model exactness, two-party runs."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import Engine, trace
 from repro.protocols.garbled import aes
 from repro.protocols.garbled.cost import gate_cost
 from repro.protocols.garbled.dsl import Integer, Party
 from repro.protocols.garbled.driver import PlaintextDriver, run_two_party
-from repro.protocols.garbled.engineops import AndXorOps
 from repro.protocols.garbled.gates import (EvaluatorGates, GarblerGates,
                                            PartyChannel)
 from repro.core.bytecode import Op

@@ -8,8 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, applicable_shapes, get_config, reduced_config
-from repro.models import (encdec_loss, init_caches, init_encdec, init_lm,
-                          lm_decode, lm_forward, lm_loss, lm_prefill)
+from repro.models import init_lm, lm_decode, lm_forward, lm_prefill
 from repro.train.optimizer import OptConfig
 from repro.train.train_step import TrainConfig, make_train_state, train_step
 

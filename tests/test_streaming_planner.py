@@ -1,0 +1,252 @@
+"""Out-of-core planner pipeline: bytecode file round-trip (property test),
+streaming annotation vs in-memory liveness, and instruction-identical
+plan() / plan_streaming() output executed by the streaming engine."""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from test_core_planner import _Driver, _random_program, _run
+
+from repro.core import (Engine, PlanConfig, plan, plan_replacement,
+                        plan_streaming)
+from repro.core.bytecode import (Instr, Op, ProgramFile,
+                                 decode_chunk, encode_chunk, strip_frees,
+                                 write_program)
+from repro.core.liveness import (AnnotationReader, annotate_next_use,
+                                 compute_touches)
+from repro.core.replacement import plan_replacement_file
+from repro.core.scheduling import plan_schedule, plan_schedule_file
+from repro.core.workers import plan_workers
+
+
+# ---------------------------------------------------------------------------
+# file format round-trip
+# ---------------------------------------------------------------------------
+
+
+def _random_instrs(rng, n):
+    """Adversarial instruction stream: every arity, negative and huge ints,
+    bit-exact floats in imm."""
+    ops = [Op.INPUT, Op.ADD, Op.SELECT, Op.MINMAX, Op.SORT_LOCAL, Op.OUTPUT,
+           Op.NET_SEND, Op.FREE]
+    out = []
+    for _ in range(n):
+        op = ops[rng.integers(len(ops))]
+        span = lambda: (int(rng.integers(0, 1 << 40)),  # noqa: E731
+                        int(rng.integers(1, 64)))
+        n_outs = int(rng.integers(0, 3))
+        n_ins = int(rng.integers(0, 5))
+        imm = []
+        for _ in range(int(rng.integers(0, 7))):
+            if rng.random() < 0.4:
+                imm.append(float(rng.normal()) * 2.0 ** int(rng.integers(-60, 60)))
+            else:
+                imm.append(int(rng.integers(-(1 << 62), 1 << 62)))
+        out.append(Instr(op, tuple(span() for _ in range(n_outs)),
+                         tuple(span() for _ in range(n_ins)), tuple(imm)))
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_encode_decode_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    instrs = _random_instrs(rng, int(rng.integers(0, 200)))
+    assert decode_chunk(encode_chunk(instrs)) == instrs
+
+
+def test_program_file_roundtrip(tmp_path):
+    prog = _random_program(3)
+    path = tmp_path / "prog.bc"
+    pf = write_program(prog, path, chunk_instrs=7)
+    assert list(pf.iter_instrs(5)) == prog.instrs
+    assert len(pf) == len(prog.instrs)
+    for field in ("page_shift", "protocol", "phase", "worker", "num_workers",
+                  "vspace_slots"):
+        assert getattr(pf, field) == getattr(prog, field), field
+    assert pf.read_program().instrs == prog.instrs
+    # reverse chunk iteration covers every record exactly once, backwards
+    starts = [s for s, _ in pf.iter_chunks(7, reverse=True)]
+    assert starts == list(range(0, len(pf), 7))[::-1]
+    rejoined = []
+    for _, arr in sorted(pf.iter_chunks(7, reverse=True)):
+        rejoined.extend(decode_chunk(arr))
+    assert rejoined == prog.instrs
+
+
+def test_program_file_rejects_garbage(tmp_path):
+    p = tmp_path / "bad.bc"
+    p.write_bytes(b"definitely not bytecode")
+    with pytest.raises(ValueError):
+        ProgramFile(p)
+
+
+def test_encode_rejects_unencodable():
+    with pytest.raises(TypeError):
+        encode_chunk([Instr(Op.INPUT, imm=("a string",))])
+    too_many_ins = Instr(Op.ADD, ins=tuple((i, 1) for i in range(9)))
+    with pytest.raises(ValueError):
+        encode_chunk([too_many_ins])
+
+
+# ---------------------------------------------------------------------------
+# streaming annotation == in-memory liveness
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_annotation_matches_compute_touches(seed):
+    with tempfile.TemporaryDirectory() as td:
+        tmp = Path(td)
+        prog = _random_program(seed)
+        instrs = strip_frees(prog.instrs)
+        t = compute_touches(prog, instrs)
+        pf = write_program(prog, tmp / "p.bc", strip_free=True,
+                           chunk_instrs=11)
+        info = annotate_next_use(pf, tmp / "p.ann", chunk_instrs=11)
+        assert info.num_pages == t.num_pages
+        rd = AnnotationReader(tmp / "p.ann")
+        flat = []
+        for s, arr in rd.iter_chunks(13):
+            for r in range(arr.shape[0]):
+                for j in range(int(arr[r, 0])):
+                    flat.append(tuple(int(arr[r, 1 + 4 * j + c])
+                                      for c in range(4)))
+        expect = list(zip((int(x) for x in t.pages),
+                          (int(x) for x in t.flags),
+                          (int(x) for x in t.next_any),
+                          (int(x) for x in t.next_read)))
+        assert flat == expect
+
+
+def test_annotation_rejects_free_instrs(tmp_path):
+    prog = _random_program(0)
+    pf = write_program(prog, tmp_path / "p.bc")  # FREEs kept
+    with pytest.raises(ValueError, match="FREE"):
+        annotate_next_use(pf, tmp_path / "p.ann")
+
+
+def test_stale_annotation_sidecar_rejected(tmp_path):
+    """A sidecar from a different program must not silently plan garbage —
+    caught by the record-count check or the content digest."""
+    from repro.core.replacement import plan_replacement_file
+    pf = write_program(_random_program(5), tmp_path / "a.bc",
+                       strip_free=True)
+    other = write_program(_random_program(6), tmp_path / "b.bc",
+                          strip_free=True)
+    ann = annotate_next_use(other, tmp_path / "b.ann")
+    with pytest.raises((ValueError, KeyError)):
+        plan_replacement_file(pf, tmp_path / "p.bc", 6,
+                              annotations=ann.path)
+
+
+def test_sidecar_digest_is_chunk_size_independent(tmp_path):
+    """A valid sidecar must be accepted even when annotation and
+    replacement stream with different chunk sizes."""
+    from repro.core.replacement import plan_replacement_file
+    prog = _random_program(7)
+    pf = write_program(prog, tmp_path / "v.bc", strip_free=True)
+    ann = annotate_next_use(pf, tmp_path / "v.ann", chunk_instrs=16)
+    physf, _ = plan_replacement_file(pf, tmp_path / "p.bc", 6,
+                                     annotations=ann.path, chunk_instrs=8)
+    phys, _ = plan_replacement(prog, 6)
+    assert list(physf.iter_instrs()) == phys.instrs
+
+
+# ---------------------------------------------------------------------------
+# streaming pipeline == in-memory pipeline, instruction for instruction
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_streaming_plan_identical_to_inmemory(seed):
+    with tempfile.TemporaryDirectory() as td:
+        prog = _random_program(seed)
+        pol = ("min", "min_clean", "lru", "fifo")[seed % 4]
+        cfg = PlanConfig(num_frames=6 + seed % 3, lookahead=5 + seed % 30,
+                         prefetch_pages=1 + seed % 3, policy=pol,
+                         swap_bypass=bool(seed & 1))
+        mem, rep = plan(prog, cfg)
+        memf, repf = plan_streaming(prog, cfg, workdir=td, chunk_instrs=13)
+        assert list(memf.iter_instrs()) == mem.instrs
+        assert rep.replacement == repf.replacement
+        assert rep.schedule == repf.schedule
+        assert memf.num_frames == mem.num_frames
+        assert memf.prefetch_slots == mem.prefetch_slots
+        assert memf.meta == mem.meta
+
+
+def test_streaming_stage_wrappers_identical(tmp_path):
+    prog = _random_program(11)
+    vpf = write_program(prog, tmp_path / "v.bc", strip_free=True,
+                        chunk_instrs=9)
+    phys, rs = plan_replacement(prog, 7)
+    physf, rsf = plan_replacement_file(vpf, tmp_path / "p.bc", 7,
+                                       chunk_instrs=9)
+    assert list(physf.iter_instrs()) == phys.instrs
+    assert rs == rsf
+    mem, ss = plan_schedule(phys, 12, 2)
+    memf, ssf = plan_schedule_file(physf, tmp_path / "m.bc", 12, 2)
+    assert list(memf.iter_instrs()) == mem.instrs
+    assert ss == ssf
+    # degenerate B=0 path keeps sync directives in both modes
+    mem0, _ = plan_schedule(phys, 12, 0)
+    memf0, _ = plan_schedule_file(physf, tmp_path / "m0.bc", 12, 0)
+    assert list(memf0.iter_instrs()) == mem0.instrs
+    assert memf0.prefetch_slots == mem0.prefetch_slots == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming engine executes the memory program straight from its file
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_streaming_engine_matches_inmemory(seed):
+    with tempfile.TemporaryDirectory() as td:
+        prog = _random_program(seed)
+        expect = _run(prog)
+        cfg = PlanConfig(num_frames=6, lookahead=15, prefetch_pages=2)
+        memf, _ = plan_streaming(prog, cfg, workdir=td)
+        d = _Driver()
+        Engine(memf, d).run()
+        for k, v in expect.items():
+            assert np.array_equal(d.outputs[k], v)
+
+
+def test_streaming_engine_memmap_roundtrip(tmp_path):
+    prog = _random_program(42)
+    expect = _run(prog)
+    memf, _ = plan_streaming(prog, PlanConfig(num_frames=5, lookahead=10,
+                                              prefetch_pages=2),
+                             workdir=tmp_path)
+    d = _Driver()
+    Engine(memf, d, use_memmap=True).run()
+    for k, v in expect.items():
+        assert np.array_equal(d.outputs[k], v)
+
+
+# ---------------------------------------------------------------------------
+# per-worker parallel planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_workers_parallel_and_streaming(tmp_path):
+    progs = [_random_program(s) for s in (1, 2, 3)]
+    cfg = PlanConfig(num_frames=6, lookahead=15, prefetch_pages=2)
+    seq, _ = plan_workers(progs, cfg)
+    par, _ = plan_workers(progs, cfg, parallel=True)
+    for a, b in zip(seq, par):
+        assert a.instrs == b.instrs
+    strm, _ = plan_workers(progs, cfg, parallel=True, streaming=True,
+                           workdir=str(tmp_path))
+    for a, f in zip(seq, strm):
+        assert isinstance(f, ProgramFile)
+        assert list(f.iter_instrs()) == a.instrs

@@ -13,7 +13,7 @@ from repro.data.pipeline import DataConfig, Prefetcher, batch_for_step
 from repro.launch.train import train_loop
 from repro.train import checkpoint as ckpt
 from repro.train.fault import FaultConfig, StepTimer
-from repro.train.optimizer import OptConfig, init_opt_state, wsd_lr
+from repro.train.optimizer import OptConfig, wsd_lr
 from repro.train.train_step import TrainConfig, make_train_state
 
 CFG = reduced_config("qwen2-1.5b")
@@ -96,7 +96,7 @@ def test_elastic_reshard_roundtrip(tmp_path):
     params, opt = make_train_state(jax.random.PRNGKey(0), CFG)
     ckpt.save(d, 1, params, opt)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    from repro.distributed.sharding import params_pspecs, rules_for, \
+    from repro.distributed.sharding import rules_for, \
         params_shardings
     rules = rules_for(CFG, mesh)
     shard_tree = params_shardings(

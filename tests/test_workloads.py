@@ -2,7 +2,6 @@
 numpy oracles: unbounded, bounded (planned, memmap-swapped), multi-worker,
 and a scaled real-crypto two-party run."""
 
-import numpy as np
 import pytest
 
 from repro.core.planner import PlanConfig
