@@ -1,148 +1,19 @@
-"""Shared benchmark harness: trace -> plan -> simulate the three §8.2
-scenarios (Unbounded / OS Swapping / MAGE) with a calibrated storage model.
+"""Shared benchmark harness — now a thin shim over ``repro.scenarios``.
 
-Calibration (documented, see EXPERIMENTS.md §Methodology): cloud-SSD-class
-storage (800 MB/s, 150 us op latency); the OS baseline pays demand-paging
-costs at 4 KiB granularity with sequential readahead (window 8), while MAGE
-moves its own 64 KiB/128 KiB pages with planned, overlapped I/O — the same
-asymmetry the paper measures on Azure D16d_v4 (its local SSD swap vs MAGE's
-O_DIRECT aio).  Compute costs come from the protocol drivers' gate/NTT cost
-models (GC: ~80ns per AND garbling; CKKS: ~N log N per NTT).
+The calibration, cost models and the trace→plan→simulate path live in
+``src/repro/scenarios.py`` (built on the ``repro.api.Session`` facade);
+this module only re-exports them so the fig* scripts keep working as
+plain scripts.  Run benchmarks with the package importable, e.g.::
 
-Absolute times are model outputs; the CLAIMS we validate are the paper's
-ratios (MAGE-vs-OS speedups, %-of-Unbounded).
+    PYTHONPATH=src python benchmarks/fig8_swap.py
+    PYTHONPATH=src python -m repro bench
+
+(no ``sys.path`` games here — they broke invocation from any other cwd).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import sys
-import time
-
-sys.path.insert(0, "src")
-
-
-from repro.core import (DeviceModel, PlanConfig, plan, simulate_os_paging,  # noqa: E402
-                        simulate_unbounded)
-from repro.core.liveness import compute_touches, working_set_pages  # noqa: E402
-from repro.core.bytecode import strip_frees  # noqa: E402
-from repro.core.simulator import simulate_memory_program  # noqa: E402
-from repro.protocols.ckks import CkksCostModel, CkksParams  # noqa: E402
-from repro.protocols.garbled.cost import GCCostModel  # noqa: E402
-from repro.workloads import get  # noqa: E402
-
-# --- calibration ------------------------------------------------------------
-#
-# Cloud local SSD (the D16d_v4 temp disk): ~1 GB/s streaming, 300 us op
-# latency, deep queue (pipelined).  OS baseline: 4 KiB demand paging with an
-# effective readahead of 2 (swap-slot fragmentation defeats clustering) and
-# direct-reclaim write throttling.  CKKS per-coefficient cost models a
-# memory-bandwidth-bound implementation (~10 GB/s effective), which is what
-# makes the compute/transfer ratio match the paper's regime.
-
-STORAGE = DeviceModel(bandwidth=1e9, latency=300e-6, fault_overhead=5e-6,
-                      readahead=2, os_writeback_throttle_s=0.02)
-OS_PAGE_BYTES = 4096
-FILE_BW = 1e9               # input/output file streaming (all scenarios)
-GC_SLOT_BYTES = 16          # one wire label
-CKKS_SLOT_BYTES = 8
-BENCH_CKKS = CkksParams(n_ring=1024, levels=2)
-
-# paper defaults (§8.2): GC l=10000, B=256 pages; CKKS l=100, B=16
-GC_PLAN = dict(lookahead=10_000, prefetch_pages=64)
-CKKS_PLAN = dict(lookahead=100, prefetch_pages=16)
-
-
-def cost_fn(protocol: str):
-    """Driver cost model + input/output FILE streaming (paid identically in
-    every scenario — §8.1.3 phase 1/3)."""
-    from repro.core.bytecode import Op
-    slot_bytes = GC_SLOT_BYTES if protocol == "gc" else CKKS_SLOT_BYTES
-    if protocol == "gc":
-        base = GCCostModel().cost
-    else:
-        model = CkksCostModel(pointwise=1.2e-9)
-        n = BENCH_CKKS.n_ring
-        base = lambda instr: model.cost(instr, n)  # noqa: E731
-
-    def cost(instr):
-        c = base(instr)
-        if instr.op in (Op.INPUT, Op.OUTPUT):
-            spans = instr.outs if instr.op == Op.INPUT else instr.ins
-            nbytes = sum(s[1] for s in spans) * slot_bytes
-            c += nbytes / FILE_BW
-        return c
-    return cost
-
-
-@dataclasses.dataclass
-class ScenarioResult:
-    unbounded_s: float
-    os_s: float
-    mage_s: float
-    plan_s: float
-    plan_peak_mb: float
-    swaps_in: int
-    swaps_out: int
-    prefetched: int
-    working_set_pages: int
-    budget_pages: int
-    instructions: int
-
-    @property
-    def speedup_vs_os(self) -> float:
-        return self.os_s / self.mage_s
-
-    @property
-    def pct_of_unbounded(self) -> float:
-        return self.mage_s / self.unbounded_s - 1.0
-
-
-def run_workload(name: str, n: int, budget_frac: float = 0.25,
-                 num_workers: int = 1, worker: int = 0,
-                 plan_overrides: dict | None = None) -> ScenarioResult:
-    w = get(name)
-    extra = {"ckks_params": BENCH_CKKS} if w.protocol == "ckks" else {}
-    progs = w.trace(n, num_workers, **extra)
-    prog = progs[worker]
-    slot_bytes = GC_SLOT_BYTES if w.protocol == "gc" else CKKS_SLOT_BYTES
-    page_bytes = prog.page_slots * slot_bytes
-    cost = cost_fn(w.protocol)
-
-    touches = compute_touches(prog, strip_frees(prog.instrs))
-    ws = working_set_pages(touches)
-    knobs = dict(GC_PLAN if w.protocol == "gc" else CKKS_PLAN)
-    knobs.update(plan_overrides or {})
-    min_frames = 8 + knobs["prefetch_pages"]
-    budget = max(int(ws * budget_frac), min_frames)
-    budget = min(budget, max(ws - 1, min_frames))
-    knobs["prefetch_pages"] = min(knobs["prefetch_pages"],
-                                  max(budget // 4, 1))
-
-    t0 = time.perf_counter()
-    mem, report = plan(prog, PlanConfig(num_frames=budget, **knobs),
-                       track_memory=True)
-    plan_s = time.perf_counter() - t0
-
-    ub = simulate_unbounded(prog, cost)
-    osr = simulate_os_paging(prog, cost, num_frames=budget,
-                             page_bytes=page_bytes, model=STORAGE,
-                             os_page_bytes=OS_PAGE_BYTES)
-    mage = simulate_memory_program(mem, cost, page_bytes=page_bytes,
-                                   model=STORAGE)
-    return ScenarioResult(
-        unbounded_s=ub.total, os_s=osr.total, mage_s=mage.total,
-        plan_s=plan_s, plan_peak_mb=report.peak_mem_bytes / 2**20,
-        swaps_in=report.replacement.swap_ins,
-        swaps_out=report.replacement.swap_outs,
-        prefetched=report.schedule.prefetched,
-        working_set_pages=ws, budget_pages=budget,
-        instructions=len(prog.instrs))
-
-
-def fmt_row(name: str, r: ScenarioResult) -> str:
-    return (f"{name:12s} n/a={r.instructions:7d}i ws={r.working_set_pages:5d} "
-            f"budget={r.budget_pages:5d} | unb={r.unbounded_s:8.3f}s "
-            f"os={r.os_s:8.3f}s mage={r.mage_s:8.3f}s | "
-            f"speedup={r.speedup_vs_os:5.2f}x "
-            f"overhead={100*r.pct_of_unbounded:6.1f}%")
+from repro.scenarios import (  # noqa: F401
+    BENCH_CKKS, CKKS_PLAN, CKKS_SLOT_BYTES, FILE_BW, GC_PLAN, GC_SLOT_BYTES,
+    OS_PAGE_BYTES, PLANNER_CAP_MB, STORAGE, ScenarioResult, cost_fn, fmt_row,
+    run_workload, run_workload_workers, scenario_spec)

@@ -5,68 +5,44 @@ workloads with mid-computation communication phases — keep (indeed grow)
 their advantage because the OS baseline's paging jitter interacts badly
 with synchronization points.  We model the straggler effect by charging
 each communication phase the MAX of the workers' accumulated delays
-(deterministic analogue of the jitter observation)."""
+(deterministic analogue of the jitter observation).
+
+Each case is one ``Session`` (``run_workload_workers``): the facade
+resolves a per-worker fraction-of-working-set budget, plans every worker
+independently (§6.1), and simulates all three scenarios per worker.  GC
+cases drop the prefetch buffer to 16 pages so the smaller per-worker
+working sets still see real memory pressure (the floor is 8 + B frames).
+"""
 
 from __future__ import annotations
 
-import sys
+from common import fmt_row, run_workload_workers
 
-from common import STORAGE, cost_fn, GC_PLAN, CKKS_PLAN, OS_PAGE_BYTES, \
-    GC_SLOT_BYTES, CKKS_SLOT_BYTES, BENCH_CKKS
-
-sys.path.insert(0, "src")
-
-from repro.core import PlanConfig, plan, simulate_os_paging  # noqa: E402
-from repro.core.bytecode import NET_DIRECTIVES, strip_frees  # noqa: E402
-from repro.core.liveness import compute_touches, working_set_pages  # noqa: E402
-from repro.core.simulator import simulate_memory_program, simulate_unbounded  # noqa: E402
-from repro.workloads import get  # noqa: E402
+from repro.workloads import get
 
 WORKERS = 4
 CASES = [("merge", 16384), ("sort", 8192), ("mvmul", 384), ("rsum", 256),
          ("rmvmul", 24)]
-
-
-def _phase_times(prog, total_s):
-    """Split a worker's simulated time at its network barriers (rough)."""
-    n_net = sum(1 for i in prog.instrs if i.op in NET_DIRECTIVES)
-    return n_net
+GC_OVERRIDES = {"prefetch_pages": 16}
 
 
 def run(check: bool = True):
     results = {}
     for name, n in CASES:
-        w = get(name)
-        extra = {"ckks_params": BENCH_CKKS} if w.protocol == "ckks" else {}
-        progs = w.trace(n, WORKERS, **extra)
-        slot_b = GC_SLOT_BYTES if w.protocol == "gc" else CKKS_SLOT_BYTES
-        cost = cost_fn(w.protocol)
-        knobs = dict(GC_PLAN if w.protocol == "gc" else CKKS_PLAN)
-        per_worker = []
-        for prog in progs:
-            page_bytes = prog.page_slots * slot_b
-            t = compute_touches(prog, strip_frees(prog.instrs))
-            ws = working_set_pages(t)
-            budget = max(int(ws * 0.4), 8 + knobs["prefetch_pages"] // 4)
-            budget = min(budget, max(ws - 1, 12))
-            k = dict(knobs)
-            k["prefetch_pages"] = min(k["prefetch_pages"],
-                                      max(budget // 4, 1))
-            mem, _ = plan(prog, PlanConfig(num_frames=budget, **k))
-            ub = simulate_unbounded(prog, cost)
-            osr = simulate_os_paging(prog, cost, budget, page_bytes,
-                                     STORAGE, os_page_bytes=OS_PAGE_BYTES)
-            mg = simulate_memory_program(mem, cost, page_bytes, STORAGE)
-            per_worker.append((ub.total, osr.total, mg.total))
+        overrides = GC_OVERRIDES if get(name).protocol == "gc" else None
+        per_worker = run_workload_workers(name, n, num_workers=WORKERS,
+                                          budget_frac=0.4,
+                                          plan_overrides=overrides)
         # workers synchronize: wall time = max over workers; the OS case
         # additionally pays jitter at each sync (max-of-delays effect)
-        ub = max(x[0] for x in per_worker)
-        osr = max(x[1] for x in per_worker)
-        mage = max(x[2] for x in per_worker)
+        ub = max(r.unbounded_s for r in per_worker)
+        osr = max(r.os_s for r in per_worker)
+        mage = max(r.mage_s for r in per_worker)
         results[name] = (ub, osr, mage)
         print(f"fig10 {name:8s} p={WORKERS}: unb={ub:8.3f}s os={osr:8.3f}s "
               f"mage={mage:8.3f}s speedup={osr/mage:5.2f}x "
               f"overhead={100*(mage/ub-1):6.1f}%", flush=True)
+        print("  " + fmt_row(f"{name}/w0", per_worker[0]), flush=True)
     if check:
         assert all(osr > mg for _, osr, mg in results.values()), \
             "MAGE must keep beating OS under parallelism"

@@ -16,11 +16,7 @@ conclusion), using fig8's merge MAGE-vs-OS gap as the reference.
 
 from __future__ import annotations
 
-import sys
-
-sys.path.insert(0, "src")
-
-from repro.core import Engine  # noqa: E402
+from repro.core import Engine
 from repro.protocols.garbled.driver import GarblerDriver  # noqa: E402
 from repro.protocols.garbled.gates import PartyChannel  # noqa: E402
 from repro.workloads import get  # noqa: E402

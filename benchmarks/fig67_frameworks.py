@@ -13,14 +13,11 @@ claim checked: engine overhead < 25% for GC and < 2x for CKKS.
 
 from __future__ import annotations
 
-import sys
 import time
 
 import numpy as np
 
-sys.path.insert(0, "src")
-
-from repro.core import Engine, trace  # noqa: E402
+from repro.core import Engine, trace
 from repro.protocols.ckks import Batch, CkksContext, CkksDriver, CkksParams  # noqa: E402
 from repro.protocols.garbled.engineops import AndXorOps  # noqa: E402
 from repro.protocols.garbled.gates import GarblerGates  # noqa: E402

@@ -14,7 +14,6 @@ import time
 import traceback
 
 sys.path.insert(0, os.path.dirname(__file__))
-sys.path.insert(0, "src")
 
 ALL = ["fig8", "fig9", "table1", "fig10", "fig11", "fig67", "fig1213",
        "roofline"]

@@ -13,7 +13,7 @@ only chunk-sized buffers plus O(frames + lookahead) state, so it plans
 programs 10x+ larger than the cap with flat peak memory — the paper's
 "nearly zero-cost" planning claim at scale.
 
-Usage:
+Usage (run with the package importable, e.g. PYTHONPATH=src):
   python benchmarks/table1_planning.py                # workload table
   python benchmarks/table1_planning.py --streaming    # out-of-core sweep
   python benchmarks/table1_planning.py --tiny --json out.json   # CI smoke
@@ -26,19 +26,15 @@ import dataclasses
 import json
 import os
 import shutil
-import sys
 import tempfile
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.dirname(__file__))
+import numpy as np
 
-import numpy as np  # noqa: E402
+from common import run_workload
 
-from common import run_workload  # noqa: E402
-
-from repro.core import PlanConfig, plan, plan_streaming  # noqa: E402
-from repro.core.bytecode import (Instr, Op, Program,  # noqa: E402
+from repro.core import PlanConfig, plan, plan_streaming
+from repro.core.bytecode import (Instr, Op, Program,
                                  ProgramWriter, RECORD_BYTES)
 
 CASES = [("merge", 8192), ("sort", 8192), ("ljoin", 256), ("mvmul", 256),

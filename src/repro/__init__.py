@@ -11,3 +11,14 @@ out as a multi-pod training/serving framework.  See DESIGN.md for the map:
 """
 
 __version__ = "1.0.0"
+
+_API_NAMES = ("JobSpec", "Session", "SpecMismatchError", "run_job",
+              "register_driver", "register_storage")
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays light; `repro.JobSpec` pulls in the facade
+    if name in _API_NAMES:
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -1,0 +1,181 @@
+"""``python -m repro``: the deployment CLI (paper §6 — ``mage plan`` then
+execute; §8.2 — the scenario benchmarks).
+
+    python -m repro plan  --workload merge -n 4096 --budget 0.25 --out job/
+    python -m repro run   job/ --check [--storage memmap] [--real]
+    python -m repro bench [--tiny] [--streaming] [--json out.json]
+
+``plan`` writes memory-program files through the out-of-core streaming
+pipeline plus a ``job.json`` manifest; the spec hash is stamped into every
+program's header so ``run`` validates artifacts before executing them and
+rejects stale or tampered plans (SpecMismatchError, exit code 2).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .api import JobSpec, Session, SpecMismatchError, run_job
+
+
+def _parse_budget(text: str) -> int | float:
+    """``12`` → 12 frames; ``0.25`` → fraction of the working set."""
+    if any(c in text for c in ".eE"):
+        return float(text)
+    return int(text)
+
+
+def _add_spec_args(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--workload", required=True,
+                    help="workload name (see repro.workloads.all_names())")
+    ap.add_argument("-n", type=int, default=None,
+                    help="problem size (default: workload default)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="workers per party (§5.1)")
+    ap.add_argument("--budget", type=_parse_budget, default=None,
+                    help="memory budget: frames (int) or working-set "
+                         "fraction (float); omit for unbounded")
+    ap.add_argument("--lookahead", type=int, default=10_000)
+    ap.add_argument("--prefetch", type=int, default=0,
+                    help="prefetch buffer pages B (0 = replacement only)")
+    ap.add_argument("--policy", default="min",
+                    help="eviction policy (min, min_clean, lru, fifo)")
+    ap.add_argument("--mode", default=None,
+                    choices=("memory", "streaming", "unbounded"),
+                    help="plan mode (default: streaming for plan, "
+                         "memory for exec)")
+    ap.add_argument("--parallel", default="serial",
+                    choices=("serial", "thread", "process"),
+                    help="per-worker planning executor")
+    ap.add_argument("--ckks-ring", type=int, default=None)
+    ap.add_argument("--ckks-levels", type=int, default=None)
+
+
+def _spec_from_args(args, default_mode: str) -> JobSpec:
+    mode = args.mode or (default_mode if args.budget is not None
+                         else "unbounded")
+    return JobSpec(workload=args.workload, n=args.n,
+                   num_workers=args.workers, memory_budget=args.budget,
+                   lookahead=args.lookahead, prefetch_pages=args.prefetch,
+                   policy=args.policy, plan_mode=mode,
+                   parallel_plan=args.parallel,
+                   ckks_ring=args.ckks_ring, ckks_levels=args.ckks_levels)
+
+
+def cmd_plan(args) -> int:
+    spec = _spec_from_args(args, default_mode="streaming")
+    with Session(spec) as s:
+        manifest = s.save_plan(args.out)
+        planned = s.plan()
+        for i, p in enumerate(planned):
+            print(f"worker{i}: {len(p)} instructions -> "
+                  f"{getattr(p, 'path', '(in-memory)')}")
+    print(f"spec hash {spec.plan_hash()}; manifest: {manifest}")
+    return 0
+
+
+def cmd_run(args) -> int:
+    sess = Session.from_plan(args.jobdir, storage=args.storage,
+                             driver=args.driver)
+    with sess:
+        outputs = sess.execute(real=args.real or None, check=args.check)
+    for tag in sorted(outputs):
+        v = outputs[tag]
+        head = ", ".join(str(x) for x in list(v.flat[:4]))
+        print(f"output[{tag}]: shape={getattr(v, 'shape', ())} "
+              f"[{head}{', ...' if v.size > 4 else ''}]")
+    if args.check:
+        print("oracle check OK")
+    return 0
+
+
+def cmd_exec(args) -> int:
+    spec = _spec_from_args(args, default_mode="memory")
+    outputs = run_job(spec, real=args.real or None, check=args.check)
+    print(f"{len(outputs)} outputs"
+          + (", oracle check OK" if args.check else ""))
+    return 0
+
+
+def cmd_bench(args) -> int:
+    from .scenarios import (BENCH_CASES, STREAMING_CASE, TINY_BENCH_CASES,
+                            TINY_STREAMING_CASE, run_bench)
+    if args.cases:
+        cases = []
+        for item in args.cases.split(","):
+            name, _, n = item.partition("=")
+            if not name or not n.isdigit():
+                raise SystemExit(
+                    f"error: bad --cases entry {item!r} (want workload=n, "
+                    f"e.g. merge=16384)")
+            cases.append((name, int(n)))
+    else:
+        cases = TINY_BENCH_CASES if args.tiny else BENCH_CASES
+    streaming_case = None
+    if args.streaming or args.tiny:
+        streaming_case = TINY_STREAMING_CASE if args.tiny else STREAMING_CASE
+    rows = run_bench(cases=cases, budget_frac=args.budget_frac,
+                     check=not args.no_check and not args.tiny,
+                     streaming_case=streaming_case)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro", description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="plan memory programs to a directory")
+    _add_spec_args(p)
+    p.add_argument("--out", required=True, help="output directory")
+    p.set_defaults(fn=cmd_plan)
+
+    p = sub.add_parser("run", help="execute a planned job directory")
+    p.add_argument("jobdir")
+    p.add_argument("--check", action="store_true",
+                   help="verify outputs against the numpy oracle")
+    p.add_argument("--real", action="store_true",
+                   help="GC: run real two-party crypto")
+    p.add_argument("--storage", default=None, choices=("ram", "memmap"))
+    p.add_argument("--driver", default=None)
+    p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("exec", help="trace+plan+execute in one shot")
+    _add_spec_args(p)
+    p.add_argument("--check", action="store_true")
+    p.add_argument("--real", action="store_true")
+    p.set_defaults(fn=cmd_exec)
+
+    p = sub.add_parser("bench", help="drive the §8.2 scenario benchmarks")
+    p.add_argument("--cases", default=None,
+                   help="comma list of workload=n (default: fig8 sweep)")
+    p.add_argument("--budget-frac", type=float, default=0.4)
+    p.add_argument("--tiny", action="store_true",
+                   help="small sizes + no claim assertions (CI smoke)")
+    p.add_argument("--streaming", action="store_true",
+                   help="add a past-planner-cap case via the file pipeline")
+    p.add_argument("--no-check", action="store_true")
+    p.add_argument("--json", metavar="PATH",
+                   help="write rows as JSON (CI artifact)")
+    p.set_defaults(fn=cmd_bench)
+
+    args = ap.parse_args(argv)
+    try:
+        return args.fn(args)
+    except SpecMismatchError as e:
+        print(f"error: {e}", file=sys.stderr)
+        raise SystemExit(2)
+    except (ValueError, KeyError) as e:
+        # predictable spec/registry errors: clean CLI message, not a trace
+        print(f"error: {e}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,563 @@
+"""The deployment facade: a declarative ``JobSpec`` plus a staged ``Session``.
+
+The paper's deployment unit is a config file plus two stages — ``mage plan``
+produces on-disk memory programs, the engine executes them (§6, §8.1.3).
+This module is that unit for the repro: a frozen :class:`JobSpec` names a
+workload, a memory budget, a plan mode and a driver/storage pair, and a
+:class:`Session` runs the staged pipeline
+
+    trace() → plan() → execute(real=…) / simulate(cost_fn)
+
+on top of the single worker-orchestration core in ``core.workers``.  Plans
+can be saved to a directory (``save_plan``) and executed later or elsewhere
+(``Session.from_plan`` / ``python -m repro run``); every planned program
+carries the spec hash in its ``meta`` so stale or tampered artifacts are
+rejected instead of silently executed.
+
+Drivers and storage backends are *registries* keyed by name
+(``{"gc-plaintext", "gc-2party", "ckks"} × {"ram", "memmap"}`` in-tree), so
+call sites select protocols by string instead of importing concrete classes;
+``register_driver`` / ``register_storage`` extend them (§4.3's extensibility
+argument, surfaced at the API).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+from typing import Callable
+
+import numpy as np
+
+from .core.bytecode import (Program, ProgramFile, strip_frees, write_program)
+from .core.engine import Channels, EngineStats, ProtocolDriver
+from .core.liveness import compute_touches, working_set_pages
+from .core.planner import PlanConfig, PlanReport
+from .core.simulator import (DeviceModel, SimResult, simulate_memory_program,
+                             simulate_os_paging, simulate_unbounded)
+from .core.storage import MemmapStorage, RamStorage, StorageBackend
+from .core.workers import EngineJob, plan_workers, run_engines
+from .protocols.ckks import CkksDriver, CkksParams
+from .protocols.garbled.driver import (EvaluatorDriver, GarblerDriver,
+                                       PlaintextDriver)
+from .protocols.garbled.gates import PartyChannel
+from .workloads import Workload, get
+
+PLAN_MODES = ("memory", "streaming", "unbounded")
+
+#: bytes per address-space slot, per protocol — a GC slot is one 128-bit
+#: wire label, a CKKS slot one 8-byte word (what the timing simulator and
+#: the OS-paging baseline charge per page).
+SLOT_BYTES = {"gc": 16, "ckks": 8}
+
+#: JobSpec fields that determine the planned memory program.  Execution
+#: details (driver, storage, workdir, parallelism, chunking) are excluded:
+#: a plan produced under any of them is valid under all of them, and
+#: ``plan_mode`` is excluded because the streaming and in-memory pipelines
+#: are instruction-identical by construction (tested).
+PLAN_HASH_FIELDS = ("workload", "n", "num_workers", "memory_budget",
+                    "lookahead", "prefetch_pages", "policy", "swap_bypass",
+                    "ckks_ring", "ckks_levels")
+
+JOB_FILE = "job.json"
+
+
+class SpecMismatchError(ValueError):
+    """A plan artifact does not match the spec that claims it."""
+
+
+# ---------------------------------------------------------------------------
+# driver / storage registries
+# ---------------------------------------------------------------------------
+
+# A driver factory builds the per-party, per-worker ProtocolDrivers for a
+# session: it returns a list of "parties", each a list of num_workers
+# drivers.  Each party gets its own Channels fabric; outputs are collected
+# from every driver exposing a non-empty ``.outputs`` (for two-party GC
+# that is the evaluator side only, matching the protocol).
+
+DriverFactory = Callable[["Session"], list[list[ProtocolDriver]]]
+StorageFactory = Callable[[tuple, np.dtype], StorageBackend]
+
+DRIVERS: dict[str, DriverFactory] = {}
+STORAGE_BACKENDS: dict[str, StorageFactory] = {}
+
+
+def register_driver(name: str, factory: DriverFactory) -> None:
+    DRIVERS[name] = factory
+
+
+def register_storage(name: str, factory: StorageFactory) -> None:
+    STORAGE_BACKENDS[name] = factory
+
+
+def _gc_plaintext_parties(s: "Session") -> list[list[ProtocolDriver]]:
+    w, n, p = s.workload, s.spec.n, s.spec.num_workers
+    return [[PlaintextDriver(w.inputs(n, i, p)) for i in range(p)]]
+
+
+def _gc_two_party_parties(s: "Session") -> list[list[ProtocolDriver]]:
+    # one PartyChannel per worker pair: the one-to-one inter-party
+    # topology of Fig. 3
+    w, n, p = s.workload, s.spec.n, s.spec.num_workers
+    pchans = [PartyChannel() for _ in range(p)]
+    garblers = [GarblerDriver(pchans[i], w.inputs(n, i, p), seed=7)
+                for i in range(p)]
+    evaluators = [EvaluatorDriver(pchans[i], w.inputs(n, i, p))
+                  for i in range(p)]
+    return [garblers, evaluators]
+
+
+def _ckks_parties(s: "Session") -> list[list[ProtocolDriver]]:
+    w, n, p = s.workload, s.spec.n, s.spec.num_workers
+    params = s.ckks_params()
+    return [[CkksDriver(params, w.inputs(n, i, p), seed=0xCEC5)
+             for i in range(p)]]
+
+
+register_driver("gc-plaintext", _gc_plaintext_parties)
+register_driver("gc-2party", _gc_two_party_parties)
+register_driver("ckks", _ckks_parties)
+register_storage("ram", lambda shape, dtype: RamStorage(shape, dtype))
+register_storage("memmap", lambda shape, dtype: MemmapStorage(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# JobSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """Declarative description of one trace→plan→execute job.
+
+    ``memory_budget`` is the paper's T: an ``int`` is an absolute frame
+    count used as-is; a ``float`` in (0, 1] is a fraction of the worker's
+    working set, resolved per worker with the benchmark harness's clamping
+    (floor of ``8 + prefetch_pages`` frames, capped below the working set
+    so there is real memory pressure, prefetch buffer at most a quarter of
+    the budget).  ``None`` requires ``plan_mode="unbounded"``.
+    """
+    workload: str
+    n: int | None = None                  # problem size (None → default_n)
+    num_workers: int = 1
+    memory_budget: int | float | None = None
+    lookahead: int = 10_000               # plan knobs (paper l, B, policy)
+    prefetch_pages: int = 0
+    policy: str = "min"
+    swap_bypass: bool = False
+    plan_mode: str = "memory"             # memory | streaming | unbounded
+    parallel_plan: bool | str = "serial"  # serial | thread | process
+    driver: str = "auto"                  # auto → protocol default
+    storage: str = "ram"                  # ram | memmap
+    workdir: str | None = None            # streaming plan files live here
+    chunk_instrs: int = 8192
+    track_plan_memory: bool = False
+    ckks_ring: int | None = None          # CKKS N override (benchmarks)
+    ckks_levels: int | None = None
+
+    def __post_init__(self):
+        if self.plan_mode not in PLAN_MODES:
+            raise ValueError(f"plan_mode must be one of {PLAN_MODES}, "
+                             f"got {self.plan_mode!r}")
+        if self.plan_mode == "unbounded":
+            if self.memory_budget is not None:
+                raise ValueError("unbounded jobs take no memory_budget")
+        elif self.memory_budget is None:
+            raise ValueError(f"plan_mode={self.plan_mode!r} needs a "
+                             f"memory_budget (frames or working-set fraction)")
+        if isinstance(self.memory_budget, float) and \
+                not 0.0 < self.memory_budget <= 1.0:
+            raise ValueError("fractional memory_budget must be in (0, 1]")
+
+    # -- derived / resolved ---------------------------------------------------
+
+    def normalized(self, workload: "Workload | None" = None) -> "JobSpec":
+        """Fill workload-dependent defaults (n, driver) in."""
+        w = workload if workload is not None else get(self.workload)
+        changes = {}
+        if self.n is None:
+            changes["n"] = w.default_n
+        if self.driver == "auto":
+            changes["driver"] = "ckks" if w.protocol == "ckks" \
+                else "gc-plaintext"
+        return dataclasses.replace(self, **changes) if changes else self
+
+    def plan_hash(self, workload: "Workload | None" = None) -> str:
+        """Digest of the plan-determining fields (see PLAN_HASH_FIELDS)."""
+        spec = self.normalized(workload)
+        payload = {k: getattr(spec, k) for k in PLAN_HASH_FIELDS}
+        blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "JobSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown JobSpec fields: {sorted(unknown)}")
+        return cls(**d)
+
+
+def resolve_plan_config(spec: JobSpec, prog: Program,
+                        working_set: int | None = None) -> PlanConfig:
+    """Turn a spec's budget into a concrete per-worker PlanConfig."""
+    b = spec.memory_budget
+    prefetch = spec.prefetch_pages
+    if isinstance(b, float):
+        ws = working_set if working_set is not None else working_set_pages(
+            compute_touches(prog, strip_frees(prog.instrs)))
+        min_frames = 8 + prefetch
+        budget = max(int(ws * b), min_frames)
+        budget = min(budget, max(ws - 1, min_frames))
+        prefetch = min(prefetch, max(budget // 4, 1))
+    else:
+        budget = int(b)
+    return PlanConfig(num_frames=budget, lookahead=spec.lookahead,
+                      prefetch_pages=prefetch, policy=spec.policy,
+                      swap_bypass=spec.swap_bypass)
+
+
+# ---------------------------------------------------------------------------
+# simulate() result
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class WorkerScenarios:
+    """Per-worker §8.2 scenario timings + plan metadata."""
+    unbounded: SimResult
+    os: SimResult
+    mage: SimResult
+    report: PlanReport
+    config: PlanConfig
+    working_set_pages: int
+    page_bytes: int
+    instructions: int
+    program_bytes: int                   # memory program size (file or est.)
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """Staged trace→plan→execute/simulate over one JobSpec.
+
+    Stages cache: ``trace()`` and ``plan()`` are idempotent, ``execute()``
+    and ``simulate()`` call them as needed.  Streaming plans with no
+    explicit ``workdir`` live in a session-owned temp directory — use the
+    session as a context manager (or call :meth:`close`) to clean it up,
+    or :meth:`save_plan` to move the artifacts somewhere durable.
+    """
+
+    def __init__(self, spec: JobSpec, workload: Workload | None = None):
+        """``workload`` overrides the registry lookup (e.g. an unregistered
+        or parameter-adjusted Workload object); its name must match."""
+        if workload is not None and workload.name != spec.workload:
+            raise ValueError(f"workload object {workload.name!r} does not "
+                             f"match spec.workload {spec.workload!r}")
+        self.workload: Workload = workload if workload is not None \
+            else get(spec.workload)
+        self.spec = spec.normalized(self.workload)
+        self._progs: list[Program] | None = None
+        self._planned: list[Program | ProgramFile] | None = None
+        self._cfgs: list[PlanConfig | None] | None = None
+        self._ws: dict[int, int] = {}
+        self._tmpdir: str | None = None
+        self.plan_reports: list[PlanReport] = []
+        self.engine_stats: list[EngineStats] = []
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        if self._tmpdir is not None:
+            shutil.rmtree(self._tmpdir, ignore_errors=True)
+            self._tmpdir = None
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- helpers ---------------------------------------------------------------
+
+    @property
+    def protocol(self) -> str:
+        return self.workload.protocol
+
+    def ckks_params(self) -> CkksParams:
+        from .workloads.ckks_workloads import PARAMS as DEFAULT_CKKS
+        base = self.workload.params.get("ckks_params", DEFAULT_CKKS)
+        if self.spec.ckks_ring is None and self.spec.ckks_levels is None:
+            return base
+        # replace, don't rebuild: keep the base's scale/noise parameters
+        return dataclasses.replace(
+            base, n_ring=self.spec.ckks_ring or base.n_ring,
+            levels=self.spec.ckks_levels or base.levels)
+
+    def working_set(self, worker: int = 0) -> int:
+        """Peak live pages of one worker's virtual trace (w of §2.4.3)."""
+        if worker not in self._ws:
+            prog = self.trace()[worker]
+            touches = compute_touches(prog, strip_frees(prog.instrs))
+            self._ws[worker] = working_set_pages(touches)
+        return self._ws[worker]
+
+    def _workdir(self) -> str | None:
+        if self.spec.workdir is not None:
+            return self.spec.workdir
+        if self.spec.plan_mode == "streaming":
+            if self._tmpdir is None:
+                self._tmpdir = tempfile.mkdtemp(prefix="mage_job_")
+            return self._tmpdir
+        return None
+
+    # -- stage 1: trace --------------------------------------------------------
+
+    def trace(self) -> list[Program]:
+        """Trace the workload's DSL program, one bytecode per worker; the
+        spec hash is stamped into every program's meta (placement, §6.1)."""
+        if self._progs is None:
+            spec = self.spec
+            extra = {}
+            if self.protocol == "ckks":
+                extra["ckks_params"] = self.ckks_params()
+            progs = self.workload.trace(spec.n, spec.num_workers, **extra)
+            h = spec.plan_hash(self.workload)
+            for p in progs:
+                p.meta["spec_hash"] = h
+                p.meta["job_spec"] = spec.to_dict()
+            self._progs = progs
+        return self._progs
+
+    # -- stage 2: plan ---------------------------------------------------------
+
+    def plan(self) -> list[Program | ProgramFile]:
+        """Replacement + scheduling per worker (§6.1) under the spec's
+        budget and mode; returns memory programs (files when streaming)."""
+        if self._planned is None:
+            progs = self.trace()
+            spec = self.spec
+            if spec.plan_mode == "unbounded":
+                self._planned = list(progs)
+                self._cfgs = [None] * len(progs)
+                self.plan_reports = [PlanReport() for _ in progs]
+            else:
+                cfgs = [resolve_plan_config(spec, p, self.working_set(i))
+                        if isinstance(spec.memory_budget, float)
+                        else resolve_plan_config(spec, p)
+                        for i, p in enumerate(progs)]
+                planned, reports = plan_workers(
+                    progs, cfgs, parallel=spec.parallel_plan,
+                    streaming=spec.plan_mode == "streaming",
+                    workdir=self._workdir(),
+                    track_memory=spec.track_plan_memory,
+                    chunk_instrs=spec.chunk_instrs)
+                self._planned = planned
+                self._cfgs = cfgs
+                self.plan_reports = reports
+        return self._planned
+
+    # -- stage 3a: execute -----------------------------------------------------
+
+    def _driver_name(self, real: bool | None) -> str:
+        if real is None or self.protocol != "gc":
+            return self.spec.driver      # CKKS is real crypto either way
+        return "gc-2party" if real else "gc-plaintext"
+
+    def execute(self, real: bool | None = None,
+                check: bool = False) -> dict[int, np.ndarray]:
+        """Run the planned programs through the engine; returns the merged
+        ``tag → value`` outputs.  ``real`` overrides the spec's driver for
+        GC (True → two-party crypto, False → plaintext oracle)."""
+        planned = self.plan()
+        spec = self.spec
+        name = self._driver_name(real)
+        try:
+            factory = DRIVERS[name]
+        except KeyError:
+            raise KeyError(f"unknown driver {name!r}; registered: "
+                           f"{sorted(DRIVERS)}") from None
+        try:
+            make_storage = STORAGE_BACKENDS[spec.storage]
+        except KeyError:
+            raise KeyError(f"unknown storage {spec.storage!r}; registered: "
+                           f"{sorted(STORAGE_BACKENDS)}") from None
+
+        parties = factory(self)
+        jobs = []
+        for pi, drivers in enumerate(parties):
+            channels = Channels(spec.num_workers)
+            for wk, drv in enumerate(drivers):
+                prog = planned[wk]
+                storage = make_storage((prog.page_slots, drv.lane),
+                                       drv.dtype)
+                jobs.append(EngineJob(prog, drv, channels=channels,
+                                      storage=storage,
+                                      tag=f"party{pi}/worker{wk}"))
+        self.engine_stats = run_engines(jobs)
+        outputs: dict[int, np.ndarray] = {}
+        for drivers in parties:
+            for d in drivers:
+                outputs.update(getattr(d, "outputs", {}))
+        if check:
+            check_outputs(self.workload, spec.n, outputs)
+        return outputs
+
+    # -- stage 3b: simulate ----------------------------------------------------
+
+    def simulate(self, cost_fn: Callable, model: DeviceModel | None = None,
+                 os_page_bytes: int | None = None,
+                 slot_bytes: int | None = None) -> list[WorkerScenarios]:
+        """Replay the three §8.2 scenarios (Unbounded / OS swap / MAGE)
+        per worker with the given per-instruction cost model."""
+        if self.spec.plan_mode == "unbounded":
+            raise ValueError("simulate() compares scenarios under a memory "
+                             "budget; plan_mode='unbounded' has none")
+        progs = self.trace()
+        planned = self.plan()
+        if any(c is None for c in self._cfgs):
+            raise ValueError(
+                "simulate() needs the plan configs and reports of an "
+                "in-session plan(); a Session loaded with from_plan() can "
+                "only execute() its artifacts")
+        sb = slot_bytes if slot_bytes is not None else SLOT_BYTES[self.protocol]
+        out = []
+        for wk, prog in enumerate(progs):
+            page_bytes = prog.page_slots * sb
+            cfg = self._cfgs[wk]
+            ub = simulate_unbounded(prog, cost_fn)
+            osr = simulate_os_paging(prog, cost_fn, cfg.num_frames,
+                                     page_bytes, model,
+                                     os_page_bytes=os_page_bytes)
+            mem = planned[wk]
+            mage = simulate_memory_program(mem, cost_fn, page_bytes, model)
+            if isinstance(mem, ProgramFile):
+                nbytes = os.path.getsize(mem.path)
+            else:
+                from .core.bytecode import RECORD_BYTES
+                nbytes = len(mem) * RECORD_BYTES
+            out.append(WorkerScenarios(
+                unbounded=ub, os=osr, mage=mage,
+                report=self.plan_reports[wk], config=cfg,
+                working_set_pages=self.working_set(wk),
+                page_bytes=page_bytes, instructions=len(prog),
+                program_bytes=nbytes))
+        return out
+
+    # -- plan artifacts --------------------------------------------------------
+
+    def save_plan(self, outdir: str | os.PathLike) -> str:
+        """Write the planned memory programs + a ``job.json`` manifest to
+        ``outdir``; returns the manifest path.  Streaming plan files are
+        moved (they can be far larger than RAM), in-memory plans are
+        serialized."""
+        outdir = os.fspath(outdir)
+        os.makedirs(outdir, exist_ok=True)
+        planned = self.plan()
+        names = []
+        for i, p in enumerate(planned):
+            dst = os.path.join(outdir, f"worker{i}.memory.bc")
+            if isinstance(p, ProgramFile):
+                if os.path.abspath(p.path) != os.path.abspath(dst):
+                    shutil.move(p.path, dst)
+                    srcdir = os.path.dirname(p.path)
+                    if not os.listdir(srcdir):
+                        os.rmdir(srcdir)
+                planned[i] = ProgramFile(dst)
+            else:
+                planned[i] = write_program(p, dst)
+            names.append(os.path.basename(dst))
+        manifest = {"format": 1, "spec": self.spec.to_dict(),
+                    "spec_hash": self.spec.plan_hash(self.workload),
+                    "programs": names}
+        path = os.path.join(outdir, JOB_FILE)
+        with open(path, "w") as f:
+            json.dump(manifest, f, indent=2)
+        return path
+
+    @classmethod
+    def from_plan(cls, jobdir: str | os.PathLike,
+                  storage: str | None = None,
+                  driver: str | None = None) -> "Session":
+        """Load a saved plan for direct execution.
+
+        The spec hash is recomputed from the manifest's spec and validated
+        against both the manifest and every program file's stamped meta —
+        a mismatch (edited job.json, swapped plan files, changed planner
+        semantics) raises :class:`SpecMismatchError` instead of executing
+        a stale plan.  ``storage``/``driver`` override execution details
+        (which are excluded from the hash by design)."""
+        jobdir = os.fspath(jobdir)
+        with open(os.path.join(jobdir, JOB_FILE)) as f:
+            manifest = json.load(f)
+        spec = JobSpec.from_dict(manifest["spec"])
+        expect = spec.plan_hash()
+        if manifest.get("spec_hash") != expect:
+            raise SpecMismatchError(
+                f"job.json spec hashes to {expect} but manifest claims "
+                f"{manifest.get('spec_hash')} — spec was modified after "
+                f"planning; re-run `plan`")
+        overrides = {}
+        if storage is not None:
+            overrides["storage"] = storage
+        if driver is not None:
+            overrides["driver"] = driver
+        if overrides:
+            spec = dataclasses.replace(spec, **overrides)
+        sess = cls(spec)
+        names = manifest["programs"]
+        if len(names) != sess.spec.num_workers:
+            raise SpecMismatchError(
+                f"{len(names)} program files for "
+                f"{sess.spec.num_workers} workers")
+        planned = []
+        for name in names:
+            pf = ProgramFile(os.path.join(jobdir, name))
+            got = pf.meta.get("spec_hash")
+            if got != expect:
+                raise SpecMismatchError(
+                    f"{name} was planned for spec {got}, job.json says "
+                    f"{expect} — artifact and spec disagree")
+            planned.append(pf)
+        sess._planned = planned
+        sess._cfgs = [None] * len(planned)
+        return sess
+
+
+# ---------------------------------------------------------------------------
+# oracle check
+# ---------------------------------------------------------------------------
+
+
+def check_outputs(w: Workload, n: int, outputs: dict[int, np.ndarray],
+                  atol: float = 2e-2) -> None:
+    """Compare executed outputs against the workload's numpy oracle."""
+    exp = w.oracle(n)
+    missing = set(exp) - set(outputs)
+    assert not missing, f"{w.name}: missing outputs {sorted(missing)[:5]}..."
+    for tag, e in exp.items():
+        got = outputs[tag]
+        if w.protocol == "gc":
+            assert np.array_equal(got, e), \
+                f"{w.name} tag {tag}: {got[:4]} != {e[:4]}"
+        else:
+            err = np.max(np.abs(np.asarray(got) - e))
+            assert err < atol, f"{w.name} tag {tag}: err {err}"
+
+
+def run_job(spec: JobSpec, real: bool | None = None,
+            check: bool = False) -> dict[int, np.ndarray]:
+    """One-shot convenience: trace, plan, execute, clean up."""
+    with Session(spec) as s:
+        return s.execute(real=real, check=check)

@@ -5,7 +5,7 @@ scheduling (lookahead prefetch) → memory program → engine.
 """
 
 from .bytecode import (DIRECTIVES, INF, Instr, Op, Program, ProgramFile,
-                       ProgramWriter, write_program)
+                       ProgramWriter, iter_instructions, write_program)
 from .dsl import Builder, Value, current_builder, trace
 from .engine import Channels, Engine, EngineStats, ProtocolDriver
 from .liveness import AnnotationReader, annotate_next_use
@@ -19,12 +19,12 @@ from .scheduling import ScheduleStats, plan_schedule, plan_schedule_file
 from .simulator import (DeviceModel, SimResult, simulate_memory_program,
                         simulate_os_paging, simulate_unbounded)
 from .storage import AsyncIO, MemmapStorage, RamStorage
-from .workers import (ProgramOptions, plan_workers, recv_into, run_workers,
-                      send_value, trace_workers)
+from .workers import (EngineJob, ProgramOptions, plan_workers, recv_into,
+                      run_engines, run_workers, send_value, trace_workers)
 
 __all__ = [
     "DIRECTIVES", "INF", "Instr", "Op", "Program", "ProgramFile",
-    "ProgramWriter", "write_program",
+    "ProgramWriter", "iter_instructions", "write_program",
     "Builder", "Value", "current_builder", "trace",
     "Channels", "Engine", "EngineStats", "ProtocolDriver",
     "AnnotationReader", "annotate_next_use",
@@ -36,6 +36,6 @@ __all__ = [
     "DeviceModel", "SimResult", "simulate_memory_program",
     "simulate_os_paging", "simulate_unbounded",
     "AsyncIO", "MemmapStorage", "RamStorage",
-    "ProgramOptions", "plan_workers", "recv_into", "run_workers",
-    "send_value", "trace_workers",
+    "EngineJob", "ProgramOptions", "plan_workers", "recv_into",
+    "run_engines", "run_workers", "send_value", "trace_workers",
 ]

@@ -157,6 +157,13 @@ def strip_frees(instrs: Sequence[Instr]) -> list[Instr]:
     return [i for i in instrs if i.op != Op.FREE]
 
 
+def iter_instructions(prog) -> Iterator[Instr]:
+    """Instruction stream of an in-memory Program or an on-disk ProgramFile
+    (chunk-decoded, so consumers of a paper-scale file stay O(chunk))."""
+    instrs = getattr(prog, "instrs", None)
+    return iter(instrs) if instrs is not None else prog.iter_instrs()
+
+
 # ---------------------------------------------------------------------------
 # On-disk chunked bytecode format (§6.1: the planner is out-of-core).
 #

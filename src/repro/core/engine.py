@@ -20,7 +20,7 @@ from typing import Any, Callable
 
 import numpy as np
 
-from .bytecode import Instr, Op, Program, ProgramFile
+from .bytecode import Instr, Op, Program, ProgramFile, iter_instructions
 from .storage import AsyncIO, MemmapStorage, RamStorage, StorageBackend
 
 
@@ -128,13 +128,23 @@ class Engine:
             fut.result()
 
     def _instructions(self):
-        instrs = getattr(self.prog, "instrs", None)
-        return iter(instrs) if instrs is not None else self.prog.iter_instrs()
+        return iter_instructions(self.prog)
 
     # -- main loop ---------------------------------------------------------------
 
     def run(self, on_output: Callable[[Instr, list[np.ndarray]], None] | None = None
             ) -> EngineStats:
+        # try/finally: a mid-run driver/storage exception must not leak the
+        # AsyncIO thread pool or an open (possibly temp-file) backend.
+        try:
+            self._run_loop(on_output)
+        finally:
+            self.stats.io_read_bytes = self.io.bytes_read
+            self.stats.io_write_bytes = self.io.bytes_written
+            self.io.close()
+        return self.stats
+
+    def _run_loop(self, on_output) -> None:
         drv = self.driver
         w = self.prog.worker
         for instr in self._instructions():
@@ -198,7 +208,3 @@ class Engine:
                             [self._view(s) for s in instr.outs],
                             [self._view(s) for s in instr.ins])
         drv.finalize()
-        self.stats.io_read_bytes = self.io.bytes_read
-        self.stats.io_write_bytes = self.io.bytes_written
-        self.io.close()
-        return self.stats

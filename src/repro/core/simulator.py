@@ -24,7 +24,8 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable
 
-from .bytecode import Instr, Op, Program, strip_frees
+from .bytecode import (Instr, Op, Program, ProgramFile, iter_instructions,
+                       strip_frees)
 from .liveness import W_WRITE, compute_touches
 
 
@@ -77,16 +78,17 @@ class _Device:
         return start + xfer + self.m.latency
 
 
-def simulate_unbounded(prog: Program, cost: CostFn) -> SimResult:
+def simulate_unbounded(prog: Program | ProgramFile, cost: CostFn) -> SimResult:
     r = SimResult()
-    for ins in strip_frees(prog.instrs):
+    for ins in iter_instructions(prog):
         if ins.op not in (Op.FREE,):
             r.compute += cost(ins)
     r.total = r.compute
     return r
 
 
-def simulate_memory_program(prog: Program, cost: CostFn, page_bytes: int,
+def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
+                            page_bytes: int,
                             model: DeviceModel | None = None) -> SimResult:
     """Replay a 'physical' or 'memory' phase program."""
     model = model or DeviceModel()
@@ -94,7 +96,7 @@ def simulate_memory_program(prog: Program, cost: CostFn, page_bytes: int,
     r = SimResult()
     t = 0.0
     slot_done: dict[int, float] = {}
-    for ins in prog.instrs:
+    for ins in iter_instructions(prog):
         op = ins.op
         if op == Op.SWAP_IN:
             done = dev.submit(t)

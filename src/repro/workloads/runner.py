@@ -1,62 +1,42 @@
 """Run workloads end-to-end: plaintext oracle check, real two-party GC /
 CKKS execution, bounded-memory execution — the correctness half of §8's
-methodology (the timing half lives in benchmarks/)."""
+methodology (the timing half lives in repro.scenarios / benchmarks/).
+
+These are thin compatibility wrappers over :class:`repro.api.Session`;
+the worker-orchestration core (thread spawn, error collection) lives in
+``repro.core.workers.run_engines`` and nowhere else.
+"""
 
 from __future__ import annotations
 
-import threading
+import dataclasses
 
 import numpy as np
 
-from ..core.bytecode import Program
-from ..core.engine import Channels, Engine
-from ..core.planner import PlanConfig, plan
-from ..protocols.ckks import CkksDriver, CkksParams
-from ..protocols.garbled.driver import (EvaluatorDriver, GarblerDriver,
-                                        PlaintextDriver)
-from ..protocols.garbled.gates import PartyChannel
+from ..api import JobSpec, Session, check_outputs
+from ..core.planner import PlanConfig
 from .base import Workload
-from .ckks_workloads import PARAMS as CKKS_PARAMS
 
 
-def plan_programs(progs: list[Program], cfg: PlanConfig | None):
+def _spec(w: Workload, n: int, num_workers: int, cfg: PlanConfig | None,
+          use_memmap: bool, driver: str) -> JobSpec:
+    kw = dict(workload=w.name, n=n, num_workers=num_workers, driver=driver,
+              storage="memmap" if use_memmap else "ram")
     if cfg is None:
-        return progs, []
-    out, reps = [], []
-    for p in progs:
-        mp, rep = plan(p, cfg)
-        out.append(mp)
-        reps.append(rep)
-    return out, reps
+        kw["plan_mode"] = "unbounded"
+    else:
+        kw.update(memory_budget=cfg.num_frames, lookahead=cfg.lookahead,
+                  prefetch_pages=cfg.prefetch_pages, policy=cfg.policy,
+                  swap_bypass=cfg.swap_bypass)
+    return JobSpec(**kw)
 
 
 def run_gc_plaintext(w: Workload, n: int, num_workers: int = 1,
                      cfg: PlanConfig | None = None,
                      use_memmap: bool = False) -> dict[int, np.ndarray]:
-    progs = w.trace(n, num_workers)
-    progs, _ = plan_programs(progs, cfg)
-    channels = Channels(num_workers)
-    outputs: dict[int, np.ndarray] = {}
-    drivers = [PlaintextDriver(w.inputs(n, i, num_workers))
-               for i in range(num_workers)]
-    errs: list[Exception] = []
-
-    def _run(i: int):
-        try:
-            Engine(progs[i], drivers[i], channels=channels,
-                   use_memmap=use_memmap).run()
-        except Exception as e:  # pragma: no cover
-            errs.append(e)
-
-    ts = [threading.Thread(target=_run, args=(i,), daemon=True)
-          for i in range(num_workers)]
-    [t.start() for t in ts]
-    [t.join() for t in ts]
-    if errs:
-        raise errs[0]
-    for d in drivers:
-        outputs.update(d.outputs)
-    return outputs
+    with Session(_spec(w, n, num_workers, cfg, use_memmap,
+                       "gc-plaintext")) as s:
+        return s.execute()
 
 
 def run_gc_real(w: Workload, n: int, num_workers: int = 1,
@@ -64,70 +44,22 @@ def run_gc_real(w: Workload, n: int, num_workers: int = 1,
                 use_memmap: bool = False) -> dict[int, np.ndarray]:
     """Both parties, all workers: 2p engines, one PartyChannel per worker
     pair (one-to-one inter-party topology, Fig. 3)."""
-    progs = w.trace(n, num_workers)
-    progs, _ = plan_programs(progs, cfg)
-    ch_g = Channels(num_workers)
-    ch_e = Channels(num_workers)
-    pchans = [PartyChannel() for _ in range(num_workers)]
-    g_drivers = [GarblerDriver(pchans[i], w.inputs(n, i, num_workers),
-                               seed=7)
-                 for i in range(num_workers)]
-    e_drivers = [EvaluatorDriver(pchans[i], w.inputs(n, i, num_workers))
-                 for i in range(num_workers)]
-    errs: list[Exception] = []
-
-    def _run(drv, prog, chans):
-        try:
-            Engine(prog, drv, channels=chans, use_memmap=use_memmap).run()
-        except Exception as e:  # pragma: no cover
-            errs.append(e)
-
-    ts = []
-    for i in range(num_workers):
-        ts.append(threading.Thread(target=_run,
-                                   args=(g_drivers[i], progs[i], ch_g),
-                                   daemon=True))
-        ts.append(threading.Thread(target=_run,
-                                   args=(e_drivers[i], progs[i], ch_e),
-                                   daemon=True))
-    [t.start() for t in ts]
-    [t.join() for t in ts]
-    if errs:
-        raise errs[0]
-    outputs: dict[int, np.ndarray] = {}
-    for d in e_drivers:
-        outputs.update(d.outputs)
-    return outputs
+    with Session(_spec(w, n, num_workers, cfg, use_memmap,
+                       "gc-2party")) as s:
+        return s.execute()
 
 
 def run_ckks(w: Workload, n: int, num_workers: int = 1,
              cfg: PlanConfig | None = None, use_memmap: bool = False,
-             params: CkksParams | None = None) -> dict[int, np.ndarray]:
-    params = params or w.params.get("ckks_params", CKKS_PARAMS)
-    progs = w.trace(n, num_workers)
-    progs, _ = plan_programs(progs, cfg)
-    channels = Channels(num_workers)
-    drivers = [CkksDriver(params, w.inputs(n, i, num_workers), seed=0xCEC5)
-               for i in range(num_workers)]
-    errs: list[Exception] = []
-
-    def _run(i: int):
-        try:
-            Engine(progs[i], drivers[i], channels=channels,
-                   use_memmap=use_memmap).run()
-        except Exception as e:  # pragma: no cover
-            errs.append(e)
-
-    ts = [threading.Thread(target=_run, args=(i,), daemon=True)
-          for i in range(num_workers)]
-    [t.start() for t in ts]
-    [t.join() for t in ts]
-    if errs:
-        raise errs[0]
-    outputs: dict[int, np.ndarray] = {}
-    for d in drivers:
-        outputs.update(d.outputs)
-    return outputs
+             params=None) -> dict[int, np.ndarray]:
+    if params is not None:
+        # full CkksParams override (all fields, not just ring/levels):
+        # make it the workload's base params for this run
+        w = dataclasses.replace(w, params={**w.params,
+                                           "ckks_params": params})
+    with Session(_spec(w, n, num_workers, cfg, use_memmap, "ckks"),
+                 workload=w) as s:
+        return s.execute()
 
 
 def run(w: Workload, n: int, real: bool = False, **kw) -> dict[int, np.ndarray]:
@@ -138,14 +70,4 @@ def run(w: Workload, n: int, real: bool = False, **kw) -> dict[int, np.ndarray]:
 
 def check_against_oracle(w: Workload, n: int, outputs: dict[int, np.ndarray],
                          atol: float = 2e-2) -> None:
-    exp = w.oracle(n)
-    missing = set(exp) - set(outputs)
-    assert not missing, f"{w.name}: missing outputs {sorted(missing)[:5]}..."
-    for tag, e in exp.items():
-        got = outputs[tag]
-        if w.protocol == "gc":
-            assert np.array_equal(got, e), \
-                f"{w.name} tag {tag}: {got[:4]} != {e[:4]}"
-        else:
-            err = np.max(np.abs(np.asarray(got) - e))
-            assert err < atol, f"{w.name} tag {tag}: err {err}"
+    check_outputs(w, n, outputs, atol=atol)
