@@ -18,12 +18,34 @@ from __future__ import annotations
 
 from common import fmt_row, run_workload_workers
 
+from repro.scenarios import measure_traffic
 from repro.workloads import get
 
 WORKERS = 4
 CASES = [("merge", 16384), ("sort", 8192), ("mvmul", 384), ("rsum", 256),
          ("rmvmul", 24)]
 GC_OVERRIDES = {"prefetch_pages": 16}
+TRAFFIC_N = 4096            # measured-traffic case (scaled merge)
+
+
+def measured_worker_traffic(check: bool = True):
+    """The communication phases are real: run merge's bitonic exchanges
+    for REAL over the fabric and report the per-link byte accounting
+    (what the straggler model charges at each sync point)."""
+    r = measure_traffic("merge", TRAFFIC_N, num_workers=WORKERS, check=check)
+    print(f"fig10 measured traffic (merge n={TRAFFIC_N}, p={WORKERS}, "
+          f"{r.seconds:.2f}s):")
+    for (src, dst), s in sorted(r.links.items()):
+        print(f"  worker{src} -> worker{dst}: {s.messages:4d} msgs "
+              f"{s.bytes:10d} B")
+    if check:
+        assert r.links, "bitonic merge must exchange remote pairs"
+        # bitonic exchanges are symmetric: both directions move equal bytes
+        for (src, dst), s in r.links.items():
+            back = r.links.get((dst, src))
+            assert back is not None and back.bytes == s.bytes, \
+                f"asymmetric exchange on link {src}<->{dst}"
+    return r
 
 
 def run(check: bool = True):
@@ -46,6 +68,7 @@ def run(check: bool = True):
     if check:
         assert all(osr > mg for _, osr, mg in results.values()), \
             "MAGE must keep beating OS under parallelism"
+    measured_worker_traffic(check=check)
     return results
 
 

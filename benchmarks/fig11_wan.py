@@ -1,27 +1,31 @@
-"""Fig. 11 analogue: garbled circuits over the wide area.
+"""Fig. 11 analogue: garbled circuits over the wide area — MEASURED.
 
-Models §8.7's two effects analytically over the measured per-workload
-byte/OT counts (from the real protocol driver's channel statistics on a
-scaled run):
+§8.7's two effects, over the transport fabric instead of a pure cost
+model:
 
- (a) concurrent OT batching: r rounds in flight over one RTT-limited flow;
- (b) multiple workers = multiple TCP flows, each with per-flow bandwidth;
-     wide-area jitter makes stragglers (max-of-flows completion).
+ * The WAN point is a REAL two-party execution over the ``shaped``
+   backend: the garbler→evaluator link gets Oregon-class latency and
+   per-flow bandwidth, wall-clock is measured, and the byte/OT counts
+   come from the fabric's per-link accounting (``Session.transport_stats``)
+   rather than an analytic estimate.
+ * The concurrency / flow-count sweeps (Fig 11a/11b) extrapolate those
+   measured counts to the paper's n=16384 with the pipelined flow model
+   (r OT rounds in flight over one RTT-limited flow; multiple workers =
+   multiple flows with straggler jitter).
 
 Claims: pipelining OTs improves time monotonically to a bandwidth floor
 (Fig 11a); with >=2 flows the Oregon setup approaches the local time
-(Fig 11b); the WAN penalty stays below the swapping penalty (§8.7's
-conclusion), using fig8's merge MAGE-vs-OS gap as the reference.
+(Fig 11b); and the measured WAN penalty stays below the swapping penalty
+(§8.7's conclusion), using fig8's merge MAGE-vs-OS gap as the reference.
 """
 
 from __future__ import annotations
 
-from repro.core import Engine
-from repro.protocols.garbled.driver import GarblerDriver  # noqa: E402
-from repro.protocols.garbled.gates import PartyChannel  # noqa: E402
-from repro.workloads import get  # noqa: E402
+import numpy as np
 
-import numpy as np  # noqa: E402
+from repro.api import FabricSpec
+from repro.protocols.garbled.gates import PartyChannel
+from repro.scenarios import measure_traffic
 
 RTT_OREGON = 0.011          # s (paper: ~11 ms)
 RTT_IOWA = 0.045
@@ -31,36 +35,18 @@ FLOW_BW_OREGON = 250e6      # bytes/s per flow
 FLOW_BW_IOWA = 60e6
 JITTER = 0.15               # per-flow wide-area variation (stragglers)
 
+MEASURE_N = 64              # scaled real run (extrapolated to 16384)
+OT_TAG = PartyChannel.TAGS["ot"]
 
-def measure_traffic(n: int = 256) -> tuple[int, int, float]:
-    """Run the real garbler on a scaled merge to count bytes + OT batches,
-    then scale per-record."""
-    w = get("merge")
-    prog = w.trace(n)[0]
-    ch = PartyChannel()
-    # drain the channel on a thread so the garbler can run alone
-    import threading
-    stop = threading.Event()
-    stats = {"bytes": 0, "msgs": 0, "ot": 0}
 
-    def drain():
-        while not stop.is_set() or not ch.q.empty():
-            try:
-                kind, arr = ch.q.get(timeout=0.05)
-            except Exception:
-                continue
-            stats["bytes"] += arr.nbytes
-            stats["msgs"] += 1
-            if kind == "ot":
-                stats["ot"] += 1   # only OTs need round trips (tables are
-                #                    one-way streaming)
-    t = threading.Thread(target=drain, daemon=True)
-    t.start()
-    g = GarblerDriver(ch, lambda tag: np.zeros(32, dtype=np.uint64))
-    Engine(prog, g).run()
-    stop.set()
-    t.join()
-    return stats["bytes"], stats["ot"], g.cost_model.and_s
+def measured_runs(n: int = MEASURE_N):
+    """Real two-party GC merge, twice: local fabric, then Oregon-shaped."""
+    local = measure_traffic("merge", n, driver="gc-2party", check=True)
+    wan = measure_traffic(
+        "merge", n, driver="gc-2party", transport="shaped",
+        fabric=FabricSpec(latency_s=RTT_OREGON, bandwidth=FLOW_BW_OREGON),
+        check=True)
+    return local, wan
 
 
 def wan_time(total_bytes: int, n_msgs: int, compute_s: float, rtt: float,
@@ -76,10 +62,31 @@ def wan_time(total_bytes: int, n_msgs: int, compute_s: float, rtt: float,
 
 
 def run(check: bool = True):
-    total_bytes, n_msgs, _ = measure_traffic(n=256)
-    scale = (16384 / 256) ** 1.1     # merge traffic ~ n log n
-    total_bytes = int(total_bytes * scale)
-    n_msgs = int(n_msgs * scale)
+    local, wan = measured_runs()
+    ge_link = next(iter(local.links))    # the garbler→evaluator link
+    total_bytes = local.total_bytes
+    ot_msgs = sum(s.messages for (src, dst, tag), s in local.stats.items()
+                  if tag == OT_TAG)
+    print(f"fig11 measured (merge n={MEASURE_N}, link {ge_link}): "
+          f"{total_bytes} B, {local.total_messages} msgs "
+          f"({ot_msgs} OT batches)")
+    print(f"fig11 measured: local={local.seconds:6.2f}s  "
+          f"oregon-shaped={wan.seconds:6.2f}s  "
+          f"(shaped moved {wan.total_bytes} B — identical traffic: "
+          f"{wan.total_bytes == total_bytes})")
+    wan_penalty_measured = wan.seconds / local.seconds
+    print(f"fig11 CLAIM (measured): WAN penalty "
+          f"{wan_penalty_measured:.2f}x < OS-swap penalty "
+          f"(~6.5x from fig8 merge)")
+    if check:
+        assert wan.total_bytes == total_bytes, \
+            "shaping must not change what crosses the link"
+        assert wan_penalty_measured < 6.5
+
+    # extrapolate the measured counts to the paper's size (traffic ~ n log n)
+    scale = (16384 / MEASURE_N) ** 1.1
+    big_bytes = int(total_bytes * scale)
+    big_ots = int(ot_msgs * scale)
     compute_s = 5.8                   # fig8 merge unbounded time
     local_time = compute_s * 1.008    # fig8 merge MAGE result
 
@@ -87,19 +94,18 @@ def run(check: bool = True):
     prev = float("inf")
     times_a = []
     for c in [1, 2, 4, 8, 16, 32]:
-        tt = wan_time(total_bytes, n_msgs, compute_s, RTT_OREGON,
+        tt = wan_time(big_bytes, big_ots, compute_s, RTT_OREGON,
                       FLOW_BW_OREGON, flows=1, concurrent_ots=c)
         times_a.append(tt)
         print(f"  concurrent={c:3d}: {tt:7.2f}s")
         assert tt <= prev + 1e-9
         prev = tt
-
     print("fig11b: workers/flows")
     for setup, rtt, bw in [("oregon", RTT_OREGON, FLOW_BW_OREGON),
                            ("iowa", RTT_IOWA, FLOW_BW_IOWA)]:
         times = []
         for flows in [1, 2, 4, 8]:
-            tt = wan_time(total_bytes, n_msgs, compute_s, rtt, bw,
+            tt = wan_time(big_bytes, big_ots, compute_s, rtt, bw,
                           flows=flows, concurrent_ots=32)
             times.append(tt)
             print(f"  {setup:7s} flows={flows}: {tt:7.2f}s "
@@ -107,10 +113,9 @@ def run(check: bool = True):
         if setup == "oregon" and check:
             assert times[1] < 1.6 * local_time, \
                 "2 flows should approach local performance (Oregon)"
-    # §8.7 conclusion: WAN penalty < swapping penalty (OS was ~6.5x MAGE)
     wan_penalty = times_a[-1] / local_time
-    print(f"fig11 CLAIM: WAN penalty {wan_penalty:.2f}x < OS-swap penalty "
-          f"(~6.5x from fig8 merge)")
+    print(f"fig11 CLAIM (extrapolated): WAN penalty {wan_penalty:.2f}x "
+          f"< OS-swap penalty (~6.5x from fig8 merge)")
     if check:
         assert wan_penalty < 6.5
     return times_a

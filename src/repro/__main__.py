@@ -3,21 +3,36 @@ execute; §8.2 — the scenario benchmarks).
 
     python -m repro plan  --workload merge -n 4096 --budget 0.25 --out job/
     python -m repro run   job/ --check [--storage memmap] [--real]
+    python -m repro run   job/ --worker 1 --peers h0:9000,h1:9001 [--json o.json]
+    python -m repro fabric job/ [--check] [--real] [--json merged.json]
     python -m repro bench [--tiny] [--streaming] [--json out.json]
 
 ``plan`` writes memory-program files through the out-of-core streaming
 pipeline plus a ``job.json`` manifest; the spec hash is stamped into every
 program's header so ``run`` validates artifacts before executing them and
 rejects stale or tampered plans (SpecMismatchError, exit code 2).
+
+``run --worker K`` is the §5.2 deployment unit: ONE engine (global rank K =
+party*num_workers + worker) against remote peers over the TCP transport
+fabric; ``fabric`` launches the whole fleet as N localhost processes,
+merges their outputs, and can check them against the oracle.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
+import tempfile
 
-from .api import JobSpec, Session, SpecMismatchError, run_job
+import numpy as np
+
+from .api import (FabricSpec, JobSpec, Session, SpecMismatchError,
+                  check_outputs, driver_parties, run_job)
+from .core.transport import TransportError, pick_free_ports
+from .workloads import get as get_workload
 
 
 def _parse_budget(text: str) -> int | float:
@@ -77,8 +92,28 @@ def cmd_plan(args) -> int:
 
 
 def cmd_run(args) -> int:
+    transport = args.transport
+    fabric = None
+    if transport == "shaped":
+        fabric = FabricSpec(latency_s=args.latency,
+                            bandwidth=args.bandwidth)
+    elif args.latency or args.bandwidth:
+        raise SystemExit("error: --latency/--bandwidth need "
+                         "--transport shaped")
+    if args.worker is not None:
+        if not args.peers:
+            raise SystemExit("error: --worker needs --peers host:port,... "
+                             "(one address per global rank)")
+        if args.check:
+            raise SystemExit("error: --check needs the full outputs; a "
+                             "--worker rank only holds its own (use "
+                             "`python -m repro fabric` instead)")
+        transport = transport or "tcp"
+        fabric = FabricSpec(rank=args.worker,
+                            peers=tuple(args.peers.split(",")))
     sess = Session.from_plan(args.jobdir, storage=args.storage,
-                             driver=args.driver)
+                             driver=args.driver, transport=transport,
+                             fabric=fabric)
     with sess:
         outputs = sess.execute(real=args.real or None, check=args.check)
     for tag in sorted(outputs):
@@ -86,7 +121,85 @@ def cmd_run(args) -> int:
         head = ", ".join(str(x) for x in list(v.flat[:4]))
         print(f"output[{tag}]: shape={getattr(v, 'shape', ())} "
               f"[{head}{', ...' if v.size > 4 else ''}]")
+    if args.json:
+        _dump_outputs(args.json, outputs)
+        print(f"wrote {args.json}")
     if args.check:
+        print("oracle check OK")
+    return 0
+
+
+def _dump_outputs(path: str, outputs: dict) -> None:
+    with open(path, "w") as f:
+        json.dump({str(tag): np.asarray(v).tolist()
+                   for tag, v in outputs.items()}, f)
+
+
+def _load_outputs(path: str, protocol: str) -> dict:
+    dtype = np.uint64 if protocol == "gc" else np.float64
+    with open(path) as f:
+        return {int(tag): np.asarray(v, dtype=dtype)
+                for tag, v in json.load(f).items()}
+
+
+def cmd_fabric(args) -> int:
+    """Launch one `run --worker K` process per global rank on localhost."""
+    with open(os.path.join(args.jobdir, "job.json")) as f:
+        spec = JobSpec.from_dict(json.load(f)["spec"]).normalized()
+    w = get_workload(spec.workload)
+    driver = args.driver or spec.driver
+    if args.real and w.protocol == "gc":
+        driver = "gc-2party"
+    n_ranks = driver_parties(driver) * spec.num_workers
+    peers = ",".join(f"127.0.0.1:{p}" for p in pick_free_ports(n_ranks))
+    print(f"fabric: {n_ranks} ranks ({driver}) over {peers}")
+
+    env = dict(os.environ)
+    pkg_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = pkg_root + os.pathsep + env.get("PYTHONPATH", "")
+    outputs: dict = {}
+    with tempfile.TemporaryDirectory(prefix="mage_fabric_") as outdir:
+        procs = []
+        for rank in range(n_ranks):
+            out_json = os.path.join(outdir, f"rank{rank}.json")
+            cmd = [sys.executable, "-m", "repro", "run", args.jobdir,
+                   "--worker", str(rank), "--peers", peers,
+                   "--json", out_json]
+            if driver != spec.driver:
+                cmd += ["--driver", driver]
+            if args.storage:
+                cmd += ["--storage", args.storage]
+            procs.append((rank, out_json,
+                          subprocess.Popen(cmd, env=env)))
+        failed = []
+        try:
+            for rank, _, proc in procs:
+                try:
+                    rc = proc.wait(timeout=args.timeout)
+                except subprocess.TimeoutExpired:
+                    failed.append((rank, f"timeout after {args.timeout}s"))
+                    # peers block on the stuck rank's traffic: kill the
+                    # whole fleet now, not after n_ranks x timeout
+                    for _, _, p in procs:
+                        if p.poll() is None:
+                            p.kill()
+                    continue
+                if rc != 0:
+                    failed.append((rank, rc))
+        finally:
+            for rank, _, proc in procs:  # don't leak ranks on error/timeout
+                if proc.poll() is None:
+                    proc.kill()
+        if failed:
+            raise SystemExit(f"error: fabric ranks failed: {failed}")
+        for rank, out_json, _ in procs:
+            outputs.update(_load_outputs(out_json, w.protocol))
+    print(f"fabric: merged {len(outputs)} outputs from {n_ranks} ranks")
+    if args.json:
+        _dump_outputs(args.json, outputs)
+        print(f"wrote {args.json}")
+    if args.check:
+        check_outputs(w, spec.n, outputs)
         print("oracle check OK")
     return 0
 
@@ -144,7 +257,37 @@ def main(argv=None) -> int:
                    help="GC: run real two-party crypto")
     p.add_argument("--storage", default=None, choices=("ram", "memmap"))
     p.add_argument("--driver", default=None)
+    p.add_argument("--worker", type=int, default=None, metavar="K",
+                   help="distributed mode: run ONLY global rank K "
+                        "(party*workers + worker) against --peers")
+    p.add_argument("--peers", default=None,
+                   help="comma list of host:port, one per global rank")
+    p.add_argument("--transport", default=None,
+                   choices=("inproc", "tcp", "shaped"),
+                   help="transport backend (default: inproc; "
+                        "--worker defaults to tcp)")
+    p.add_argument("--latency", type=float, default=0.0,
+                   help="shaped: per-link one-way latency (s)")
+    p.add_argument("--bandwidth", type=float, default=None,
+                   help="shaped: per-link bandwidth (bytes/s)")
+    p.add_argument("--json", metavar="PATH",
+                   help="write this process's outputs as JSON")
     p.set_defaults(fn=cmd_run)
+
+    p = sub.add_parser("fabric", help="run a planned job as an N-process "
+                                      "localhost TCP fleet")
+    p.add_argument("jobdir")
+    p.add_argument("--check", action="store_true",
+                   help="verify the merged outputs against the oracle")
+    p.add_argument("--real", action="store_true",
+                   help="GC: run real two-party crypto (2x the ranks)")
+    p.add_argument("--storage", default=None, choices=("ram", "memmap"))
+    p.add_argument("--driver", default=None)
+    p.add_argument("--json", metavar="PATH",
+                   help="write the merged outputs as JSON")
+    p.add_argument("--timeout", type=float, default=300.0,
+                   help="per-rank process timeout (s)")
+    p.set_defaults(fn=cmd_fabric)
 
     p = sub.add_parser("exec", help="trace+plan+execute in one shot")
     _add_spec_args(p)
@@ -171,8 +314,9 @@ def main(argv=None) -> int:
     except SpecMismatchError as e:
         print(f"error: {e}", file=sys.stderr)
         raise SystemExit(2)
-    except (ValueError, KeyError) as e:
-        # predictable spec/registry errors: clean CLI message, not a trace
+    except (ValueError, KeyError, TransportError) as e:
+        # predictable spec/registry/fabric errors: clean CLI message,
+        # not a trace
         print(f"error: {e}", file=sys.stderr)
         raise SystemExit(1)
 

@@ -14,11 +14,20 @@ can be saved to a directory (``save_plan``) and executed later or elsewhere
 carries the spec hash in its ``meta`` so stale or tampered artifacts are
 rejected instead of silently executed.
 
-Drivers and storage backends are *registries* keyed by name
-(``{"gc-plaintext", "gc-2party", "ckks"} × {"ram", "memmap"}`` in-tree), so
-call sites select protocols by string instead of importing concrete classes;
-``register_driver`` / ``register_storage`` extend them (§4.3's extensibility
-argument, surfaced at the API).
+Drivers, storage backends and transports are *registries* keyed by name
+(``{"gc-plaintext", "gc-2party", "ckks"} × {"ram", "memmap"} ×
+{"inproc", "tcp", "shaped"}`` in-tree), so call sites select protocols by
+string instead of importing concrete classes; ``register_driver`` /
+``register_storage`` / ``register_transport`` extend them (§4.3's
+extensibility argument, surfaced at the API).
+
+All communication — intra-party NET_* directives and inter-party garbled
+traffic — rides one transport fabric (``core.transport``).  A spec's
+``transport`` picks the backend and its ``fabric`` (:class:`FabricSpec`)
+places endpoints: ``rank=None`` runs every engine in this process
+(threads), ``rank=k`` runs exactly one engine against remote peers —
+that is ``python -m repro run --worker k --peers ...`` (§5.2's
+one-engine-per-worker-per-party deployment; see docs/DISTRIBUTED.md).
 """
 
 from __future__ import annotations
@@ -34,12 +43,14 @@ from typing import Callable
 import numpy as np
 
 from .core.bytecode import (Program, ProgramFile, strip_frees, write_program)
-from .core.engine import Channels, EngineStats, ProtocolDriver
+from .core.engine import EngineStats, ProtocolDriver
 from .core.liveness import compute_touches, working_set_pages
 from .core.planner import PlanConfig, PlanReport
 from .core.simulator import (DeviceModel, SimResult, simulate_memory_program,
                              simulate_os_paging, simulate_unbounded)
 from .core.storage import MemmapStorage, RamStorage, StorageBackend
+from .core.transport import Fabric, FabricSpec, LinkStats, build_fabric
+from .core.transport import register_transport  # noqa: F401  (re-export)
 from .core.workers import EngineJob, plan_workers, run_engines
 from .protocols.ckks import CkksDriver, CkksParams
 from .protocols.garbled.driver import (EvaluatorDriver, GarblerDriver,
@@ -74,54 +85,84 @@ class SpecMismatchError(ValueError):
 # driver / storage registries
 # ---------------------------------------------------------------------------
 
-# A driver factory builds the per-party, per-worker ProtocolDrivers for a
-# session: it returns a list of "parties", each a list of num_workers
-# drivers.  Each party gets its own Channels fabric; outputs are collected
-# from every driver exposing a non-empty ``.outputs`` (for two-party GC
-# that is the evaluator side only, matching the protocol).
+# A driver factory builds ProtocolDrivers for the endpoints THIS process
+# hosts: it gets the session and the connected Fabric and returns
+# {global_rank: driver} for fabric.hosted only — so a distributed
+# single-rank process constructs exactly its own driver.  Global rank =
+# party * num_workers + worker; the registry records how many parties a
+# driver deploys (gc-2party: 2, everything else: 1).  Outputs are
+# collected from every hosted driver exposing a non-empty ``.outputs``
+# (for two-party GC that is the evaluator side only, matching the
+# protocol).
 
-DriverFactory = Callable[["Session"], list[list[ProtocolDriver]]]
+DriverFactory = Callable[["Session", Fabric], dict[int, ProtocolDriver]]
 StorageFactory = Callable[[tuple, np.dtype], StorageBackend]
 
-DRIVERS: dict[str, DriverFactory] = {}
+
+@dataclasses.dataclass(frozen=True)
+class DriverDef:
+    factory: DriverFactory
+    parties: int = 1
+
+
+DRIVERS: dict[str, DriverDef] = {}
 STORAGE_BACKENDS: dict[str, StorageFactory] = {}
 
 
-def register_driver(name: str, factory: DriverFactory) -> None:
-    DRIVERS[name] = factory
+def register_driver(name: str, factory: DriverFactory,
+                    parties: int = 1) -> None:
+    DRIVERS[name] = DriverDef(factory, parties)
+
+
+def driver_parties(name: str) -> int:
+    """Number of parties (rank blocks) a registered driver deploys."""
+    return _driver_def(name).parties
+
+
+def _driver_def(name: str) -> DriverDef:
+    try:
+        return DRIVERS[name]
+    except KeyError:
+        raise KeyError(f"unknown driver {name!r}; registered: "
+                       f"{sorted(DRIVERS)}") from None
 
 
 def register_storage(name: str, factory: StorageFactory) -> None:
     STORAGE_BACKENDS[name] = factory
 
 
-def _gc_plaintext_parties(s: "Session") -> list[list[ProtocolDriver]]:
+def _gc_plaintext_drivers(s: "Session", fx: Fabric
+                          ) -> dict[int, ProtocolDriver]:
     w, n, p = s.workload, s.spec.n, s.spec.num_workers
-    return [[PlaintextDriver(w.inputs(n, i, p)) for i in range(p)]]
+    return {r: PlaintextDriver(w.inputs(n, r % p, p)) for r in fx.hosted}
 
 
-def _gc_two_party_parties(s: "Session") -> list[list[ProtocolDriver]]:
-    # one PartyChannel per worker pair: the one-to-one inter-party
-    # topology of Fig. 3
+def _gc_two_party_drivers(s: "Session", fx: Fabric
+                          ) -> dict[int, ProtocolDriver]:
+    # one cross-party link per worker pair: garbler rank wk sends to
+    # evaluator rank p + wk (the one-to-one inter-party topology of Fig. 3)
     w, n, p = s.workload, s.spec.n, s.spec.num_workers
-    pchans = [PartyChannel() for _ in range(p)]
-    garblers = [GarblerDriver(pchans[i], w.inputs(n, i, p), seed=7)
-                for i in range(p)]
-    evaluators = [EvaluatorDriver(pchans[i], w.inputs(n, i, p))
-                  for i in range(p)]
-    return [garblers, evaluators]
+    out: dict[int, ProtocolDriver] = {}
+    for r in fx.hosted:
+        party, wk = divmod(r, p)
+        link = PartyChannel(fx.transport_for(r), src=wk, dst=p + wk)
+        if party == 0:
+            out[r] = GarblerDriver(link, w.inputs(n, wk, p), seed=7)
+        else:
+            out[r] = EvaluatorDriver(link, w.inputs(n, wk, p))
+    return out
 
 
-def _ckks_parties(s: "Session") -> list[list[ProtocolDriver]]:
+def _ckks_drivers(s: "Session", fx: Fabric) -> dict[int, ProtocolDriver]:
     w, n, p = s.workload, s.spec.n, s.spec.num_workers
     params = s.ckks_params()
-    return [[CkksDriver(params, w.inputs(n, i, p), seed=0xCEC5)
-             for i in range(p)]]
+    return {r: CkksDriver(params, w.inputs(n, r % p, p), seed=0xCEC5)
+            for r in fx.hosted}
 
 
-register_driver("gc-plaintext", _gc_plaintext_parties)
-register_driver("gc-2party", _gc_two_party_parties)
-register_driver("ckks", _ckks_parties)
+register_driver("gc-plaintext", _gc_plaintext_drivers)
+register_driver("gc-2party", _gc_two_party_drivers, parties=2)
+register_driver("ckks", _ckks_drivers)
 register_storage("ram", lambda shape, dtype: RamStorage(shape, dtype))
 register_storage("memmap", lambda shape, dtype: MemmapStorage(shape, dtype))
 
@@ -141,6 +182,10 @@ class JobSpec:
     (floor of ``8 + prefetch_pages`` frames, capped below the working set
     so there is real memory pressure, prefetch buffer at most a quarter of
     the budget).  ``None`` requires ``plan_mode="unbounded"``.
+
+    ``transport`` + ``fabric`` are execution details (never part of the
+    plan hash): the transport registry name and the endpoint placement /
+    link shaping (:class:`~repro.core.transport.FabricSpec`).
     """
     workload: str
     n: int | None = None                  # problem size (None → default_n)
@@ -154,6 +199,8 @@ class JobSpec:
     parallel_plan: bool | str = "serial"  # serial | thread | process
     driver: str = "auto"                  # auto → protocol default
     storage: str = "ram"                  # ram | memmap
+    transport: str = "inproc"             # inproc | tcp | shaped
+    fabric: FabricSpec | None = None      # endpoint placement / shaping
     workdir: str | None = None            # streaming plan files live here
     chunk_instrs: int = 8192
     track_plan_memory: bool = False
@@ -173,6 +220,8 @@ class JobSpec:
         if isinstance(self.memory_budget, float) and \
                 not 0.0 < self.memory_budget <= 1.0:
             raise ValueError("fractional memory_budget must be in (0, 1]")
+        if isinstance(self.fabric, dict):  # from_dict / JSON round-trip
+            object.__setattr__(self, "fabric", FabricSpec(**self.fabric))
 
     # -- derived / resolved ---------------------------------------------------
 
@@ -275,6 +324,9 @@ class Session:
         self._tmpdir: str | None = None
         self.plan_reports: list[PlanReport] = []
         self.engine_stats: list[EngineStats] = []
+        #: sent-traffic accounting of the last execute()'s fabric,
+        #: (src_rank, dst_rank, tag) -> LinkStats
+        self.transport_stats: dict[tuple[int, int, int], LinkStats] = {}
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -378,38 +430,54 @@ class Session:
     def execute(self, real: bool | None = None,
                 check: bool = False) -> dict[int, np.ndarray]:
         """Run the planned programs through the engine; returns the merged
-        ``tag → value`` outputs.  ``real`` overrides the spec's driver for
-        GC (True → two-party crypto, False → plaintext oracle)."""
+        ``tag → value`` outputs of the endpoints THIS process hosts.
+        ``real`` overrides the spec's driver for GC (True → two-party
+        crypto, False → plaintext oracle).
+
+        Placement comes from the spec's transport/fabric: the default
+        hosts every (party, worker) engine here on threads over the
+        ``inproc`` backend; a spec with ``fabric.rank=k`` runs exactly
+        one engine against remote peers (distributed mode — outputs are
+        then partial, so ``check`` is refused)."""
         planned = self.plan()
         spec = self.spec
-        name = self._driver_name(real)
-        try:
-            factory = DRIVERS[name]
-        except KeyError:
-            raise KeyError(f"unknown driver {name!r}; registered: "
-                           f"{sorted(DRIVERS)}") from None
+        ddef = _driver_def(self._driver_name(real))
         try:
             make_storage = STORAGE_BACKENDS[spec.storage]
         except KeyError:
             raise KeyError(f"unknown storage {spec.storage!r}; registered: "
                            f"{sorted(STORAGE_BACKENDS)}") from None
 
-        parties = factory(self)
-        jobs = []
-        for pi, drivers in enumerate(parties):
-            channels = Channels(spec.num_workers)
-            for wk, drv in enumerate(drivers):
+        p = spec.num_workers
+        fx = build_fabric(spec.transport, ddef.parties * p, spec.fabric)
+        if check and fx.distributed:
+            raise ValueError("check=True needs the full outputs; a "
+                             "distributed rank only holds its own (run "
+                             "`python -m repro fabric` for a checked fleet)")
+        outputs: dict[int, np.ndarray] = {}
+        try:
+            fx.connect()
+            drivers = ddef.factory(self, fx)
+            jobs = []
+            for r in sorted(drivers):
+                party, wk = divmod(r, p)
+                drv = drivers[r]
                 prog = planned[wk]
                 storage = make_storage((prog.page_slots, drv.lane),
                                        drv.dtype)
-                jobs.append(EngineJob(prog, drv, channels=channels,
+                jobs.append(EngineJob(prog, drv,
+                                      net=fx.view(r, party * p, p),
                                       storage=storage,
-                                      tag=f"party{pi}/worker{wk}"))
-        self.engine_stats = run_engines(jobs)
-        outputs: dict[int, np.ndarray] = {}
-        for drivers in parties:
-            for d in drivers:
+                                      tag=f"party{party}/worker{wk}"))
+            self.engine_stats = run_engines(jobs)
+            if fx.distributed:
+                # hold the process until every peer drained its traffic
+                fx.barrier()
+            self.transport_stats = fx.stats()
+            for d in drivers.values():
                 outputs.update(getattr(d, "outputs", {}))
+        finally:
+            fx.close()
         if check:
             check_outputs(self.workload, spec.n, outputs)
         return outputs
@@ -489,15 +557,19 @@ class Session:
     @classmethod
     def from_plan(cls, jobdir: str | os.PathLike,
                   storage: str | None = None,
-                  driver: str | None = None) -> "Session":
+                  driver: str | None = None,
+                  transport: str | None = None,
+                  fabric: FabricSpec | None = None) -> "Session":
         """Load a saved plan for direct execution.
 
         The spec hash is recomputed from the manifest's spec and validated
         against both the manifest and every program file's stamped meta —
         a mismatch (edited job.json, swapped plan files, changed planner
         semantics) raises :class:`SpecMismatchError` instead of executing
-        a stale plan.  ``storage``/``driver`` override execution details
-        (which are excluded from the hash by design)."""
+        a stale plan.  ``storage``/``driver``/``transport``/``fabric``
+        override execution details (which are excluded from the hash by
+        design) — the same artifact runs in-process or as one rank of a
+        TCP fleet."""
         jobdir = os.fspath(jobdir)
         with open(os.path.join(jobdir, JOB_FILE)) as f:
             manifest = json.load(f)
@@ -513,6 +585,10 @@ class Session:
             overrides["storage"] = storage
         if driver is not None:
             overrides["driver"] = driver
+        if transport is not None:
+            overrides["transport"] = transport
+        if fabric is not None:
+            overrides["fabric"] = fabric
         if overrides:
             spec = dataclasses.replace(spec, **overrides)
         sess = cls(spec)

@@ -7,7 +7,7 @@ scheduling (lookahead prefetch) → memory program → engine.
 from .bytecode import (DIRECTIVES, INF, Instr, Op, Program, ProgramFile,
                        ProgramWriter, iter_instructions, write_program)
 from .dsl import Builder, Value, current_builder, trace
-from .engine import Channels, Engine, EngineStats, ProtocolDriver
+from .engine import Engine, EngineStats, ProtocolDriver
 from .liveness import AnnotationReader, annotate_next_use
 from .placement import PageAllocator
 from .planner import (PlanConfig, PlanReport, plan, plan_streaming,
@@ -19,6 +19,10 @@ from .scheduling import ScheduleStats, plan_schedule, plan_schedule_file
 from .simulator import (DeviceModel, SimResult, simulate_memory_program,
                         simulate_os_paging, simulate_unbounded)
 from .storage import AsyncIO, MemmapStorage, RamStorage
+from .transport import (Fabric, FabricSpec, InprocTransport, LinkStats,
+                        PartyView, ShapedTransport, TcpTransport, Transport,
+                        TransportError, aggregate_links, build_fabric,
+                        pick_free_ports, register_transport)
 from .workers import (EngineJob, ProgramOptions, plan_workers, recv_into,
                       run_engines, run_workers, send_value, trace_workers)
 
@@ -26,7 +30,11 @@ __all__ = [
     "DIRECTIVES", "INF", "Instr", "Op", "Program", "ProgramFile",
     "ProgramWriter", "iter_instructions", "write_program",
     "Builder", "Value", "current_builder", "trace",
-    "Channels", "Engine", "EngineStats", "ProtocolDriver",
+    "Engine", "EngineStats", "ProtocolDriver",
+    "Fabric", "FabricSpec", "InprocTransport", "LinkStats", "PartyView",
+    "ShapedTransport", "TcpTransport", "Transport", "TransportError",
+    "aggregate_links", "build_fabric", "pick_free_ports",
+    "register_transport",
     "AnnotationReader", "annotate_next_use",
     "PageAllocator",
     "PlanConfig", "PlanReport", "plan", "plan_streaming", "plan_unbounded",

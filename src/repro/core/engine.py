@@ -4,7 +4,10 @@ An interpreter for memory programs: program data lives in a flat array (the
 MAGE-physical address space); each instruction's operands are views into that
 array; swap directives are handled by the engine itself via async I/O, and
 everything else is delegated to the protocol driver.  Network directives move
-spans between workers of the same party over in-process channels.
+spans between workers of the same party over the transport fabric
+(``core.transport``): the engine addresses peers by worker id through a
+:class:`~repro.core.transport.PartyView`, so the same bytecode runs over
+in-process queues, localhost TCP, or a WAN-shaped link unmodified.
 
 The engine runs programs in any phase:
   * 'virtual'  — Unbounded scenario: memory sized to the whole vspace;
@@ -15,13 +18,13 @@ The engine runs programs in any phase:
 from __future__ import annotations
 
 import dataclasses
-import queue
 from typing import Any, Callable
 
 import numpy as np
 
 from .bytecode import Instr, Op, Program, ProgramFile, iter_instructions
 from .storage import AsyncIO, MemmapStorage, RamStorage, StorageBackend
+from .transport import PartyView, TransportError
 
 
 class ProtocolDriver:
@@ -50,26 +53,6 @@ class ProtocolDriver:
         pass
 
 
-class Channels:
-    """Intra-party worker communication (NET_* directives)."""
-
-    def __init__(self, num_workers: int):
-        self.queues: dict[tuple[int, int], queue.Queue] = {
-            (s, d): queue.Queue()
-            for s in range(num_workers) for d in range(num_workers) if s != d}
-        self.bytes_moved = 0
-
-    def send(self, src: int, dst: int, tag: int, data: np.ndarray) -> None:
-        self.bytes_moved += data.nbytes
-        self.queues[(src, dst)].put((tag, np.array(data, copy=True)))
-
-    def recv(self, src: int, dst: int, tag: int, out: np.ndarray) -> None:
-        got_tag, data = self.queues[(src, dst)].get()
-        if got_tag != tag:
-            raise RuntimeError(f"net tag mismatch: want {tag} got {got_tag}")
-        out[...] = data.reshape(out.shape)
-
-
 @dataclasses.dataclass
 class EngineStats:
     instructions: int = 0
@@ -78,6 +61,19 @@ class EngineStats:
     io_write_bytes: int = 0
     finish_in_waits: int = 0
     finish_out_waits: int = 0
+    net_messages: int = 0
+    net_sent_bytes: int = 0
+    net_recv_bytes: int = 0
+    #: per-link totals, (src_worker, dst_worker) -> [messages, bytes]; a key
+    #: with src == this worker is outgoing traffic, dst == this worker
+    #: incoming.  Counted by the engine thread itself (thread-confined, so
+    #: no races even when many engines share one transport).
+    net_links: dict = dataclasses.field(default_factory=dict)
+
+    def _net_count(self, src: int, dst: int, nbytes: int) -> None:
+        link = self.net_links.setdefault((src, dst), [0, 0])
+        link[0] += 1
+        link[1] += nbytes
 
 
 class Engine:
@@ -89,7 +85,7 @@ class Engine:
 
     def __init__(self, program: Program | ProgramFile, driver: ProtocolDriver,
                  storage: StorageBackend | None = None,
-                 channels: Channels | None = None,
+                 net: PartyView | None = None,
                  io_threads: int = 2,
                  use_memmap: bool = False):
         self.prog = program
@@ -107,7 +103,7 @@ class Engine:
             storage = (MemmapStorage(page_shape, driver.dtype) if use_memmap
                        else RamStorage(page_shape, driver.dtype))
         self.io = AsyncIO(storage, threads=io_threads)
-        self.channels = channels
+        self.net = net
         self._slot_future: dict[int, Any] = {}
         self.stats = EngineStats()
         self._page_shape = page_shape
@@ -129,6 +125,13 @@ class Engine:
 
     def _instructions(self):
         return iter_instructions(self.prog)
+
+    def _net(self) -> PartyView:
+        if self.net is None:
+            raise TransportError(
+                "program has NET_* directives but the engine has no fabric "
+                "attached (pass net=PartyView(...))")
+        return self.net
 
     # -- main loop ---------------------------------------------------------------
 
@@ -187,12 +190,25 @@ class Engine:
             elif op == Op.NET_SEND:
                 self.stats.directives += 1
                 dst, tag = instr.imm[0], instr.imm[1]
-                self.channels.send(w, dst, tag, self._view(instr.ins[0]))
+                view = self._view(instr.ins[0])
+                self._net().send(w, dst, tag, view)
+                self.stats.net_messages += 1
+                self.stats.net_sent_bytes += view.nbytes
+                self.stats._net_count(w, dst, view.nbytes)
             elif op == Op.NET_RECV:
                 self.stats.directives += 1
                 src, tag = instr.imm[0], instr.imm[1]
-                self.channels.recv(src, w, tag, self._view(instr.outs[0]))
+                view = self._view(instr.outs[0])
+                self._net().recv(src, w, tag, out=view)
+                self.stats.net_messages += 1
+                self.stats.net_recv_bytes += view.nbytes
+                self.stats._net_count(src, w, view.nbytes)
             elif op == Op.NET_BARRIER:
+                # documented as "wait until posted send/recv with tag done"
+                # (bytecode.py) — this engine's NET ops are synchronous, so
+                # the completion wait is a no-op.  Collective sync is the
+                # fabric's job (PartyView.barrier / Fabric.barrier), not an
+                # instruction semantic.
                 self.stats.directives += 1
             elif op == Op.FREE:
                 continue

@@ -48,6 +48,8 @@ class SimResult:
     writes: int = 0
     read_bytes: int = 0
     write_bytes: int = 0
+    net_msgs: int = 0          # NET_SEND directives replayed
+    net_bytes: int = 0         # bytes those sends would move on the fabric
 
     @property
     def overhead(self) -> float:
@@ -96,6 +98,7 @@ def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
     r = SimResult()
     t = 0.0
     slot_done: dict[int, float] = {}
+    slot_bytes = max(page_bytes // max(prog.page_slots, 1), 1)
     for ins in iter_instructions(prog):
         op = ins.op
         if op == Op.SWAP_IN:
@@ -124,7 +127,12 @@ def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
                 t += page_bytes / 50e9  # pf->frame memcpy (~DRAM bw)
         elif op == Op.COPY_OUT:
             t += page_bytes / 50e9
-        elif op in (Op.NET_SEND, Op.NET_RECV, Op.NET_BARRIER, Op.FREE):
+        elif op == Op.NET_SEND:
+            # accounted like the transport fabric does (send side): the
+            # span's slots at the protocol's slot width
+            r.net_msgs += 1
+            r.net_bytes += ins.ins[0][1] * slot_bytes
+        elif op in (Op.NET_RECV, Op.NET_BARRIER, Op.FREE):
             continue
         else:
             c = cost(ins)

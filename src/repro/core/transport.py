@@ -1,0 +1,891 @@
+"""The transport fabric: ONE communication API for every byte the repro
+moves between engines (§5.2 deployment model).
+
+MAGE deploys one engine per worker per party across machines; intra-party
+network directives (NET_*) and inter-party protocol traffic (garbled
+tables, OT messages) are both just tagged point-to-point transfers.  This
+module is that abstraction: a :class:`Transport` carries numpy arrays
+between integer-ranked *endpoints* over ``(src, dst, tag)`` links with
+per-link byte/message accounting, and everything above it — the engine's
+NET_* handling, the garbled protocol's party stream, the CLI's
+multi-process fleet — is expressed against the same five calls::
+
+    connect()  send(src, dst, tag, arr)  recv(src, dst, tag)  barrier()  close()
+
+Three registered backends:
+
+* ``inproc`` — per-link locked reorder buffers (the successor of the old
+  ``Channels`` queues; out-of-order tags now buffer and match instead of
+  raising, and byte accounting is lock-protected — safe across engine
+  threads).
+* ``tcp``    — length-prefixed frames over sockets, one outbound
+  connection per peer plus a background reader thread per inbound
+  connection feeding the same reorder buffers, so tags may arrive in any
+  order and a blocked receiver never stops the wire (the reader keeps
+  draining, which is what makes symmetric send-then-recv exchanges
+  deadlock-free over real sockets).
+* ``shaped`` — a decorator adding configurable per-link latency and
+  bandwidth on top of another (same-process) transport: messages carry a
+  virtual delivery time computed with pipelined link occupancy (serialize
+  at ``bandwidth``, deliver ``latency`` later), and ``recv`` sleeps until
+  that time.  This turns fig11's WAN model into *measured* traffic over a
+  shaped link (§8.7).
+
+Rank space: a fabric with P parties × W workers has ``P*W`` endpoints,
+``rank = party * W + worker``.  :class:`PartyView` scopes a transport to
+one party's contiguous rank block so the engine keeps addressing peers by
+worker id.  Endpoint-to-process placement is a :class:`FabricSpec`:
+``rank=None`` hosts every endpoint in this process (threads — today's
+behavior); ``rank=k`` hosts exactly one endpoint and reaches the rest via
+``peers`` addresses (``python -m repro run --worker k --peers ...``).
+
+Message ordering contract: per ``(src, dst, tag)`` FIFO.  Distinct tags on
+the same link may be consumed in any order (they buffer independently) —
+both the bitonic exchanges and the garbled kind-streams rely only on
+per-tag FIFO, so the contract is exactly as strong as the programs need.
+
+Accounting contract: ``stats()`` records traffic at the *sending*
+endpoint, keyed ``(src, dst, tag)`` — aggregate with
+:func:`aggregate_links`.  Counters are mutated under a lock (engine
+threads share one transport in-process).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import socket
+import struct
+import threading
+import time
+from collections import deque
+from typing import Callable, Iterable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Transport", "InprocTransport", "TcpTransport", "ShapedTransport",
+    "Fabric", "FabricSpec", "PartyView", "LinkStats", "TransportError",
+    "TransportClosed", "build_fabric", "register_transport",
+    "aggregate_links", "pick_free_ports", "TRANSPORTS",
+]
+
+
+class TransportError(RuntimeError):
+    pass
+
+
+class TransportClosed(TransportError):
+    """The link closed (peer gone) with a receive still outstanding."""
+
+
+@dataclasses.dataclass
+class LinkStats:
+    messages: int = 0
+    bytes: int = 0
+
+
+#: reserved tag ranges (ordinary tags are small non-negative ints: the DSL's
+#: fresh_tag counter and the garbled kind tags) — barriers use deeply
+#: negative tags so they can never collide with data on the same link.
+_ENGINE_BARRIER_BASE = -(1 << 40)
+_FABRIC_BARRIER_BASE = -(1 << 50)
+
+
+class _StatsBook:
+    """Lock-protected (src, dst, tag) → LinkStats counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._m: dict[tuple[int, int, int], LinkStats] = {}
+
+    def add(self, key: tuple[int, int, int], nbytes: int) -> None:
+        with self._lock:
+            s = self._m.get(key)
+            if s is None:
+                s = self._m[key] = LinkStats()
+            s.messages += 1
+            s.bytes += nbytes
+
+    def snapshot(self) -> dict[tuple[int, int, int], LinkStats]:
+        with self._lock:
+            return {k: LinkStats(v.messages, v.bytes)
+                    for k, v in self._m.items()}
+
+
+def aggregate_links(stats: dict[tuple[int, int, int], LinkStats]
+                    ) -> dict[tuple[int, int], LinkStats]:
+    """(src, dst, tag) stats → per-(src, dst) link totals."""
+    out: dict[tuple[int, int], LinkStats] = {}
+    for (src, dst, _tag), s in stats.items():
+        t = out.setdefault((src, dst), LinkStats())
+        t.messages += s.messages
+        t.bytes += s.bytes
+    return out
+
+
+class _Link:
+    """One (src, dst) lane: a locked per-tag reorder buffer.
+
+    Out-of-order tags buffer and match (the old ``Channels.recv`` raised on
+    mismatch); ``max_msgs``/``max_bytes`` bound the pending set so a
+    producer running far ahead blocks instead of materializing everything
+    (§2.4.2 pipelining for the garbled stream, reader-thread backpressure
+    for TCP)."""
+
+    def __init__(self, max_msgs: int = 0, max_bytes: int = 0):
+        self._cond = threading.Condition()
+        self._by_tag: dict[int, deque] = {}
+        self._pending_msgs = 0
+        self._pending_bytes = 0
+        self.max_msgs = max_msgs
+        self.max_bytes = max_bytes
+        self.closed = False
+
+    def _over(self) -> bool:
+        return ((self.max_msgs and self._pending_msgs >= self.max_msgs) or
+                (self.max_bytes and self._pending_bytes >= self.max_bytes))
+
+    def put(self, tag: int, data: np.ndarray) -> None:
+        with self._cond:
+            while self._over() and not self.closed:
+                self._cond.wait()
+            if self.closed:
+                raise TransportClosed("send on closed link")
+            self._by_tag.setdefault(tag, deque()).append(data)
+            self._pending_msgs += 1
+            self._pending_bytes += data.nbytes
+            self._cond.notify_all()
+
+    def get(self, tag: int, timeout: float | None = None) -> np.ndarray:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while True:
+                q = self._by_tag.get(tag)
+                if q:
+                    data = q.popleft()
+                    if not q:
+                        del self._by_tag[tag]
+                    self._pending_msgs -= 1
+                    self._pending_bytes -= data.nbytes
+                    self._cond.notify_all()
+                    return data
+                if self.closed:
+                    raise TransportClosed(
+                        f"link closed with recv(tag={tag}) outstanding")
+                if deadline is None:
+                    self._cond.wait()
+                else:
+                    left = deadline - time.monotonic()
+                    if left <= 0:
+                        raise TransportError(
+                            f"recv(tag={tag}) timed out after {timeout}s")
+                    self._cond.wait(left)
+
+    def close(self) -> None:
+        with self._cond:
+            self.closed = True
+            self._cond.notify_all()
+
+
+class Transport:
+    """Abstract fabric: tagged point-to-point array transfer between
+    integer-ranked endpoints."""
+
+    name = "abstract"
+
+    def connect(self) -> None:
+        """Establish links; must be called before send/recv on distributed
+        backends (no-op for in-process ones)."""
+
+    def send(self, src: int, dst: int, tag: int, data: np.ndarray,
+             copy: bool = True) -> None:
+        """``copy=False`` lets a sender that never mutates ``data`` again
+        (e.g. the garbled stream's freshly built tables) skip the
+        defensive snapshot on in-process backends."""
+        raise NotImplementedError
+
+    def recv(self, src: int, dst: int, tag: int,
+             out: np.ndarray | None = None,
+             timeout: float | None = None) -> np.ndarray:
+        """Blocking receive of the next (src → dst, tag) message.  With
+        ``out``, the payload is written into it (reshaped) as well as
+        returned."""
+        raise NotImplementedError
+
+    def barrier(self, rank: int, group: Sequence[int],
+                _base: int = _ENGINE_BARRIER_BASE) -> None:
+        """Token all-to-all within ``group``: rank sends one empty message
+        to every other member, then collects one from each.  Built on
+        send/recv, so it works identically on every backend; each rank
+        keeps its own epoch counter per group (aligned by program order)."""
+        key = (frozenset(group), _base)
+        with self._epoch_lock:
+            epoch = self._epochs.get((rank, key), 0)
+            self._epochs[(rank, key)] = epoch + 1
+        tag = _base - epoch
+        token = np.zeros(0, dtype=np.uint8)
+        for peer in group:
+            if peer != rank:
+                self.send(rank, peer, tag, token)
+        for peer in group:
+            if peer != rank:
+                self.recv(peer, rank, tag)
+
+    def close(self) -> None:
+        pass
+
+    def stats(self) -> dict[tuple[int, int, int], LinkStats]:
+        """Per-(src, dst, tag) counters of traffic SENT from this endpoint
+        (snapshot; thread-safe).  Reserved-tag barrier tokens are internal
+        plumbing, not program traffic, and are filtered out."""
+        return {k: v for k, v in self._book.snapshot().items()
+                if k[2] > _ENGINE_BARRIER_BASE}
+
+    def link_totals(self) -> dict[tuple[int, int], LinkStats]:
+        return aggregate_links(self.stats())
+
+    # shared plumbing used by barrier()/stats() implementations
+    def _init_common(self) -> None:
+        self._book = _StatsBook()
+        self._epochs: dict = {}
+        self._epoch_lock = threading.Lock()
+
+
+class InprocTransport(Transport):
+    """All endpoints in one process: per-link locked reorder buffers.
+
+    The behavior-preserving successor of the old ``Channels`` queue pairs,
+    with two fixes the old code lacked: out-of-order tags buffer instead
+    of raising, and byte/message accounting happens under a lock."""
+
+    name = "inproc"
+
+    def __init__(self, num_endpoints: int, depth: int = 0):
+        self.num_endpoints = num_endpoints
+        self._default_depth = depth
+        self._links: dict[tuple[int, int], _Link] = {}
+        self._links_lock = threading.Lock()
+        self._init_common()
+
+    def _check(self, src: int, dst: int) -> None:
+        n = self.num_endpoints
+        if not (0 <= src < n and 0 <= dst < n) or src == dst:
+            raise TransportError(f"bad link ({src} -> {dst}) for "
+                                 f"{n}-endpoint fabric")
+
+    def _link(self, src: int, dst: int) -> _Link:
+        key = (src, dst)
+        link = self._links.get(key)
+        if link is None:
+            with self._links_lock:
+                link = self._links.setdefault(
+                    key, _Link(max_msgs=self._default_depth))
+        return link
+
+    def set_depth(self, src: int, dst: int, max_msgs: int = 0,
+                  max_bytes: int = 0) -> None:
+        """Bound one link's pending set (senders block when full) — the
+        garbled stream uses this so the full circuit never materializes."""
+        link = self._link(src, dst)
+        link.max_msgs = max_msgs
+        link.max_bytes = max_bytes
+
+    def send(self, src, dst, tag, data, copy=True):
+        self._check(src, dst)
+        data = np.array(data, copy=True) if copy else np.asarray(data)
+        self._book.add((src, dst, tag), data.nbytes)
+        self._link(src, dst).put(tag, data)
+
+    def recv(self, src, dst, tag, out=None, timeout=None):
+        self._check(src, dst)
+        data = self._link(src, dst).get(tag, timeout=timeout)
+        if out is not None:
+            out[...] = data.reshape(out.shape)
+        return data
+
+    def close(self):
+        with self._links_lock:
+            for link in self._links.values():
+                link.close()
+
+
+# ---------------------------------------------------------------------------
+# TCP backend
+# ---------------------------------------------------------------------------
+
+# frame := !I total_len | !B kind | body
+#   kind 1 (hello): !q rank
+#   kind 2 (data):  !qqq src dst tag | !B len(dtype) | dtype | !B ndim
+#                   | !<ndim>q shape | payload
+_K_HELLO, _K_DATA = 1, 2
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return bytes(buf)
+
+
+def _pack_data(src: int, dst: int, tag: int, arr: np.ndarray) -> bytes:
+    dt = arr.dtype.str.encode()
+    body = (struct.pack("!Bqqq", _K_DATA, src, dst, tag)
+            + struct.pack("!B", len(dt)) + dt
+            + struct.pack("!B", arr.ndim)
+            + struct.pack(f"!{arr.ndim}q", *arr.shape)
+            + arr.tobytes())
+    return struct.pack("!I", len(body)) + body
+
+
+def _unpack_data(body: bytes) -> tuple[int, int, int, np.ndarray]:
+    src, dst, tag = struct.unpack_from("!qqq", body, 1)
+    off = 1 + 24
+    (dlen,) = struct.unpack_from("!B", body, off)
+    off += 1
+    dt = body[off:off + dlen].decode()
+    off += dlen
+    (ndim,) = struct.unpack_from("!B", body, off)
+    off += 1
+    shape = struct.unpack_from(f"!{ndim}q", body, off)
+    off += 8 * ndim
+    arr = np.frombuffer(body, dtype=np.dtype(dt), offset=off).reshape(shape)
+    return src, dst, tag, np.array(arr)  # own the memory
+
+
+def parse_addr(text: str) -> tuple[str, int]:
+    host, _, port = text.rpartition(":")
+    if not host or not port.isdigit():
+        raise TransportError(f"bad peer address {text!r} (want host:port)")
+    return host, int(port)
+
+
+def pick_free_ports(n: int, host: str = "127.0.0.1") -> list[int]:
+    """Reserve n distinct free TCP ports (bound sockets held until all
+    are picked, then released — good enough for localhost fleets)."""
+    socks, ports = [], []
+    try:
+        for _ in range(n):
+            s = socket.socket()
+            s.bind((host, 0))
+            socks.append(s)
+            ports.append(s.getsockname()[1])
+    finally:
+        for s in socks:
+            s.close()
+    return ports
+
+
+class TcpTransport(Transport):
+    """One endpoint of a multi-process fabric over sockets.
+
+    ``addrs[k]`` is rank k's ``host:port``.  Each rank listens on its own
+    port and dials one outbound (send-only) connection to every peer;
+    inbound connections are receive-only, each drained by a background
+    reader thread into the shared per-link reorder buffers.  Readers
+    apply byte-bounded backpressure (``max_link_bytes``): a link whose
+    receiver lags stops being read, which pushes back through TCP flow
+    control to the sender — bounded memory without bounding the wire."""
+
+    name = "tcp"
+
+    def __init__(self, rank: int, addrs: Sequence[str],
+                 connect_timeout: float = 30.0,
+                 max_link_bytes: int = 64 << 20):
+        self.rank = rank
+        self.addrs = [parse_addr(a) for a in addrs]
+        if not 0 <= rank < len(self.addrs):
+            raise TransportError(f"rank {rank} outside {len(self.addrs)} "
+                                 f"peer addresses")
+        self.num_endpoints = len(self.addrs)
+        self.connect_timeout = connect_timeout
+        self.max_link_bytes = max_link_bytes
+        self._links: dict[tuple[int, int], _Link] = {}
+        self._links_lock = threading.Lock()
+        self._dead_peers: set[int] = set()
+        self._out: dict[int, socket.socket] = {}
+        self._out_locks: dict[int, threading.Lock] = {}
+        self._listener: socket.socket | None = None
+        self._readers: list[threading.Thread] = []
+        self._accept_thread: threading.Thread | None = None
+        self._accepted = threading.Semaphore(0)
+        self._accept_err: list[Exception] = []
+        self._closed = False
+        self._init_common()
+
+    # -- wiring ----------------------------------------------------------------
+
+    def _link(self, src: int, dst: int) -> _Link:
+        key = (src, dst)
+        link = self._links.get(key)
+        if link is None:
+            with self._links_lock:
+                link = self._links.setdefault(
+                    key, _Link(max_bytes=self.max_link_bytes))
+                # a link first touched after its peer died (or after
+                # close()) must be born closed, or the recv waits forever
+                if self._closed or (dst == self.rank
+                                    and src in self._dead_peers):
+                    link.close()
+        return link
+
+    def listen(self):
+        """Bind + start accepting inbound connections (idempotent).
+        Split from :meth:`connect` so a fabric hosting several ranks in
+        one process can open every listener before anyone dials."""
+        n = self.num_endpoints
+        if n == 1 or self._listener is not None:
+            return
+        host, port = self.addrs[self.rank]
+        lsock = socket.socket()
+        lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind((host, port))
+        lsock.listen(n)
+        self._listener = lsock
+
+        def _accept_loop():
+            try:
+                for _ in range(n - 1):
+                    conn, _ = lsock.accept()
+                    conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                    hdr = _recv_exact(conn, 4)
+                    if hdr is None:
+                        raise TransportError("peer hung up during hello")
+                    body = _recv_exact(conn, struct.unpack("!I", hdr)[0])
+                    kind, peer = struct.unpack("!Bq", body)
+                    if kind != _K_HELLO:
+                        raise TransportError(f"expected hello, got kind "
+                                             f"{kind}")
+                    t = threading.Thread(target=self._read_loop,
+                                         args=(conn, peer), daemon=True,
+                                         name=f"tcp-read-{peer}->{self.rank}")
+                    t.start()
+                    self._readers.append(t)
+                    self._accepted.release()
+            except Exception as e:  # surfaced by connect()
+                if not self._closed:
+                    self._accept_err.append(e)
+                self._accepted.release()
+
+        self._accept_thread = threading.Thread(target=_accept_loop,
+                                               daemon=True,
+                                               name=f"tcp-accept-{self.rank}")
+        self._accept_thread.start()
+
+    def connect(self):
+        n = self.num_endpoints
+        if n == 1:
+            return
+        self.listen()
+        deadline = time.monotonic() + self.connect_timeout
+        for peer in range(n):
+            if peer == self.rank:
+                continue
+            self._out[peer] = self._dial(peer, deadline)
+            self._out_locks[peer] = threading.Lock()
+        for _ in range(n - 1):
+            left = deadline - time.monotonic()
+            if not self._accepted.acquire(timeout=max(left, 0.01)):
+                raise TransportError(
+                    f"rank {self.rank}: timed out waiting for inbound "
+                    f"connections")
+            if self._accept_err:
+                raise self._accept_err[0]
+
+    def _dial(self, peer: int, deadline: float) -> socket.socket:
+        host, port = self.addrs[peer]
+        last: Exception | None = None
+        while time.monotonic() < deadline:
+            try:
+                s = socket.create_connection((host, port), timeout=2.0)
+                s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                s.settimeout(None)
+                hello = struct.pack("!Bq", _K_HELLO, self.rank)
+                s.sendall(struct.pack("!I", len(hello)) + hello)
+                return s
+            except OSError as e:
+                last = e
+                time.sleep(0.05)
+        raise TransportError(f"rank {self.rank}: cannot reach rank {peer} "
+                             f"at {host}:{port}: {last}")
+
+    def _read_loop(self, conn: socket.socket, peer: int) -> None:
+        try:
+            while True:
+                hdr = _recv_exact(conn, 4)
+                if hdr is None:
+                    return
+                body = _recv_exact(conn, struct.unpack("!I", hdr)[0])
+                if body is None:
+                    return
+                if body[0] != _K_DATA:
+                    raise TransportError(f"unexpected frame kind {body[0]}")
+                src, dst, tag, arr = _unpack_data(body)
+                if dst != self.rank:
+                    raise TransportError(
+                        f"rank {self.rank} got a frame for rank {dst}")
+                self._link(src, dst).put(tag, arr)
+        except (TransportClosed, OSError):
+            pass
+        finally:
+            conn.close()
+            # wake any recv still waiting on this peer; the dead-peer mark
+            # (taken under the links lock) also closes links created later
+            with self._links_lock:
+                self._dead_peers.add(peer)
+                links = list(self._links.items())
+            for (src, _dst), link in links:
+                if src == peer:
+                    link.close()
+
+    # -- data path ---------------------------------------------------------------
+
+    def send(self, src, dst, tag, data, copy=True):
+        # copy is irrelevant here: serialization owns the bytes
+        if src != self.rank:
+            raise TransportError(f"endpoint {self.rank} cannot send "
+                                 f"as rank {src}")
+        sock = self._out.get(dst)
+        if sock is None:
+            raise TransportError(f"no connection to rank {dst} "
+                                 f"(connect() not run?)")
+        frame = _pack_data(src, dst, tag, np.ascontiguousarray(data))
+        with self._out_locks[dst]:
+            sock.sendall(frame)
+        self._book.add((src, dst, tag), data.nbytes)
+
+    def recv(self, src, dst, tag, out=None, timeout=None):
+        if dst != self.rank:
+            raise TransportError(f"endpoint {self.rank} cannot recv "
+                                 f"as rank {dst}")
+        data = self._link(src, dst).get(tag, timeout=timeout)
+        if out is not None:
+            out[...] = data.reshape(out.shape)
+        return data
+
+    def close(self):
+        self._closed = True
+        for sock in self._out.values():
+            try:
+                sock.shutdown(socket.SHUT_WR)
+            except OSError:
+                pass
+            sock.close()
+        if self._listener is not None:
+            self._listener.close()
+        for t in self._readers:
+            t.join(timeout=5.0)
+        with self._links_lock:
+            for link in self._links.values():
+                link.close()
+
+
+# ---------------------------------------------------------------------------
+# shaped decorator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LinkShape:
+    latency_s: float = 0.0          # one-way delivery delay
+    bandwidth: float | None = None  # bytes/s (None = unconstrained)
+
+
+class ShapedTransport(Transport):
+    """Decorator adding latency/bandwidth per link to a same-process
+    transport.
+
+    The sender stamps each message with a virtual delivery time using
+    pipelined link occupancy (a message serializes onto the link at
+    ``bandwidth`` after the previous one clears; ``latency`` delays
+    delivery, not occupancy — the same device model the storage simulator
+    uses), and ``recv`` sleeps until that time.  Wall-clock through a
+    shaped fabric therefore *measures* traffic under the configured WAN
+    instead of modeling it.  Sender and receiver must share the process
+    (delivery stamps ride in a side table, not on the wire); shape
+    cross-process links with OS tooling instead."""
+
+    name = "shaped"
+
+    def __init__(self, inner: Transport, default: LinkShape | None = None,
+                 links: dict[tuple[int, int], LinkShape] | None = None):
+        self.inner = inner
+        self.default = default or LinkShape()
+        self.links = dict(links or {})
+        self._busy: dict[tuple[int, int], float] = {}
+        self._deliver: dict[tuple[int, int, int], deque] = {}
+        self._lock = threading.Lock()
+        self.num_endpoints = getattr(inner, "num_endpoints", 0)
+        self._init_common()  # barrier epochs (stats delegate to inner)
+
+    def shape_for(self, src: int, dst: int) -> LinkShape:
+        return self.links.get((src, dst), self.default)
+
+    def connect(self):
+        self.inner.connect()
+
+    def send(self, src, dst, tag, data, copy=True):
+        sh = self.shape_for(src, dst)
+        now = time.monotonic()
+        with self._lock:
+            start = max(now, self._busy.get((src, dst), 0.0))
+            xfer = (np.asarray(data).nbytes / sh.bandwidth
+                    if sh.bandwidth else 0.0)
+            self._busy[(src, dst)] = start + xfer
+            self._deliver.setdefault((src, dst, tag), deque()).append(
+                start + xfer + sh.latency_s)
+        self.inner.send(src, dst, tag, data, copy=copy)
+
+    def recv(self, src, dst, tag, out=None, timeout=None):
+        data = self.inner.recv(src, dst, tag, out=None, timeout=timeout)
+        with self._lock:
+            q = self._deliver.get((src, dst, tag))
+            due = q.popleft() if q else 0.0
+        wait = due - time.monotonic()
+        if wait > 0:
+            time.sleep(wait)
+        if out is not None:
+            out[...] = data.reshape(out.shape)
+        return data
+
+    def set_depth(self, src, dst, max_msgs=0, max_bytes=0):
+        if hasattr(self.inner, "set_depth"):
+            self.inner.set_depth(src, dst, max_msgs, max_bytes)
+
+    def close(self):
+        self.inner.close()
+
+    def stats(self):
+        return self.inner.stats()
+
+
+# ---------------------------------------------------------------------------
+# fabric: endpoint placement + lifecycle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """Endpoint-to-process placement + link shaping for one job.
+
+    ``rank=None`` hosts all endpoints in this process (today's threaded
+    mode); ``rank=k`` hosts exactly endpoint k (distributed mode) and
+    ``peers`` must list every rank's ``host:port`` in rank order.
+    ``latency_s``/``bandwidth`` configure the ``shaped`` backend's
+    default link shape."""
+
+    rank: int | None = None
+    peers: tuple[str, ...] = ()
+    latency_s: float = 0.0
+    bandwidth: float | None = None
+    connect_timeout_s: float = 30.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "peers", tuple(self.peers))
+
+
+class PartyView:
+    """One party's worker-id-addressed window onto the fabric.
+
+    The engine speaks worker ids (NET_* immediates); the view offsets them
+    into the global rank space (``rank = base + worker``) so the same
+    bytecode runs unmodified on any backend/placement.
+
+    ``recv_timeout`` bounds every NET_RECV: a mis-tagged send or a dead
+    sibling engine raises a TransportError instead of hanging the run
+    (the old ``Channels.recv`` failed fast on tag mismatch; reorder
+    buffers cannot, so they fail bounded instead)."""
+
+    RECV_TIMEOUT_S = 600.0
+
+    def __init__(self, transport: Transport, base: int, num_workers: int,
+                 recv_timeout: float | None = None):
+        self.transport = transport
+        self.base = base
+        self.num_workers = num_workers
+        self.recv_timeout = (self.RECV_TIMEOUT_S if recv_timeout is None
+                             else recv_timeout)
+
+    def send(self, src: int, dst: int, tag: int, data: np.ndarray) -> None:
+        self.transport.send(self.base + src, self.base + dst, tag, data)
+
+    def recv(self, src: int, dst: int, tag: int,
+             out: np.ndarray | None = None) -> np.ndarray:
+        try:
+            return self.transport.recv(self.base + src, self.base + dst,
+                                       tag, out=out,
+                                       timeout=self.recv_timeout)
+        except TransportError as e:
+            raise TransportError(
+                f"NET_RECV worker{src}->worker{dst} tag={tag}: {e}") from e
+
+    def barrier(self, rank: int) -> None:
+        group = range(self.base, self.base + self.num_workers)
+        self.transport.barrier(self.base + rank, group)
+
+
+class Fabric:
+    """A set of endpoints (possibly a strict subset — distributed mode)
+    plus their transports, with one connect/stats/barrier/close surface."""
+
+    def __init__(self, name: str, num_endpoints: int,
+                 transports: dict[int, Transport]):
+        self.name = name
+        self.num_endpoints = num_endpoints
+        self.transports = transports
+        self.hosted = sorted(transports)
+        self._epoch = 0
+
+    @property
+    def distributed(self) -> bool:
+        return len(self.hosted) < self.num_endpoints
+
+    def connect(self) -> None:
+        # open every hosted listener before anyone dials, then dial
+        # concurrently: co-hosted TCP ranks block on each other's inbound
+        # connections, so sequential connect() would deadlock
+        uniq = self._unique()
+        for t in uniq:
+            if hasattr(t, "listen"):
+                t.listen()
+        if len(uniq) == 1:
+            uniq[0].connect()
+            return
+        errs: list[Exception] = []
+
+        def _c(t):
+            try:
+                t.connect()
+            except Exception as e:  # re-raised below
+                errs.append(e)
+
+        threads = [threading.Thread(target=_c, args=(t,), daemon=True)
+                   for t in uniq]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        if errs:
+            raise errs[0]
+
+    def close(self) -> None:
+        for t in self._unique():
+            t.close()
+
+    def _unique(self) -> list[Transport]:
+        seen: list[Transport] = []
+        for t in self.transports.values():
+            if all(t is not s for s in seen):
+                seen.append(t)
+        return seen
+
+    def transport_for(self, rank: int) -> Transport:
+        try:
+            return self.transports[rank]
+        except KeyError:
+            raise TransportError(f"rank {rank} is not hosted by this "
+                                 f"process (hosted: {self.hosted})") from None
+
+    def view(self, rank: int, base: int, num_workers: int) -> PartyView:
+        return PartyView(self.transport_for(rank), base, num_workers)
+
+    def stats(self) -> dict[tuple[int, int, int], LinkStats]:
+        """Sent-traffic stats merged across hosted endpoints (send-side
+        accounting keeps the union disjoint)."""
+        out: dict[tuple[int, int, int], LinkStats] = {}
+        for t in self._unique():
+            for k, s in t.stats().items():
+                agg = out.setdefault(k, LinkStats())
+                agg.messages += s.messages
+                agg.bytes += s.bytes
+        return out
+
+    def link_totals(self) -> dict[tuple[int, int], LinkStats]:
+        return aggregate_links(self.stats())
+
+    def barrier(self) -> None:
+        """Full-fabric barrier across every endpoint (each hosted rank
+        exchanges tokens with all ranks) — used to hold distributed
+        processes open until every peer has drained its traffic."""
+        group = list(range(self.num_endpoints))
+        epoch = self._epoch
+        self._epoch += 1
+        tag = _FABRIC_BARRIER_BASE - epoch
+        token = np.zeros(0, dtype=np.uint8)
+        for r in self.hosted:
+            t = self.transport_for(r)
+            for peer in group:
+                if peer != r:
+                    t.send(r, peer, tag, token)
+        for r in self.hosted:
+            t = self.transport_for(r)
+            for peer in group:
+                if peer != r:
+                    t.recv(peer, r, tag)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+TransportFactory = Callable[[int, FabricSpec, Iterable[int]],
+                            dict[int, "Transport"]]
+
+TRANSPORTS: dict[str, TransportFactory] = {}
+
+
+def register_transport(name: str, factory: TransportFactory) -> None:
+    TRANSPORTS[name] = factory
+
+
+def _make_inproc(n: int, spec: FabricSpec, hosted) -> dict[int, Transport]:
+    if spec.rank is not None:
+        raise TransportError("inproc transport cannot host a single rank; "
+                             "use tcp for distributed placement")
+    t = InprocTransport(n)
+    return {r: t for r in hosted}
+
+
+def _make_tcp(n: int, spec: FabricSpec, hosted) -> dict[int, Transport]:
+    if len(spec.peers) != n:
+        raise TransportError(f"tcp fabric needs {n} peer addresses "
+                             f"(one per rank), got {len(spec.peers)}")
+    return {r: TcpTransport(r, spec.peers,
+                            connect_timeout=spec.connect_timeout_s)
+            for r in hosted}
+
+
+def _make_shaped(n: int, spec: FabricSpec, hosted) -> dict[int, Transport]:
+    if spec.rank is not None:
+        raise TransportError("shaped transport is same-process only; shape "
+                             "cross-process links with OS tooling")
+    t = ShapedTransport(InprocTransport(n),
+                        default=LinkShape(latency_s=spec.latency_s,
+                                          bandwidth=spec.bandwidth))
+    return {r: t for r in hosted}
+
+
+register_transport("inproc", _make_inproc)
+register_transport("tcp", _make_tcp)
+register_transport("shaped", _make_shaped)
+
+
+def build_fabric(name: str, num_endpoints: int,
+                 spec: FabricSpec | None = None) -> Fabric:
+    """Build (but do not connect) the fabric for one job."""
+    spec = spec or FabricSpec()
+    try:
+        factory = TRANSPORTS[name]
+    except KeyError:
+        raise KeyError(f"unknown transport {name!r}; registered: "
+                       f"{sorted(TRANSPORTS)}") from None
+    if spec.rank is None:
+        hosted: Iterable[int] = range(num_endpoints)
+    else:
+        if not 0 <= spec.rank < num_endpoints:
+            raise TransportError(f"fabric rank {spec.rank} outside "
+                                 f"{num_endpoints} endpoints")
+        hosted = (spec.rank,)
+    return Fabric(name, num_endpoints, factory(num_endpoints, spec, hosted))

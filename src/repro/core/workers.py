@@ -28,9 +28,10 @@ import numpy as np
 
 from .bytecode import Op, Program, ProgramFile
 from .dsl import Value, trace
-from .engine import Channels, Engine, EngineStats, ProtocolDriver
+from .engine import Engine, EngineStats, ProtocolDriver
 from .planner import PlanConfig, PlanReport, plan, plan_streaming
 from .storage import StorageBackend
+from .transport import InprocTransport, PartyView
 
 
 @dataclasses.dataclass
@@ -146,11 +147,13 @@ def plan_workers(progs: Sequence[Program], cfg: PlanConfig | Sequence[PlanConfig
 class EngineJob:
     """One engine to run: a (program, driver) pair plus its fabric/storage.
 
-    ``tag`` is only used to label failures (e.g. ``"garbler/worker1"``).
+    ``net`` is the engine's party-scoped window onto the transport fabric
+    (NET_* directives); ``tag`` is only used to label failures (e.g.
+    ``"garbler/worker1"``).
     """
     program: Program | ProgramFile
     driver: ProtocolDriver
-    channels: Channels | None = None
+    net: PartyView | None = None
     storage: StorageBackend | None = None
     use_memmap: bool = False
     on_output: Callable | None = None
@@ -167,7 +170,7 @@ def run_engines(jobs: Sequence[EngineJob],
     def _run(k: int, job: EngineJob) -> None:
         try:
             eng = Engine(job.program, job.driver, storage=job.storage,
-                         channels=job.channels, io_threads=io_threads,
+                         net=job.net, io_threads=io_threads,
                          use_memmap=job.use_memmap)
             results[k] = eng.run(on_output=job.on_output)
         except Exception as e:  # surfaced below
@@ -196,12 +199,12 @@ def run_workers(progs: Sequence[Program | ProgramFile],
                 use_memmap: bool = False,
                 on_output: Callable[[int, Any, list[np.ndarray]], None] | None = None,
                 ) -> list:
-    """Run one engine per worker on threads sharing a Channels fabric."""
-    channels = Channels(len(progs))
+    """Run one engine per worker on threads sharing an inproc fabric."""
+    net = PartyView(InprocTransport(len(progs)), 0, len(progs))
     jobs = []
     for w, p in enumerate(progs):
         cb = (lambda i, v, _w=w: on_output(_w, i, v)) if on_output else None
-        jobs.append(EngineJob(p, driver_factory(w), channels=channels,
+        jobs.append(EngineJob(p, driver_factory(w), net=net,
                               use_memmap=use_memmap, on_output=cb,
                               tag=f"worker{w}"))
     return run_engines(jobs)

@@ -336,8 +336,10 @@ def run_two_party(garbler_prog: Program, evaluator_prog: Program,
     """Run garbler + evaluator engines on threads; returns evaluator outputs.
 
     The two programs must come from the same bytecode but may be planned with
-    different memory budgets (each party swaps independently, §4)."""
-    ch = PartyChannel(maxsize=channel_depth)
+    different memory budgets (each party swaps independently, §4).  The
+    party stream rides a private two-endpoint in-process fabric; Session
+    runs the same drivers over a shared (possibly TCP/shaped) fabric."""
+    ch = PartyChannel(depth=channel_depth)
     gd = GarblerDriver(ch, garbler_inputs)
     ed = EvaluatorDriver(ch, evaluator_inputs)
     err: list[Exception] = []

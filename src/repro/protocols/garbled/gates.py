@@ -2,21 +2,26 @@
 
 The garbler and evaluator run the SAME engine/subcircuit code against
 different ``Gates`` implementations; every AND produces/consumes a 2-row
-garbled table streamed over the party channel (§2.4.2 pipelining: the queue
+garbled table streamed over the party channel (§2.4.2 pipelining: the link
 is bounded, so the full garbled circuit is never materialized).
 
 Labels are (m, 2) uint64 arrays.  OT is simulated in-process (a trusted
 OT functionality over the channel) — performance-faithful (we count OT
 messages and bytes for the WAN model of §8.7) but not a real OT protocol.
+
+Inter-party traffic rides the SAME transport fabric as the engine's NET_*
+directives (``core.transport``): a :class:`PartyChannel` is a kind-tagged
+window onto one (garbler_rank → evaluator_rank) link, so the garbled
+stream crosses processes/machines whenever the fabric does.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import queue
 
 import numpy as np
 
+from ...core.transport import InprocTransport, Transport, TransportError
 from .aes import hash_labels
 
 
@@ -28,24 +33,74 @@ class GateCounts:
 
 
 class PartyChannel:
-    """Ordered garbler->evaluator stream + stats (tables, inputs, OT, decode)."""
+    """Garbler→evaluator protocol stream over one fabric link.
 
-    def __init__(self, maxsize: int = 256):
-        self.q: queue.Queue = queue.Queue(maxsize=maxsize)
-        self.bytes_sent = 0
-        self.messages = 0
+    Each message kind (garbled tables, constants, garbler/evaluator
+    inputs via OT, output decode bits) maps to a fixed tag on the
+    ``(src, dst)`` link; both parties traverse the same bytecode in
+    lockstep, so per-kind FIFO delivery — the transport's ordering
+    contract — is exactly the ordering the protocol needs.
+
+    Constructed bare (``PartyChannel()``) it brings its own private
+    two-endpoint in-process fabric (rank 0 = garbler, rank 1 =
+    evaluator) with the pending set bounded at ``depth`` messages, the
+    §2.4.2 pipelining bound; in a Session, both parties' drivers get a
+    channel over the session fabric's cross-party link instead."""
+
+    TAGS = {"tab": 1, "const": 2, "gin": 3, "ot": 4, "dec": 5}
+
+    #: a desynced pair (diverged programs, a driver bug) leaves one party
+    #: waiting on a kind the other never sends; the timeout turns that
+    #: deadlock into an error (the old single-queue channel failed fast on
+    #: kind mismatch — per-kind FIFOs cannot, so they fail bounded instead)
+    RECV_TIMEOUT_S = 600.0
+
+    def __init__(self, transport: Transport | None = None,
+                 src: int = 0, dst: int = 1, depth: int = 256,
+                 recv_timeout: float | None = None):
+        if transport is None:
+            transport = InprocTransport(2)
+        self.transport = transport
+        self.src = src
+        self.dst = dst
+        self.recv_timeout = (self.RECV_TIMEOUT_S if recv_timeout is None
+                             else recv_timeout)
+        if depth and hasattr(transport, "set_depth"):
+            transport.set_depth(src, dst, max_msgs=depth)
         self.ot_selections = 0
 
     def send(self, kind: str, arr: np.ndarray) -> None:
-        self.bytes_sent += arr.nbytes
-        self.messages += 1
-        self.q.put((kind, arr))
+        # protocol messages are freshly built and never mutated by the
+        # sender afterwards: skip the defensive copy on the hot path
+        self.transport.send(self.src, self.dst, self.TAGS[kind], arr,
+                            copy=False)
 
     def recv(self, kind: str) -> np.ndarray:
-        k, arr = self.q.get()
-        if k != kind:
-            raise RuntimeError(f"protocol desync: expected {kind}, got {k}")
-        return arr
+        try:
+            return self.transport.recv(self.src, self.dst, self.TAGS[kind],
+                                       timeout=self.recv_timeout)
+        except TransportError as e:
+            raise TransportError(
+                f"party stream: no {kind!r} message on link "
+                f"{self.src}->{self.dst} (protocol desync?): {e}") from e
+
+    # -- stats (from the fabric's send-side accounting) -----------------------
+
+    def _totals(self) -> tuple[int, int]:
+        msgs = nbytes = 0
+        for (s, d, _t), st in self.transport.stats().items():
+            if (s, d) == (self.src, self.dst):
+                msgs += st.messages
+                nbytes += st.bytes
+        return msgs, nbytes
+
+    @property
+    def messages(self) -> int:
+        return self._totals()[0]
+
+    @property
+    def bytes_sent(self) -> int:
+        return self._totals()[1]
 
 
 def _mask(bits: np.ndarray, lbl: np.ndarray) -> np.ndarray:

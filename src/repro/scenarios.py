@@ -22,8 +22,12 @@ validate are the paper's ratios (MAGE-vs-OS speedups, %-of-Unbounded).
 from __future__ import annotations
 
 import dataclasses
+import time
 
-from .api import SLOT_BYTES, JobSpec, Session
+import numpy as np
+
+from .api import SLOT_BYTES, FabricSpec, JobSpec, Session
+from .core.transport import LinkStats, aggregate_links
 from .core import DeviceModel
 from .core.bytecode import Op
 from .protocols.ckks import CkksCostModel, CkksParams
@@ -169,6 +173,53 @@ def fmt_row(name: str, r: ScenarioResult) -> str:
             f"os={r.os_s:8.3f}s mage={r.mage_s:8.3f}s | "
             f"speedup={r.speedup_vs_os:5.2f}x "
             f"overhead={100*r.pct_of_unbounded:6.1f}%")
+
+
+# --- measured traffic (the transport fabric's accounting) -------------------
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    """One REAL execution's measured communication + wall time.
+
+    ``links`` is the fabric's send-side accounting aggregated per
+    (src_rank, dst_rank); ``stats`` keeps the per-tag detail (for GC the
+    tags are the protocol kinds — ``PartyChannel.TAGS`` — so e.g. OT
+    batches are ``stats[(g, e, TAGS['ot'])].messages``)."""
+
+    seconds: float
+    outputs: dict[int, np.ndarray]
+    stats: dict[tuple[int, int, int], LinkStats]
+    links: dict[tuple[int, int], LinkStats]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.bytes for s in self.links.values())
+
+    @property
+    def total_messages(self) -> int:
+        return sum(s.messages for s in self.links.values())
+
+
+def measure_traffic(name: str, n: int, num_workers: int = 1,
+                    driver: str = "auto", transport: str = "inproc",
+                    fabric: FabricSpec | None = None,
+                    check: bool = False) -> TrafficReport:
+    """Run a workload for REAL (unbounded plan) and report what actually
+    crossed the fabric — the measured replacement for fig10/fig11's
+    modeled byte counts.  ``transport="shaped"`` with a fabric carrying
+    ``latency_s``/``bandwidth`` makes ``seconds`` a WAN measurement."""
+    spec = JobSpec(workload=name, n=n, num_workers=num_workers,
+                   plan_mode="unbounded", driver=driver,
+                   transport=transport, fabric=fabric)
+    with Session(spec) as s:
+        s.plan()                      # keep trace/plan out of the timing
+        t0 = time.perf_counter()
+        outs = s.execute(check=check)
+        seconds = time.perf_counter() - t0
+        stats = s.transport_stats
+    return TrafficReport(seconds=seconds, outputs=outs,
+                         stats=stats, links=aggregate_links(stats))
 
 
 # --- the `python -m repro bench` sweep --------------------------------------

@@ -1,0 +1,389 @@
+"""The transport fabric: backend contracts (per-tag FIFO with out-of-order
+buffering, thread-safe accounting, TCP framing/barrier), NET_*-heavy
+multi-worker programs producing bitwise-identical outputs with identical
+byte counts over ``inproc`` and ``tcp``, the ``shaped`` decorator's
+latency, and the acceptance criterion: a two-process localhost-TCP run of
+a planned multi-worker workload matching the single-process run exactly.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.__main__ import main
+from repro.api import FabricSpec, JobSpec, Session
+from repro.core.transport import (InprocTransport, LinkShape, ShapedTransport,
+                                  TcpTransport, TransportError, build_fabric,
+                                  pick_free_ports)
+from repro.workloads import get
+from repro.workloads.runner import check_against_oracle
+
+
+def _arr(*vals):
+    return np.asarray(vals, dtype=np.uint64)
+
+
+# ---------------------------------------------------------------------------
+# inproc: reorder buffering + locked accounting (the old Channels bugs)
+# ---------------------------------------------------------------------------
+
+
+def test_inproc_out_of_order_tags_buffer_and_match():
+    t = InprocTransport(2)
+    t.send(0, 1, tag=2, data=_arr(22))
+    t.send(0, 1, tag=1, data=_arr(11))
+    # the old Channels.recv raised "net tag mismatch" here
+    assert t.recv(0, 1, tag=1)[0] == 11
+    assert t.recv(0, 1, tag=2)[0] == 22
+
+
+def test_inproc_per_tag_fifo():
+    t = InprocTransport(2)
+    for v in (1, 2, 3):
+        t.send(0, 1, tag=7, data=_arr(v))
+    assert [int(t.recv(0, 1, 7)[0]) for _ in range(3)] == [1, 2, 3]
+
+
+def test_inproc_recv_into_out_reshapes():
+    t = InprocTransport(2)
+    t.send(0, 1, tag=1, data=np.arange(6, dtype=np.uint64))
+    out = np.zeros((3, 2), dtype=np.uint64)
+    t.recv(0, 1, tag=1, out=out)
+    assert np.array_equal(out, np.arange(6).reshape(3, 2))
+
+
+def test_inproc_accounting_thread_safe():
+    t = InprocTransport(3)
+    threads, per, msg = [], 200, _arr(1, 2, 3)
+
+    def hammer(src, dst):
+        for i in range(per):
+            t.send(src, dst, tag=i, data=msg)
+
+    for src, dst in [(0, 1), (1, 0), (2, 1), (0, 2)]:
+        threads.append(threading.Thread(target=hammer, args=(src, dst)))
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    totals = t.link_totals()
+    for key in [(0, 1), (1, 0), (2, 1), (0, 2)]:
+        assert totals[key].messages == per
+        assert totals[key].bytes == per * msg.nbytes
+
+
+def test_inproc_depth_bounds_pending():
+    t = InprocTransport(2)
+    t.set_depth(0, 1, max_msgs=2)
+    t.send(0, 1, 1, _arr(1))
+    t.send(0, 1, 2, _arr(2))
+    done = threading.Event()
+
+    def third():
+        t.send(0, 1, 3, _arr(3))
+        done.set()
+
+    th = threading.Thread(target=third, daemon=True)
+    th.start()
+    assert not done.wait(0.1)           # blocked: pending set full
+    t.recv(0, 1, 1)                     # drain one -> unblocks
+    assert done.wait(2.0)
+
+
+def test_inproc_rejects_bad_endpoints():
+    t = InprocTransport(2)
+    with pytest.raises(TransportError):
+        t.send(0, 0, 1, _arr(1))
+    with pytest.raises(TransportError):
+        t.send(0, 5, 1, _arr(1))
+
+
+# ---------------------------------------------------------------------------
+# tcp: framing, reorder, dtype preservation, barrier
+# ---------------------------------------------------------------------------
+
+
+def _tcp_pair():
+    ports = pick_free_ports(2)
+    addrs = [f"127.0.0.1:{p}" for p in ports]
+    ts = [TcpTransport(r, addrs, connect_timeout=10) for r in range(2)]
+    threads = [threading.Thread(target=t.connect) for t in ts]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    return ts
+
+
+def test_tcp_roundtrip_reorder_and_dtypes():
+    a, b = _tcp_pair()
+    try:
+        a.send(0, 1, tag=5, data=np.arange(8, dtype=np.uint64).reshape(4, 2))
+        a.send(0, 1, tag=3, data=np.array([7, 9], dtype=np.uint8))
+        b.send(1, 0, tag=1, data=np.array([1.5, -2.0]))
+        got3 = b.recv(0, 1, tag=3, timeout=10)
+        assert got3.dtype == np.uint8 and list(got3) == [7, 9]
+        got5 = b.recv(0, 1, tag=5, timeout=10)
+        assert got5.shape == (4, 2) and got5[3, 1] == 7
+        got1 = a.recv(1, 0, tag=1, timeout=10)
+        assert got1.dtype == np.float64 and got1[1] == -2.0
+        assert a.link_totals()[(0, 1)].messages == 2
+        assert b.link_totals()[(1, 0)].messages == 1
+    finally:
+        a.close()
+        b.close()
+
+
+def test_tcp_barrier_and_close_wakes_receiver():
+    a, b = _tcp_pair()
+    state = {}
+
+    def side(t, rank):
+        t.barrier(rank, range(2))
+        state[rank] = True
+
+    th = threading.Thread(target=side, args=(b, 1))
+    th.start()
+    side(a, 0)
+    th.join(10)
+    assert state == {0: True, 1: True}
+    # close() while a recv is outstanding must raise, not hang
+    err = {}
+
+    def waiter():
+        try:
+            b.recv(0, 1, tag=99, timeout=30)
+        except TransportError as e:
+            err["e"] = e
+
+    th = threading.Thread(target=waiter, daemon=True)
+    th.start()
+    time.sleep(0.1)
+    a.close()
+    b.close()
+    th.join(10)
+    assert "e" in err
+
+
+def test_tcp_dead_peer_closes_links_created_later():
+    """A recv on a link FIRST touched after the peer died must raise, not
+    hang (links are created lazily; the dead-peer mark closes late ones)."""
+    a, b = _tcp_pair()
+    a.close()                       # peer gone before b ever touched a link
+    for t in b._readers:
+        t.join(5.0)
+    with pytest.raises(TransportError):
+        b.recv(0, 1, tag=42, timeout=10)
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# shaped: decorator adds latency, preserves payloads and accounting
+# ---------------------------------------------------------------------------
+
+
+def test_shaped_delays_delivery_and_preserves_traffic():
+    t = ShapedTransport(InprocTransport(2),
+                        default=LinkShape(latency_s=0.15, bandwidth=None))
+    t.send(0, 1, 1, _arr(42))
+    t0 = time.monotonic()
+    assert t.recv(0, 1, 1)[0] == 42
+    assert time.monotonic() - t0 >= 0.10
+    assert t.link_totals()[(0, 1)].messages == 1
+
+
+def test_shaped_bandwidth_serializes_link():
+    bw = 1e6    # 1 MB/s; 2 x 0.05 MB messages -> >= 0.1 s
+    t = ShapedTransport(InprocTransport(2),
+                        default=LinkShape(latency_s=0.0, bandwidth=bw))
+    payload = np.zeros(50_000 // 8, dtype=np.uint64)
+    t0 = time.monotonic()
+    t.send(0, 1, 1, payload)
+    t.send(0, 1, 1, payload)
+    t.recv(0, 1, 1)
+    t.recv(0, 1, 1)
+    assert time.monotonic() - t0 >= 0.08
+
+
+# ---------------------------------------------------------------------------
+# NET_*-heavy programs: inproc vs tcp, bitwise-identical, same byte counts
+# ---------------------------------------------------------------------------
+
+
+def _run_spec(transport: str, fabric: FabricSpec | None = None):
+    spec = JobSpec(workload="merge", n=128, num_workers=2, memory_budget=10,
+                   lookahead=40, prefetch_pages=2,
+                   transport=transport, fabric=fabric)
+    with Session(spec) as s:
+        outs = s.execute(check=True)
+        return outs, s.engine_stats, s.transport_stats
+
+
+@pytest.mark.slow
+def test_merge_identical_over_inproc_and_tcp():
+    outs_a, stats_a, tstats_a = _run_spec("inproc")
+    ports = pick_free_ports(2)
+    fabric = FabricSpec(peers=tuple(f"127.0.0.1:{p}" for p in ports))
+    outs_b, stats_b, tstats_b = _run_spec("tcp", fabric)
+    assert sorted(outs_a) == sorted(outs_b)
+    for tag in outs_a:
+        assert np.array_equal(outs_a[tag], outs_b[tag]), f"tag {tag}"
+    # identical per-engine traffic, identical per-link fabric accounting
+    for ea, eb in zip(stats_a, stats_b):
+        assert ea.net_messages == eb.net_messages
+        assert ea.net_sent_bytes == eb.net_sent_bytes
+        assert ea.net_recv_bytes == eb.net_recv_bytes
+        assert ea.net_links == eb.net_links
+    assert {k: (s.messages, s.bytes) for k, s in tstats_a.items()} == \
+        {k: (s.messages, s.bytes) for k, s in tstats_b.items()}
+    # engines and fabric agree on what crossed each link
+    sent = sum(e.net_sent_bytes for e in stats_a)
+    assert sent == sum(s.bytes for s in tstats_a.values())
+    assert sent > 0
+
+
+def test_engine_stats_surface_per_link_totals():
+    outs, stats, tstats = _run_spec("inproc")
+    for e in stats:
+        assert e.net_messages == sum(m for m, _ in e.net_links.values())
+        out_keys = [k for k in e.net_links]
+        assert out_keys, "merge workers must exchange pairs"
+
+
+def test_shaped_session_matches_inproc_outputs():
+    outs_a, _, tstats_a = _run_spec("inproc")
+    outs_b, _, tstats_b = _run_spec(
+        "shaped", FabricSpec(latency_s=0.001, bandwidth=1e9))
+    for tag in outs_a:
+        assert np.array_equal(outs_a[tag], outs_b[tag])
+    assert {k: s.bytes for k, s in tstats_a.items()} == \
+        {k: s.bytes for k, s in tstats_b.items()}
+
+
+def test_two_party_gc_over_tcp_fabric():
+    """Inter-party garbled traffic rides the same fabric as NET_*."""
+    ports = pick_free_ports(2)
+    spec = JobSpec(workload="merge", n=64, plan_mode="unbounded",
+                   driver="gc-2party", transport="tcp",
+                   fabric=FabricSpec(
+                       peers=tuple(f"127.0.0.1:{p}" for p in ports)))
+    with Session(spec) as s:
+        outs = s.execute(check=True)
+        tstats = s.transport_stats
+    check_against_oracle(get("merge"), 64, outs)
+    # all protocol kinds crossed the garbler->evaluator link
+    tags = {t for (src, dst, t) in tstats if (src, dst) == (0, 1)}
+    assert {1, 3, 4, 5} <= tags     # tab, gin, ot, dec
+
+
+# ---------------------------------------------------------------------------
+# fabric spec / registry plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_spec_json_roundtrip():
+    spec = JobSpec(workload="merge", n=128, memory_budget=10,
+                   transport="tcp",
+                   fabric=FabricSpec(rank=1, peers=("a:1", "b:2")))
+    d = json.loads(json.dumps(spec.to_dict()))
+    back = JobSpec.from_dict(d)
+    assert back.fabric == spec.fabric
+    assert back.transport == "tcp"
+    # transport placement never affects the plan identity
+    assert back.plan_hash() == JobSpec(workload="merge", n=128,
+                                       memory_budget=10).plan_hash()
+
+
+def test_build_fabric_validation():
+    with pytest.raises(KeyError, match="unknown transport"):
+        build_fabric("bogus", 2)
+    with pytest.raises(TransportError, match="peer addresses"):
+        build_fabric("tcp", 2, FabricSpec(peers=("h:1",)))
+    with pytest.raises(TransportError, match="single rank"):
+        build_fabric("inproc", 2, FabricSpec(rank=0, peers=()))
+    fx = build_fabric("inproc", 4)
+    assert not fx.distributed and fx.hosted == [0, 1, 2, 3]
+    fx = build_fabric("tcp", 2, FabricSpec(rank=1, peers=("h:1", "h:2")))
+    assert fx.distributed and fx.hosted == [1]
+
+
+def test_distributed_rank_refuses_check(tmp_path):
+    spec = JobSpec(workload="merge", n=64, num_workers=2, memory_budget=10,
+                   lookahead=40, prefetch_pages=2, transport="tcp",
+                   fabric=FabricSpec(rank=0, peers=("h:1", "h:2")))
+    with Session(spec) as s:
+        with pytest.raises(ValueError, match="full outputs"):
+            s.execute(check=True)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: two OS processes over localhost TCP
+# ---------------------------------------------------------------------------
+
+
+def _repro_env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+@pytest.mark.slow
+def test_two_process_tcp_run_matches_single_process(tmp_path):
+    job = tmp_path / "job"
+    assert main(["plan", "--workload", "merge", "-n", "64", "--workers", "2",
+                 "--budget", "10", "--lookahead", "40", "--prefetch", "2",
+                 "--out", str(job)]) == 0
+    single = tmp_path / "single.json"
+    assert main(["run", str(job), "--check", "--json", str(single)]) == 0
+
+    env = _repro_env()
+    ports = pick_free_ports(2)
+    peers = ",".join(f"127.0.0.1:{p}" for p in ports)
+    procs = []
+    for rank in range(2):
+        out = tmp_path / f"rank{rank}.json"
+        procs.append((out, subprocess.Popen(
+            [sys.executable, "-m", "repro", "run", str(job),
+             "--worker", str(rank), "--peers", peers, "--json", str(out)],
+            env=env, cwd=str(tmp_path))))
+    for _, proc in procs:
+        assert proc.wait(timeout=180) == 0
+    merged = {}
+    for out, _ in procs:
+        merged.update(json.loads(out.read_text()))
+    expect = json.loads(single.read_text())
+    assert merged == expect, "distributed outputs must be bitwise identical"
+
+
+@pytest.mark.slow
+def test_cli_fabric_fleet(tmp_path, capsys):
+    job = tmp_path / "job"
+    assert main(["plan", "--workload", "merge", "-n", "64", "--workers", "2",
+                 "--budget", "10", "--lookahead", "40", "--prefetch", "2",
+                 "--out", str(job)]) == 0
+    merged = tmp_path / "fleet.json"
+    assert main(["fabric", str(job), "--check", "--json", str(merged)]) == 0
+    assert "oracle check OK" in capsys.readouterr().out
+    assert merged.exists()
+
+
+def test_run_worker_requires_peers(tmp_path):
+    job = tmp_path / "job"
+    assert main(["plan", "--workload", "merge", "-n", "64",
+                 "--budget", "10", "--lookahead", "40",
+                 "--out", str(job)]) == 0
+    with pytest.raises(SystemExit, match="--peers"):
+        main(["run", str(job), "--worker", "0"])
+    with pytest.raises(SystemExit, match="full outputs|fabric"):
+        main(["run", str(job), "--worker", "0", "--peers", "a:1,b:2",
+              "--check"])
