@@ -57,6 +57,9 @@ def _add_spec_args(ap: argparse.ArgumentParser) -> None:
                     help="prefetch buffer pages B (0 = replacement only)")
     ap.add_argument("--policy", default="min",
                     help="eviction policy (min, min_clean, lru, fifo)")
+    ap.add_argument("--core", default="array", choices=("array", "scalar"),
+                    help="planner core: vectorized record arrays (default) "
+                         "or the scalar reference; outputs are identical")
     ap.add_argument("--mode", default=None,
                     choices=("memory", "streaming", "unbounded"),
                     help="plan mode (default: streaming for plan, "
@@ -74,7 +77,7 @@ def _spec_from_args(args, default_mode: str) -> JobSpec:
     return JobSpec(workload=args.workload, n=args.n,
                    num_workers=args.workers, memory_budget=args.budget,
                    lookahead=args.lookahead, prefetch_pages=args.prefetch,
-                   policy=args.policy, plan_mode=mode,
+                   policy=args.policy, plan_mode=mode, plan_core=args.core,
                    parallel_plan=args.parallel,
                    ckks_ring=args.ckks_ring, ckks_levels=args.ckks_levels)
 

@@ -42,9 +42,10 @@ from typing import Callable
 
 import numpy as np
 
-from .core.bytecode import (Program, ProgramFile, strip_frees, write_program)
+from .core.bytecode import (Program, ProgramFile, write_program)
 from .core.engine import EngineStats, ProtocolDriver
-from .core.liveness import compute_touches, working_set_pages
+from .core.liveness import working_set_pages_stream
+from .core.replacement import CORES
 from .core.planner import PlanConfig, PlanReport
 from .core.simulator import (DeviceModel, SimResult, simulate_memory_program,
                              simulate_os_paging, simulate_unbounded)
@@ -68,8 +69,9 @@ SLOT_BYTES = {"gc": 16, "ckks": 8}
 #: JobSpec fields that determine the planned memory program.  Execution
 #: details (driver, storage, workdir, parallelism, chunking) are excluded:
 #: a plan produced under any of them is valid under all of them, and
-#: ``plan_mode`` is excluded because the streaming and in-memory pipelines
-#: are instruction-identical by construction (tested).
+#: ``plan_mode`` / ``plan_core`` are excluded because the streaming and
+#: in-memory pipelines and the array and scalar planner cores are all
+#: instruction-identical by construction (tested).
 PLAN_HASH_FIELDS = ("workload", "n", "num_workers", "memory_budget",
                     "lookahead", "prefetch_pages", "policy", "swap_bypass",
                     "ckks_ring", "ckks_levels")
@@ -196,6 +198,7 @@ class JobSpec:
     policy: str = "min"
     swap_bypass: bool = False
     plan_mode: str = "memory"             # memory | streaming | unbounded
+    plan_core: str = "array"              # array | scalar (identical output)
     parallel_plan: bool | str = "serial"  # serial | thread | process
     driver: str = "auto"                  # auto → protocol default
     storage: str = "ram"                  # ram | memmap
@@ -211,6 +214,9 @@ class JobSpec:
         if self.plan_mode not in PLAN_MODES:
             raise ValueError(f"plan_mode must be one of {PLAN_MODES}, "
                              f"got {self.plan_mode!r}")
+        if self.plan_core not in CORES:
+            raise ValueError(f"plan_core must be one of {CORES}, "
+                             f"got {self.plan_core!r}")
         if self.plan_mode == "unbounded":
             if self.memory_budget is not None:
                 raise ValueError("unbounded jobs take no memory_budget")
@@ -261,8 +267,8 @@ def resolve_plan_config(spec: JobSpec, prog: Program,
     b = spec.memory_budget
     prefetch = spec.prefetch_pages
     if isinstance(b, float):
-        ws = working_set if working_set is not None else working_set_pages(
-            compute_touches(prog, strip_frees(prog.instrs)))
+        ws = working_set if working_set is not None \
+            else working_set_pages_stream(prog)
         min_frames = 8 + prefetch
         budget = max(int(ws * b), min_frames)
         budget = min(budget, max(ws - 1, min_frames))
@@ -271,7 +277,7 @@ def resolve_plan_config(spec: JobSpec, prog: Program,
         budget = int(b)
     return PlanConfig(num_frames=budget, lookahead=spec.lookahead,
                       prefetch_pages=prefetch, policy=spec.policy,
-                      swap_bypass=spec.swap_bypass)
+                      swap_bypass=spec.swap_bypass, core=spec.plan_core)
 
 
 # ---------------------------------------------------------------------------
@@ -361,8 +367,7 @@ class Session:
         """Peak live pages of one worker's virtual trace (w of §2.4.3)."""
         if worker not in self._ws:
             prog = self.trace()[worker]
-            touches = compute_touches(prog, strip_frees(prog.instrs))
-            self._ws[worker] = working_set_pages(touches)
+            self._ws[worker] = working_set_pages_stream(prog)
         return self._ws[worker]
 
     def _workdir(self) -> str | None:

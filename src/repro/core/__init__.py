@@ -5,10 +5,13 @@ scheduling (lookahead prefetch) → memory program → engine.
 """
 
 from .bytecode import (DIRECTIVES, INF, Instr, Op, Program, ProgramFile,
-                       ProgramWriter, iter_instructions, write_program)
+                       ProgramWriter, decode_chunk_array, encode_chunk_array,
+                       iter_instructions, write_program)
 from .dsl import Builder, Value, current_builder, trace
 from .engine import Engine, EngineStats, ProtocolDriver
-from .liveness import AnnotationReader, annotate_next_use
+from .liveness import (AnnotationReader, annotate_next_use, file_digest,
+                       iter_touch_chunks, stripped_touches,
+                       touches_from_records, working_set_pages_stream)
 from .placement import PageAllocator
 from .planner import (PlanConfig, PlanReport, plan, plan_streaming,
                       plan_unbounded)
@@ -28,14 +31,16 @@ from .workers import (EngineJob, ProgramOptions, plan_workers, recv_into,
 
 __all__ = [
     "DIRECTIVES", "INF", "Instr", "Op", "Program", "ProgramFile",
-    "ProgramWriter", "iter_instructions", "write_program",
+    "ProgramWriter", "decode_chunk_array", "encode_chunk_array",
+    "iter_instructions", "iter_touch_chunks", "stripped_touches",
+    "touches_from_records", "working_set_pages_stream", "write_program",
     "Builder", "Value", "current_builder", "trace",
     "Engine", "EngineStats", "ProtocolDriver",
     "Fabric", "FabricSpec", "InprocTransport", "LinkStats", "PartyView",
     "ShapedTransport", "TcpTransport", "Transport", "TransportError",
     "aggregate_links", "build_fabric", "pick_free_ports",
     "register_transport",
-    "AnnotationReader", "annotate_next_use",
+    "AnnotationReader", "annotate_next_use", "file_digest",
     "PageAllocator",
     "PlanConfig", "PlanReport", "plan", "plan_streaming", "plan_unbounded",
     "POLICIES", "MinCleanPolicy", "MinPolicy", "ReplacementStats",

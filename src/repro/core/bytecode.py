@@ -197,8 +197,71 @@ DEFAULT_CHUNK_INSTRS = 8192
 
 _REC_DTYPE = np.dtype("<i8")
 
+#: structured view of one record: the same 19 int64 words, addressable by
+#: field.  ``decode_chunk_array`` / ``encode_chunk_array`` reinterpret
+#: between this and the flat [n, RECORD_WORDS] chunk layout with zero
+#: copies — the named-field API for external record-chunk consumers.  The
+#: in-tree planner cores (replacement.py / scheduling.py) index the flat
+#: word columns directly (via _OUT_OFF/_IN_OFF/_IMM_OFF and
+#: ``unpack_heads``) and only materialize an ``Instr`` on event-time slow
+#: paths.
+REC_STRUCT = np.dtype([
+    ("head", "<i8"),                       # op | arities | float_mask
+    ("outs", "<i8", (MAX_OUTS, 2)),        # (addr, n_slots) pairs
+    ("ins", "<i8", (MAX_INS, 2)),
+    ("imm", "<i8", (MAX_IMM,)),
+])
+assert REC_STRUCT.itemsize == RECORD_BYTES
+
 _HEADER_FIELDS = ("page_shift", "protocol", "phase", "worker", "num_workers",
                   "vspace_slots", "num_frames", "prefetch_slots")
+
+
+def decode_chunk_array(arr: np.ndarray) -> np.ndarray:
+    """Zero-copy: view an [n, RECORD_WORDS] int64 chunk as a structured
+    record array with named ``head`` / ``outs`` / ``ins`` / ``imm`` fields."""
+    if arr.ndim != 2 or arr.shape[1] != RECORD_WORDS:
+        raise ValueError(f"bad record chunk shape {arr.shape}")
+    if not arr.flags.c_contiguous:
+        arr = np.ascontiguousarray(arr)
+    return arr.view(REC_STRUCT).reshape(arr.shape[0])
+
+
+def encode_chunk_array(rec: np.ndarray) -> np.ndarray:
+    """Zero-copy inverse of :func:`decode_chunk_array`: back to the flat
+    [n, RECORD_WORDS] layout ``ProgramWriter.append_records`` accepts."""
+    if rec.dtype != REC_STRUCT:
+        raise ValueError(f"expected {REC_STRUCT}, got {rec.dtype}")
+    return rec.view(_REC_DTYPE).reshape(rec.shape[0], RECORD_WORDS)
+
+
+def unpack_heads(w0: np.ndarray) -> tuple[np.ndarray, ...]:
+    """Split a vector of record head words into (op, n_outs, n_ins, n_imm)."""
+    return (w0 & 0xFFFF, (w0 >> 16) & 0xF, (w0 >> 20) & 0xF,
+            (w0 >> 24) & 0xF)
+
+
+def pack_row(op: Op, outs: Sequence[Span] = (), ins: Sequence[Span] = (),
+             imm: Sequence[int] = ()) -> list[int]:
+    """Pack one all-int instruction into a raw record row (a Python list of
+    RECORD_WORDS ints).  This is the planner cores' directive emitter: it
+    produces exactly what ``encode_chunk([Instr(op, outs, ins, imm)])``
+    would, without constructing the Instr."""
+    row = [0] * RECORD_WORDS
+    k = _OUT_OFF
+    for a, n in outs:
+        row[k] = a
+        row[k + 1] = n
+        k += 2
+    k = _IN_OFF
+    for a, n in ins:
+        row[k] = a
+        row[k + 1] = n
+        k += 2
+    for j, v in enumerate(imm):
+        row[_IMM_OFF + j] = v
+    row[0] = int(op) | len(outs) << 16 | len(ins) << 20 | len(imm) << 24
+    return row
 
 
 def _float_to_bits(v: float) -> int:

@@ -26,7 +26,8 @@ import struct
 import numpy as np
 
 from .bytecode import (DEFAULT_CHUNK_INSTRS, INF, MAX_INS, MAX_OUTS,
-                       _IN_OFF, _OUT_OFF, Instr, Op, Program, ProgramFile)
+                       _IN_OFF, _OUT_OFF, Instr, Op, Program, ProgramFile,
+                       decode_chunk, encode_chunk, strip_frees, unpack_heads)
 
 W_WRITE = 1       # touch includes a write
 W_READ = 2        # touch includes a read
@@ -102,6 +103,19 @@ def compute_touches(prog: Program, instrs: list[Instr]) -> Touches:
     return Touches(offs, pg, fl, next_any, next_read, num_pages)
 
 
+def stripped_touches(prog: Program, instrs: list[Instr] | None = None
+                     ) -> tuple[list[Instr], Touches]:
+    """THE strip-FREEs-then-extract-touches entry point.
+
+    Every consumer that needs a program's page-touch structure
+    (replacement, the OS-paging baseline, working-set sizing) goes through
+    here instead of hand-rolling the ``strip_frees`` + ``compute_touches``
+    pair."""
+    if instrs is None:
+        instrs = strip_frees(prog.instrs)
+    return instrs, compute_touches(prog, instrs)
+
+
 # ---------------------------------------------------------------------------
 # Streaming annotation (§6.3's single backward pass, out-of-core).
 #
@@ -146,6 +160,18 @@ def records_digest(acc: int, arr: np.ndarray, start: int) -> int:
     return acc ^ int(np.bitwise_xor.reduce(rows))
 
 
+def file_digest(pf: ProgramFile,
+                chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> int:
+    """Fold :func:`records_digest` over a whole program file.  Chunk-size
+    independent, so two files digest equal iff their records are
+    bitwise-identical — the array-vs-scalar core gate in tests and
+    ``table1_planning.py --cores``."""
+    d = 0
+    for s, arr in pf.iter_chunks(chunk_instrs):
+        d = records_digest(d, arr, s)
+    return d
+
+
 @dataclasses.dataclass
 class AnnotationInfo:
     path: str
@@ -164,14 +190,11 @@ def _chunk_touches(rec: np.ndarray, shift: int, psize: int
     first occurrence — byte-compatible with ``compute_touches``'s dict walk.
     """
     m = rec.shape[0]
-    w0 = rec[:, 0]
-    ops = w0 & 0xFFFF
+    ops, n_outs, n_ins, _ = unpack_heads(rec[:, 0])
     if np.any(ops == int(Op.FREE)):
         raise ValueError(
             "bytecode file contains FREE pseudo-instructions; write it with "
             "write_program(..., strip_free=True) before planning")
-    n_outs = (w0 >> 16) & 0xF
-    n_ins = (w0 >> 20) & 0xF
     S = ANN_TOUCH_SLOTS
     pages = np.full((m, S), -1, dtype=np.int64)
     flags = np.zeros((m, S), dtype=np.int64)
@@ -222,6 +245,87 @@ def _chunk_touches(rec: np.ndarray, shift: int, psize: int
     return pages, flags, present
 
 
+def flat_touches(rec: np.ndarray, shift: int, psize: int
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """CSR-style touch extraction for one record chunk.
+
+    Returns ``(counts, rows, pages, flags)``: per-instruction touch counts
+    plus flat per-touch arrays in touch order (the order ``compute_touches``
+    produces).  Shared by the annotation pass, the record-array replacement
+    core, and the streaming OS-paging simulator."""
+    pages, flags, present = _chunk_touches(rec, shift, psize)
+    counts = present.sum(axis=1).astype(np.int64)
+    rows, slots = np.nonzero(present)           # row-major: touch order
+    return counts, rows.astype(np.int64), pages[rows, slots], \
+        flags[rows, slots]
+
+
+def _chunk_next_use(tl_page: np.ndarray, tl_flags: np.ndarray,
+                    gi: np.ndarray, carry_any: dict[int, int],
+                    carry_read: dict[int, int]
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized next_any/next_read for one chunk's flat touch list.
+
+    ``gi`` is the global instruction index per touch; chunks must be
+    visited in *reverse* program order — the carry dicts hold the earliest
+    known next-touch / next-read per page across already-visited (later)
+    chunks and are updated in place."""
+    nt = len(gi)
+    t_any = np.empty(nt, dtype=np.int64)
+    t_read = np.empty(nt, dtype=np.int64)
+    if nt == 0:
+        return t_any, t_read
+    order = np.lexsort((gi, tl_page))
+    spage, sgi = tl_page[order], gi[order]
+    sread = (tl_flags[order] & W_READ) != 0
+    seg_start = np.empty(nt, dtype=bool)
+    seg_start[0] = True
+    seg_start[1:] = spage[1:] != spage[:-1]
+    seg_id = np.cumsum(seg_start) - 1
+    seg_first = np.where(seg_start)[0]
+    upages = spage[seg_first]
+
+    has_next = np.zeros(nt, dtype=bool)
+    has_next[:-1] = spage[:-1] == spage[1:]
+    nxt_in_chunk = np.empty(nt, dtype=np.int64)
+    nxt_in_chunk[:-1] = sgi[1:]
+    nxt_in_chunk[-1] = INF
+    c_any = np.fromiter(
+        (carry_any.get(int(p), INF) for p in upages),
+        np.int64, len(upages))
+    s_any = np.where(has_next, nxt_in_chunk, c_any[seg_id])
+
+    # suffix-min of read positions within each page segment
+    sent = nt
+    idx = np.arange(nt, dtype=np.int64)
+    rd_pos = np.where(sread, idx, sent)
+    big = nt + 2
+    key = seg_id * big + rd_pos
+    incl = np.minimum.accumulate(key[::-1])[::-1] - seg_id * big
+    excl = np.full(nt, sent, dtype=np.int64)
+    excl[:-1] = np.where(has_next[:-1], incl[1:], sent)
+    c_read = np.fromiter(
+        (carry_read.get(int(p), INF) for p in upages),
+        np.int64, len(upages))
+    s_read = np.where(excl < sent,
+                      sgi[np.minimum(excl, nt - 1)],
+                      c_read[seg_id])
+
+    t_any[order] = s_any
+    t_read[order] = s_read
+
+    # carries: this chunk is *earlier* in the program than everything
+    # processed so far
+    first_gi = sgi[seg_first]
+    first_rd = incl[seg_first]
+    for ui in range(len(upages)):
+        p = int(upages[ui])
+        carry_any[p] = int(first_gi[ui])
+        if first_rd[ui] < sent:
+            carry_read[p] = int(sgi[first_rd[ui]])
+    return t_any, t_read
+
+
 def annotate_next_use(pf: ProgramFile, ann_path: str | os.PathLike,
                       chunk_instrs: int = DEFAULT_CHUNK_INSTRS
                       ) -> AnnotationInfo:
@@ -240,67 +344,14 @@ def annotate_next_use(pf: ProgramFile, ann_path: str | os.PathLike,
         for start, rec in pf.iter_chunks(chunk_instrs, reverse=True):
             m = rec.shape[0]
             crc = records_digest(crc, rec, start)
-            pages, flags, present = _chunk_touches(rec, shift, psize)
-            counts = present.sum(axis=1).astype(np.int64)
-            rows, slots = np.nonzero(present)       # row-major: touch order
-            tl_page = pages[rows, slots]
-            tl_flags = flags[rows, slots]
-            gi = start + rows
+            counts, rows, tl_page, tl_flags = flat_touches(rec, shift, psize)
             nt = len(rows)
             ann = np.zeros((m, ANN_WORDS), dtype=np.int64)
             ann[:, 0] = counts
             if nt:
-                order = np.lexsort((gi, tl_page))
-                spage, sgi = tl_page[order], gi[order]
-                sread = (tl_flags[order] & W_READ) != 0
-                seg_start = np.empty(nt, dtype=bool)
-                seg_start[0] = True
-                seg_start[1:] = spage[1:] != spage[:-1]
-                seg_id = np.cumsum(seg_start) - 1
-                seg_first = np.where(seg_start)[0]
-                upages = spage[seg_first]
-
-                has_next = np.zeros(nt, dtype=bool)
-                has_next[:-1] = spage[:-1] == spage[1:]
-                nxt_in_chunk = np.empty(nt, dtype=np.int64)
-                nxt_in_chunk[:-1] = sgi[1:]
-                nxt_in_chunk[-1] = INF
-                c_any = np.fromiter(
-                    (carry_any.get(int(p), INF) for p in upages),
-                    np.int64, len(upages))
-                s_any = np.where(has_next, nxt_in_chunk, c_any[seg_id])
-
-                # suffix-min of read positions within each page segment
-                sent = nt
-                idx = np.arange(nt, dtype=np.int64)
-                rd_pos = np.where(sread, idx, sent)
-                big = nt + 2
-                key = seg_id * big + rd_pos
-                incl = np.minimum.accumulate(key[::-1])[::-1] - seg_id * big
-                excl = np.full(nt, sent, dtype=np.int64)
-                excl[:-1] = np.where(has_next[:-1], incl[1:], sent)
-                c_read = np.fromiter(
-                    (carry_read.get(int(p), INF) for p in upages),
-                    np.int64, len(upages))
-                s_read = np.where(excl < sent,
-                                  sgi[np.minimum(excl, nt - 1)],
-                                  c_read[seg_id])
-
-                t_any = np.empty(nt, dtype=np.int64)
-                t_read = np.empty(nt, dtype=np.int64)
-                t_any[order] = s_any
-                t_read[order] = s_read
-
-                # carries: this chunk is *earlier* in the program than
-                # everything processed so far
-                first_gi = sgi[seg_first]
-                first_rd = incl[seg_first]
-                for ui in range(len(upages)):
-                    p = int(upages[ui])
-                    carry_any[p] = int(first_gi[ui])
-                    if first_rd[ui] < sent:
-                        carry_read[p] = int(sgi[first_rd[ui]])
-
+                t_any, t_read = _chunk_next_use(tl_page, tl_flags,
+                                                start + rows,
+                                                carry_any, carry_read)
                 row_start = np.zeros(m, dtype=np.int64)
                 np.cumsum(counts[:-1], out=row_start[1:])
                 ordinal = np.arange(nt, dtype=np.int64) - \
@@ -320,6 +371,79 @@ def annotate_next_use(pf: ProgramFile, ann_path: str | os.PathLike,
                                  num_pages, max_touches, crc))
     return AnnotationInfo(ann_path, pf.num_records, num_pages, max_touches,
                           crc)
+
+
+def touches_from_records(rec: np.ndarray, shift: int, psize: int,
+                         chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> Touches:
+    """Vectorized in-memory ``compute_touches`` over encoded records.
+
+    Runs the exact per-chunk math of :func:`annotate_next_use` as a reverse
+    scan over slices of an in-memory record array — same touch order, same
+    next-use values, no sidecar file.  Raises ``ValueError`` on programs the
+    record format cannot express (page-straddling spans, FREEs); callers
+    fall back to the scalar :func:`compute_touches`."""
+    n = rec.shape[0]
+    carry_any: dict[int, int] = {}
+    carry_read: dict[int, int] = {}
+    parts = []
+    for s in reversed(range(0, n, chunk_instrs)):
+        sub = rec[s:s + chunk_instrs]
+        counts, rows, pg, fl = flat_touches(sub, shift, psize)
+        t_any, t_read = _chunk_next_use(pg, fl, s + rows,
+                                        carry_any, carry_read)
+        parts.append((counts, pg, fl, t_any, t_read))
+    parts.reverse()
+    if parts:
+        counts = np.concatenate([p[0] for p in parts])
+        pg = np.concatenate([p[1] for p in parts])
+        fl = np.concatenate([p[2] for p in parts])
+        nxt = np.concatenate([p[3] for p in parts])
+        nxr = np.concatenate([p[4] for p in parts])
+    else:
+        counts = np.zeros(0, dtype=np.int64)
+        pg = np.zeros(0, dtype=np.int64)
+        fl = np.zeros(0, dtype=np.int64)
+        nxt = np.zeros(0, dtype=np.int64)
+        nxr = np.zeros(0, dtype=np.int64)
+    offs = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offs[1:])
+    num_pages = int(pg.max()) + 1 if len(pg) else 0
+    return Touches(offs, pg, fl.astype(np.int8), nxt, nxr, num_pages)
+
+
+def iter_touch_chunks(prog: Program | ProgramFile,
+                      chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+                      decode: bool = True):
+    """Yield ``(instrs, offsets, pages, flags)`` per chunk, FREE-stripped.
+
+    THE shared touch-iteration helper for chunk-streaming consumers (the
+    OS-paging simulator, working-set sizing): O(chunk) memory for a
+    ProgramFile; in-memory Programs are encoded chunk-by-chunk (falling
+    back to a ``compute_touches`` slice for chunks the record format
+    cannot express, e.g. page-straddling spans).  ``decode=False`` yields
+    the chunk's instruction COUNT in place of the instruction list, so
+    touch-only consumers skip the per-instruction Instr construction."""
+    shift, psize = prog.page_shift, prog.page_slots
+    if not hasattr(prog, "instrs"):
+        for _s, rec in prog.iter_chunks(chunk_instrs):
+            counts, _rows, pg, fl = flat_touches(rec, shift, psize)
+            offs = np.zeros(rec.shape[0] + 1, dtype=np.int64)
+            np.cumsum(counts, out=offs[1:])
+            yield (decode_chunk(rec) if decode else rec.shape[0]), \
+                offs, pg, fl
+        return
+    instrs = strip_frees(prog.instrs)
+    for s in range(0, len(instrs), chunk_instrs):
+        sub = instrs[s:s + chunk_instrs]
+        try:
+            counts, _rows, pg, fl = flat_touches(encode_chunk(sub), shift,
+                                                 psize)
+            offs = np.zeros(len(sub) + 1, dtype=np.int64)
+            np.cumsum(counts, out=offs[1:])
+        except (TypeError, ValueError):
+            t = compute_touches(prog, sub)
+            offs, pg, fl = t.offsets, t.pages, t.flags
+        yield (sub if decode else len(sub)), offs, pg, fl
 
 
 class AnnotationReader:
@@ -351,6 +475,42 @@ def max_pages_per_instr(t: Touches) -> int:
     if len(t.offsets) <= 1:
         return 0
     return int(np.max(np.diff(t.offsets)))
+
+
+def working_set_pages_stream(prog: Program | ProgramFile,
+                             chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> int:
+    """Peak simultaneously-live pages (w of §2.4.3), from chunked touches.
+
+    The streaming counterpart of :func:`working_set_pages`: O(pages +
+    chunk) memory and array-speed, so budget resolution stays cheap on
+    paper-scale traces."""
+    first = np.full(1024, INF, dtype=np.int64)
+    last = np.full(1024, -1, dtype=np.int64)
+    base = 0
+    for m, offs, pages, _flags in iter_touch_chunks(prog, chunk_instrs,
+                                                    decode=False):
+        if len(pages):
+            mp = int(pages.max())
+            if mp >= first.shape[0]:
+                grow = max(mp + 1, 2 * first.shape[0])
+                f2 = np.full(grow, INF, dtype=np.int64)
+                f2[:first.shape[0]] = first
+                first = f2
+                l2 = np.full(grow, -1, dtype=np.int64)
+                l2[:last.shape[0]] = last
+                last = l2
+            gi = base + np.repeat(np.arange(m, dtype=np.int64),
+                                  np.diff(offs))
+            np.minimum.at(first, pages, gi)
+            np.maximum.at(last, pages, gi)
+        base += m
+    valid = last >= 0
+    if base == 0 or not valid.any():
+        return 0
+    delta = np.zeros(base + 1, dtype=np.int64)
+    np.add.at(delta, first[valid], 1)
+    np.add.at(delta, last[valid] + 1, -1)
+    return int(np.cumsum(delta).max())
 
 
 def working_set_pages(t: Touches) -> int:

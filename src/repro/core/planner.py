@@ -23,22 +23,30 @@ import tempfile
 import time
 import tracemalloc
 
-from .bytecode import Program, ProgramFile, write_program
+from .bytecode import Instr, Program, ProgramFile, decode_chunk, write_program
 from .liveness import annotate_next_use
 from .replacement import (ReplacementStats, plan_replacement,
-                          plan_replacement_file)
-from .scheduling import ScheduleStats, plan_schedule, plan_schedule_file
+                          plan_replacement_file, replacement_records)
+from .scheduling import (ScheduleStats, plan_schedule, plan_schedule_file,
+                         schedule_records)
 
 
 @dataclasses.dataclass
 class PlanConfig:
     """Memory budget + knobs (paper defaults: GC 64 KiB pages, l=10000, B=256
-    pages; CKKS 2 MiB pages, l=100, B=16 — we express pages in slots)."""
+    pages; CKKS 2 MiB pages, l=100, B=16 — we express pages in slots).
+
+    ``core`` selects the replacement/scheduling implementation: ``"array"``
+    (default) runs the vectorized record-array cores, ``"scalar"`` the
+    reference transducers.  Outputs are instruction-identical (tested
+    bitwise), so the knob never changes a plan — only how fast it is made.
+    """
     num_frames: int                 # T: physical frames incl. prefetch buffer
     lookahead: int = 10_000         # l
     prefetch_pages: int = 0         # B (0 = replacement-only planning)
     policy: str = "min"
     swap_bypass: bool = False       # beyond-paper read-from-write-buffer
+    core: str = "array"             # array | scalar (same outputs)
 
     @property
     def replacement_frames(self) -> int:
@@ -69,12 +77,42 @@ def plan(virtual_prog: Program, cfg: PlanConfig,
     if track_memory:
         tracemalloc.start()
     t0 = time.perf_counter()
-    phys, rstats = plan_replacement(virtual_prog, cfg.replacement_frames,
-                                    policy=cfg.policy)
-    t1 = time.perf_counter()
-    mem, sstats = plan_schedule(phys, cfg.lookahead, cfg.prefetch_pages,
-                                swap_bypass=cfg.swap_bypass)
-    t2 = time.perf_counter()
+    # Fused array pipeline: records chain between stages (one encode at
+    # the front, one decode at the end).  Falls back to the staged path
+    # when the array core cannot run this program/policy.
+    fused = replacement_records(virtual_prog, cfg.replacement_frames,
+                                cfg.policy) if cfg.core == "array" else None
+    if fused is not None:
+        phys_chunks, rstats = fused
+        t1 = time.perf_counter()
+        out: list[Instr] = []
+        sstats = schedule_records(
+            phys_chunks, cfg.lookahead, cfg.prefetch_pages,
+            lambda c: out.extend(decode_chunk(c)),
+            swap_bypass=cfg.swap_bypass)
+        mem = Program(
+            instrs=out, page_shift=virtual_prog.page_shift,
+            protocol=virtual_prog.protocol, phase="memory",
+            worker=virtual_prog.worker,
+            num_workers=virtual_prog.num_workers,
+            vspace_slots=virtual_prog.vspace_slots,
+            num_frames=cfg.replacement_frames,
+            prefetch_slots=max(cfg.prefetch_pages, 0),
+            meta=dict(virtual_prog.meta))
+        t2 = time.perf_counter()
+    else:
+        # the array core already proved it cannot run this program/policy
+        # (or core="scalar" was asked for): the scalar stages are both
+        # faster here and instruction-identical
+        phys, rstats = plan_replacement(virtual_prog,
+                                        cfg.replacement_frames,
+                                        policy=cfg.policy, core="scalar")
+        t1 = time.perf_counter()
+        mem, sstats = plan_schedule(phys, cfg.lookahead,
+                                    cfg.prefetch_pages,
+                                    swap_bypass=cfg.swap_bypass,
+                                    core="scalar")
+        t2 = time.perf_counter()
     if track_memory:
         _, peak = tracemalloc.get_traced_memory()
         tracemalloc.stop()
@@ -144,12 +182,13 @@ def plan_streaming(virtual: Program | ProgramFile, cfg: PlanConfig,
         t1 = time.perf_counter()
         phys, rstats = plan_replacement_file(
             virtual, ppath, cfg.replacement_frames, policy=cfg.policy,
-            annotations=ann.path, chunk_instrs=chunk_instrs)
+            annotations=ann.path, chunk_instrs=chunk_instrs, core=cfg.core)
         t2 = time.perf_counter()
         mem, sstats = plan_schedule_file(
             phys, mpath, cfg.lookahead, cfg.prefetch_pages,
             swap_bypass=cfg.swap_bypass, chunk_instrs=chunk_instrs,
-            meta={**dict(virtual.meta), "plan": dataclasses.asdict(cfg)})
+            meta={**dict(virtual.meta), "plan": dataclasses.asdict(cfg)},
+            core=cfg.core)
         t3 = time.perf_counter()
         done = True
     finally:

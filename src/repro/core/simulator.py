@@ -24,9 +24,9 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable
 
-from .bytecode import (Instr, Op, Program, ProgramFile, iter_instructions,
-                       strip_frees)
-from .liveness import W_WRITE, compute_touches
+from .bytecode import (DEFAULT_CHUNK_INSTRS, Instr, Op, Program, ProgramFile,
+                       iter_instructions)
+from .liveness import W_WRITE, iter_touch_chunks
 
 
 @dataclasses.dataclass
@@ -144,9 +144,11 @@ def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
     return r
 
 
-def simulate_os_paging(virtual_prog: Program, cost: CostFn, num_frames: int,
-                       page_bytes: int, model: DeviceModel | None = None,
-                       os_page_bytes: int | None = None) -> SimResult:
+def simulate_os_paging(virtual_prog: Program | ProgramFile, cost: CostFn,
+                       num_frames: int, page_bytes: int,
+                       model: DeviceModel | None = None,
+                       os_page_bytes: int | None = None,
+                       chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> SimResult:
     """Demand paging over the virtual trace: the OS-swapping baseline.
 
     Reactive LRU with blocking major faults.  The OS works at its own page
@@ -156,6 +158,11 @@ def simulate_os_paging(virtual_prog: Program, cost: CostFn, num_frames: int,
     (trap + map + TLB).  Dirty evictions write back asynchronously but
     contend for the device.  No future knowledge (no dead-page drop, no
     planned prefetch) — that is exactly what MAGE adds.
+
+    Streaming-capable: the trace is consumed as chunks (a ``ProgramFile``
+    is never materialized, and in-memory programs no longer grow a
+    program-length touch sidecar), so the full §8.2 scenario path is
+    O(frames + chunk) in simulator memory.
     """
     model = model or DeviceModel()
     dev = _Device(model, page_bytes)
@@ -164,15 +171,11 @@ def simulate_os_paging(virtual_prog: Program, cost: CostFn, num_frames: int,
     clusters = max((os_pages_per + model.readahead - 1) // model.readahead, 1)
     cluster_bytes = min(model.readahead * os_page, page_bytes)
 
-    instrs = strip_frees(virtual_prog.instrs)
-    touches = compute_touches(virtual_prog, instrs)
     r = SimResult()
     t = 0.0
     lru: OrderedDict[int, None] = OrderedDict()    # resident pages, LRU order
     dirty: set[int] = set()
     stored: set[int] = set()
-
-    offs, pg, fl = touches.offsets, touches.pages, touches.flags
 
     def evict_one(now: float) -> float:
         page, _ = lru.popitem(last=False)
@@ -190,30 +193,34 @@ def simulate_os_paging(virtual_prog: Program, cost: CostFn, num_frames: int,
                 return now + blocked
         return now
 
-    for i, ins in enumerate(instrs):
-        for k in range(int(offs[i]), int(offs[i + 1])):
-            p = int(pg[k])
-            f = int(fl[k])
-            if p in lru:
-                lru.move_to_end(p)
-            else:
-                if p in stored:
-                    # major fault: blocking reads at OS granularity
-                    t += model.fault_overhead * os_pages_per
-                    for _ in range(clusters):
-                        done = dev.submit(t, nbytes=cluster_bytes)
-                        r.stall += done - t
-                        t = done
-                    r.reads += 1
-                # else: first touch, anonymous page, no I/O
-                while len(lru) >= num_frames:
-                    t = evict_one(t)
-                lru[p] = None
-            if f & W_WRITE:
-                dirty.add(p)
-        c = cost(ins)
-        r.compute += c
-        t += c
+    for instrs, offs, pg, fl in iter_touch_chunks(virtual_prog, chunk_instrs):
+        offs_l = offs.tolist()
+        pg_l = pg.tolist()
+        fl_l = fl.tolist()
+        for i, ins in enumerate(instrs):
+            for k in range(offs_l[i], offs_l[i + 1]):
+                p = pg_l[k]
+                f = fl_l[k]
+                if p in lru:
+                    lru.move_to_end(p)
+                else:
+                    if p in stored:
+                        # major fault: blocking reads at OS granularity
+                        t += model.fault_overhead * os_pages_per
+                        for _ in range(clusters):
+                            done = dev.submit(t, nbytes=cluster_bytes)
+                            r.stall += done - t
+                            t = done
+                        r.reads += 1
+                    # else: first touch, anonymous page, no I/O
+                    while len(lru) >= num_frames:
+                        t = evict_one(t)
+                    lru[p] = None
+                if f & W_WRITE:
+                    dirty.add(p)
+            c = cost(ins)
+            r.compute += c
+            t += c
     r.read_bytes = r.reads * page_bytes
     r.write_bytes = r.writes * page_bytes
     r.total = t

@@ -1,0 +1,253 @@
+"""Record-array planner cores == scalar reference cores, bitwise.
+
+The ``core="array"`` fast paths (replacement's batched residency probe,
+scheduling's event-driven block copier) must be invisible in the output:
+every policy, both pipelines (in-memory and streaming), and the edge paths
+(write-allocate elision, dropped-dirty write-backs, swap-bypass) produce
+memory programs whose records_digest matches the scalar core's exactly.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from test_core_planner import _Driver, _random_program, _run
+
+from repro.core import Engine, PlanConfig, plan, plan_streaming
+from repro.core.bytecode import (Instr, Op, Program, encode_chunk,
+                                 write_program)
+from repro.core.liveness import (file_digest, records_digest,
+                                 stripped_touches, touches_from_records,
+                                 working_set_pages, working_set_pages_stream)
+from repro.core.replacement import plan_replacement, plan_replacement_file
+from repro.core.scheduling import plan_schedule, plan_schedule_file
+from repro.core.simulator import simulate_os_paging
+
+ALL_POLICIES = ("min", "min_clean", "lru", "fifo")
+
+
+def _digest_instrs(instrs) -> int:
+    return records_digest(0, encode_chunk(instrs), 0)
+
+
+_digest_file = file_digest
+
+
+def _swapheavy_program(n=3000, live_pages=128, page_shift=6, seed=3):
+    """Whole-page values, round-robin writes: high eviction pressure that
+    exercises write-allocate elision AND dropped-dirty write-backs."""
+    psize = 1 << page_shift
+    rng = np.random.default_rng(seed)
+    instrs = [Instr(Op.INPUT, outs=((p * psize, psize),), imm=(p,))
+              for p in range(live_pages)]
+    for i in range(n - live_pages):
+        wp = i % live_pages
+        a = int(rng.integers(0, live_pages))
+        b = int(rng.integers(0, live_pages))
+        instrs.append(Instr(Op.ADD, outs=((wp * psize, psize),),
+                            ins=((a * psize, psize), (b * psize, psize))))
+    return Program(instrs=instrs, page_shift=page_shift, protocol="gc",
+                   vspace_slots=live_pages << page_shift)
+
+
+# ---------------------------------------------------------------------------
+# stage-level equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("seed", (0, 7))
+def test_replacement_cores_identical(policy, seed):
+    prog = _random_program(seed)
+    ps, ss = plan_replacement(prog, 7, policy=policy, core="scalar")
+    pa, sa = plan_replacement(prog, 7, policy=policy, core="array",
+                              chunk_instrs=23)
+    assert pa.instrs == ps.instrs
+    assert sa == ss
+
+
+@pytest.mark.parametrize("swap_bypass", (False, True))
+@pytest.mark.parametrize("seed", (0, 7))
+def test_schedule_cores_identical(swap_bypass, seed):
+    prog = _random_program(seed)
+    phys, _ = plan_replacement(prog, 8, core="scalar")
+    ms, ss = plan_schedule(phys, 13, 2, swap_bypass=swap_bypass,
+                           core="scalar")
+    ma, sa = plan_schedule(phys, 13, 2, swap_bypass=swap_bypass,
+                           core="array", chunk_instrs=19)
+    assert ma.instrs == ms.instrs
+    assert sa == ss
+
+
+def test_file_stage_cores_identical(tmp_path):
+    prog = _random_program(11)
+    vpf = write_program(prog, tmp_path / "v.bc", strip_free=True,
+                        chunk_instrs=9)
+    ps, ss = plan_replacement_file(vpf, tmp_path / "ps.bc", 7, core="scalar")
+    pa, sa = plan_replacement_file(vpf, tmp_path / "pa.bc", 7, core="array")
+    assert _digest_file(pa) == _digest_file(ps)
+    assert sa == ss
+    ms, sss = plan_schedule_file(ps, tmp_path / "ms.bc", 12, 2,
+                                 core="scalar")
+    ma, ssa = plan_schedule_file(pa, tmp_path / "ma.bc", 12, 2,
+                                 core="array")
+    assert _digest_file(ma) == _digest_file(ms)
+    assert ssa == sss
+
+
+# ---------------------------------------------------------------------------
+# whole-pipeline equivalence: every policy x {in-memory, streaming}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("streaming", (False, True),
+                         ids=("memory", "streaming"))
+def test_plan_cores_identical(policy, streaming, tmp_path):
+    prog = _random_program(5)
+    cfg_s = PlanConfig(num_frames=7, lookahead=11, prefetch_pages=2,
+                       policy=policy, swap_bypass=True, core="scalar")
+    cfg_a = dataclasses.replace(cfg_s, core="array")
+    if streaming:
+        mem_s, rep_s = plan_streaming(prog, cfg_s,
+                                      workdir=tmp_path / "s",
+                                      chunk_instrs=13)
+        mem_a, rep_a = plan_streaming(prog, cfg_a,
+                                      workdir=tmp_path / "a",
+                                      chunk_instrs=13)
+        ds, da = _digest_file(mem_s), _digest_file(mem_a)
+    else:
+        mem_s, rep_s = plan(prog, cfg_s)
+        mem_a, rep_a = plan(prog, cfg_a)
+        ds, da = _digest_instrs(mem_s.instrs), _digest_instrs(mem_a.instrs)
+    assert da == ds
+    assert rep_a.replacement == rep_s.replacement
+    assert rep_a.schedule == rep_s.schedule
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_cores_identical_on_swapheavy_edge_paths(policy, tmp_path):
+    """The elision / dropped-dirty / sync-degrade paths, both pipelines."""
+    prog = _swapheavy_program()
+    cfg_s = PlanConfig(num_frames=40, lookahead=64, prefetch_pages=4,
+                       policy=policy, core="scalar")
+    cfg_a = dataclasses.replace(cfg_s, core="array")
+    mem_s, rep_s = plan(prog, cfg_s)
+    mem_a, rep_a = plan(prog, cfg_a)
+    assert _digest_instrs(mem_a.instrs) == _digest_instrs(mem_s.instrs)
+    assert rep_a.replacement == rep_s.replacement
+    assert rep_a.schedule == rep_s.schedule
+    # this trace must actually exercise the edge paths it claims to cover
+    assert rep_a.replacement.elided_swap_ins > 0
+    assert rep_a.replacement.dropped_dirty > 0
+    memf_a, repf_a = plan_streaming(prog, cfg_a, workdir=tmp_path,
+                                    chunk_instrs=256)
+    assert _digest_file(memf_a) == _digest_instrs(mem_s.instrs)
+    assert repf_a.replacement == rep_s.replacement
+
+
+def test_swap_bypass_path_covered():
+    """swap_bypass=True must take the read-from-write-buffer path in both
+    cores and still agree."""
+    hits = 0
+    for seed in range(8):
+        prog = _random_program(seed)
+        cfg_s = PlanConfig(num_frames=7, lookahead=30, prefetch_pages=2,
+                           swap_bypass=True, core="scalar")
+        mem_s, rep_s = plan(prog, cfg_s)
+        mem_a, rep_a = plan(prog, dataclasses.replace(cfg_s, core="array"))
+        assert mem_a.instrs == mem_s.instrs
+        assert rep_a.schedule == rep_s.schedule
+        hits += rep_a.schedule.bypass_hits
+    assert hits > 0, "no seed exercised the bypass path"
+
+
+def test_array_core_plan_executes_correctly():
+    prog = _random_program(21)
+    expect = _run(prog)
+    mem, _ = plan(prog, PlanConfig(num_frames=6, lookahead=15,
+                                   prefetch_pages=2, core="array"))
+    d = _Driver()
+    Engine(mem, d).run()
+    for k, v in expect.items():
+        assert np.array_equal(d.outputs[k], v)
+
+
+def test_custom_policy_falls_back_to_scalar_core():
+    from repro.core.replacement import MinPolicy
+    prog = _random_program(2)
+    pa, _ = plan_replacement(prog, 7, policy=MinPolicy(), core="array")
+    ps, _ = plan_replacement(prog, 7, policy="min", core="scalar")
+    assert pa.instrs == ps.instrs
+
+
+def test_bad_core_rejected():
+    prog = _random_program(0)
+    with pytest.raises(ValueError, match="core"):
+        plan_replacement(prog, 7, core="simd")
+
+
+# ---------------------------------------------------------------------------
+# vectorized liveness helpers == scalar reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", (0, 4, 9))
+def test_touches_from_records_matches_compute_touches(seed):
+    prog = _random_program(seed)
+    instrs, t = stripped_touches(prog)
+    tv = touches_from_records(encode_chunk(instrs), prog.page_shift,
+                              prog.page_slots, chunk_instrs=17)
+    assert np.array_equal(tv.offsets, t.offsets)
+    assert np.array_equal(tv.pages, t.pages)
+    assert np.array_equal(tv.flags, t.flags)
+    assert np.array_equal(tv.next_any, t.next_any)
+    assert np.array_equal(tv.next_read, t.next_read)
+    assert tv.num_pages == t.num_pages
+
+
+@pytest.mark.parametrize("seed", (0, 4, 9))
+def test_working_set_stream_matches_reference(seed):
+    prog = _random_program(seed)
+    _, t = stripped_touches(prog)
+    assert working_set_pages_stream(prog, chunk_instrs=13) == \
+        working_set_pages(t)
+
+
+def test_os_paging_sim_streams_program_files(tmp_path):
+    """The §8.2 OS baseline consumes ProgramFile chunks and matches the
+    in-memory run exactly."""
+    prog = _random_program(13)
+    cost = lambda ins: 1e-6  # noqa: E731
+    r_mem = simulate_os_paging(prog, cost, 6, 1024, chunk_instrs=11)
+    pf = write_program(prog, os.path.join(tmp_path, "v.bc"),
+                       strip_free=True)
+    r_file = simulate_os_paging(pf, cost, 6, 1024, chunk_instrs=17)
+    assert r_file == r_mem
+    assert r_mem.reads > 0 or r_mem.writes > 0
+
+
+# ---------------------------------------------------------------------------
+# zero-copy codec
+# ---------------------------------------------------------------------------
+
+
+def test_record_array_codec_zero_copy():
+    from repro.core.bytecode import (decode_chunk_array, encode_chunk_array,
+                                     pack_row, RECORD_WORDS)
+    prog = _random_program(1)
+    arr = encode_chunk(stripped_touches(prog)[0])
+    rec = decode_chunk_array(arr)
+    assert rec.shape == (arr.shape[0],)
+    assert np.array_equal(rec["head"], arr[:, 0])
+    back = encode_chunk_array(rec)
+    assert back.base is rec or back.base is rec.base  # a view, not a copy
+    assert np.array_equal(back, arr)
+    # pack_row == encode_chunk for an all-int instruction
+    ins = Instr(Op.SWAP_IN, outs=((64, 64),), imm=(5,))
+    assert pack_row(Op.SWAP_IN, outs=((64, 64),), imm=(5,)) == \
+        encode_chunk([ins])[0].tolist()
+    with pytest.raises(ValueError):
+        decode_chunk_array(np.zeros((3, RECORD_WORDS - 1), dtype=np.int64))
