@@ -15,5 +15,6 @@ from __future__ import annotations
 
 from repro.scenarios import (  # noqa: F401
     BENCH_CKKS, CKKS_PLAN, CKKS_SLOT_BYTES, FILE_BW, GC_PLAN, GC_SLOT_BYTES,
-    OS_PAGE_BYTES, PLANNER_CAP_MB, STORAGE, ScenarioResult, cost_fn, fmt_row,
-    run_workload, run_workload_workers, scenario_spec)
+    OS_PAGE_BYTES, PLANNER_CAP_MB, STORAGE, ScenarioCost, ScenarioResult,
+    cost_fn, fmt_io_row, fmt_row, run_workload, run_workload_workers,
+    scenario_spec)

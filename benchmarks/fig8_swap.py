@@ -8,44 +8,71 @@ Validated claims (§1/§8.4, scaled):
   * mvmul shows the LOWEST improvement (§8.4: high compute intensity);
   * the past-planner-cap size plans through the out-of-core file pipeline
     (plan_mode="streaming") and MAGE still beats OS there.
+
+The I/O columns report what the simulated device actually transferred:
+OS faults read whole readahead clusters (so OS read bytes can exceed
+pages x page size), write-backs and MAGE swaps move whole pages.
+
+Usage (run with the package importable, e.g. PYTHONPATH=src):
+  python benchmarks/fig8_swap.py                      # full sweep
+  python benchmarks/fig8_swap.py --tiny --json out.json   # CI smoke
+  python benchmarks/fig8_swap.py --sim-core scalar    # reference simulator
 """
 
 from __future__ import annotations
 
-from common import PLANNER_CAP_MB, fmt_row, run_workload
+import argparse
+import dataclasses
+import json
+
+from common import PLANNER_CAP_MB, fmt_io_row, fmt_row, run_workload
 
 CASES = [("merge", 16384), ("sort", 16384), ("ljoin", 256), ("mvmul", 384),
          ("binfclayer", 2048), ("rsum", 256), ("rstats", 128),
          ("rmvmul", 24), ("n_rmatmul", 8), ("t_rmatmul", 8)]
+TINY_CASES = [("merge", 2048), ("rsum", 128)]
 
 # virtual trace ≈ 11.6 MiB > the 8 MiB planner cap: only the streaming
 # pipeline plans it within the planner's own memory budget (Table 1)
 STREAM_CASE = ("merge", 131072)
+TINY_STREAM_CASE = ("merge", 4096)
 
 
-def run(budget_frac: float = 0.4, check: bool = True, streaming: bool = True):
+def run(budget_frac: float = 0.4, check: bool = True, streaming: bool = True,
+        cases=None, stream_case=None, sim_core: str = "array",
+        show_io: bool = True):
+    cases = cases if cases is not None else CASES
+    stream_case = stream_case if stream_case is not None else STREAM_CASE
     rows = {}
-    for name, n in CASES:
-        rows[name] = run_workload(name, n, budget_frac=budget_frac)
+    for name, n in cases:
+        rows[name] = run_workload(name, n, budget_frac=budget_frac,
+                                  sim_core=sim_core)
         print("fig8:", fmt_row(name, rows[name]), flush=True)
+        if show_io:
+            print("fig8:", fmt_io_row(name, rows[name]), flush=True)
     sp4 = sum(r.speedup_vs_os >= 4 for r in rows.values())
     ov15 = sum(r.pct_of_unbounded <= 0.15 for r in rows.values())
     ov60 = sum(r.pct_of_unbounded <= 0.60 for r in rows.values())
     beats = sum(r.os_s > r.mage_s for r in rows.values())
-    print(f"fig8 CLAIMS: beats-OS {beats}/10 | >=4x {sp4}/10 | "
-          f"<=15% {ov15}/10 | <=60% {ov60}/10")
+    print(f"fig8 CLAIMS: beats-OS {beats}/{len(cases)} | >=4x "
+          f"{sp4}/{len(cases)} | <=15% {ov15}/{len(cases)} | "
+          f"<=60% {ov60}/{len(cases)}")
     if check:
-        assert beats == 10, "MAGE must beat OS on all workloads"
-        assert sp4 >= 7, f"expected >=4x on >=7 workloads, got {sp4}"
-        assert ov15 >= 7, f"expected <=15% overhead on >=7, got {ov15}"
-        assert ov60 == 10, f"expected <=60% overhead on all, got {ov60}"
-        mv = rows["mvmul"].speedup_vs_os
-        assert all(mv <= r.speedup_vs_os + 1e-9 for r in rows.values()), \
-            "mvmul should show the lowest improvement (§8.4)"
+        assert beats == len(cases), "MAGE must beat OS on all workloads"
+        if cases == CASES:
+            # the paper's per-workload count claims only make sense on
+            # the full 10-workload sweep
+            assert sp4 >= 7, f"expected >=4x on >=7 workloads, got {sp4}"
+            assert ov15 >= 7, f"expected <=15% overhead on >=7, got {ov15}"
+            assert ov60 == 10, \
+                f"expected <=60% overhead on all, got {ov60}"
+            mv = rows["mvmul"].speedup_vs_os
+            assert all(mv <= r.speedup_vs_os + 1e-9 for r in rows.values()), \
+                "mvmul should show the lowest improvement (§8.4)"
     if streaming:
-        name, n = STREAM_CASE
+        name, n = stream_case
         r = run_workload(name, n, budget_frac=budget_frac,
-                         plan_mode="streaming")
+                         plan_mode="streaming", sim_core=sim_core)
         rows[f"{name}@{n}"] = r
         print("fig8 (file pipeline):", fmt_row(f"{name}@{n}", r), flush=True)
         print(f"fig8 streaming: memory program "
@@ -64,5 +91,32 @@ def run(budget_frac: float = 0.4, check: bool = True, streaming: bool = True):
     return rows
 
 
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sizes + no claim assertions (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as JSON (CI artifact)")
+    ap.add_argument("--sim-core", default="array",
+                    choices=("array", "scalar"),
+                    help="timing-simulator core (results identical; "
+                         "see docs/SIMULATOR.md)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="skip claim assertions")
+    ap.add_argument("--no-streaming", action="store_true",
+                    help="skip the past-planner-cap file-pipeline case")
+    args = ap.parse_args(argv)
+    rows = run(check=not args.no_check and not args.tiny,
+               streaming=not args.no_streaming,
+               cases=TINY_CASES if args.tiny else None,
+               stream_case=TINY_STREAM_CASE if args.tiny else None,
+               sim_core=args.sim_core)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({k: dataclasses.asdict(v) for k, v in rows.items()},
+                      f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

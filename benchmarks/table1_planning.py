@@ -121,7 +121,10 @@ def synth_value_instrs(n: int, live_pages: int = CORES_LIVE_PAGES,
                        local_frac: float = 0.99,
                        write_pages: int | None = None):
     """Value-granular GC-style trace: several values per page, reads mostly
-    over recently-written values with a tail of far references."""
+    over recently-written values with a tail of far references.  ADDs carry
+    GC width immediates (one 32-bit lane) so the trace is priceable by
+    ``GCCostModel`` — the ``--sim`` section replays it through the timing
+    simulators."""
     psize = 1 << page_shift
     vw = psize // vals_per_page
     nvals = live_pages * vals_per_page
@@ -142,7 +145,7 @@ def synth_value_instrs(n: int, live_pages: int = CORES_LIVE_PAGES,
             a = (wv - int(near[j])) % wvals if loc[j] else int(far[j])
             b = (wv - int(r2[j])) % wvals
             yield Instr(Op.ADD, outs=((wv * vw, vw),),
-                        ins=((a * vw, vw), (b * vw, vw)))
+                        ins=((a * vw, vw), (b * vw, vw)), imm=(1, 32))
         i += m
 
 
@@ -210,6 +213,82 @@ def run_cores(n: int = CORES_N, live_pages: int = CORES_LIVE_PAGES,
     if check:
         assert sp["rep_sched"] >= 10.0, \
             f"array core only {sp['rep_sched']:.1f}x scalar (< 10x claim)"
+    return out
+
+
+def run_sim(n: int = CORES_N, live_pages: int = CORES_LIVE_PAGES,
+            chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+            check: bool = True) -> dict:
+    """Array-vs-scalar SIMULATOR core comparison on the value-granular
+    trace: replay all three §8.2 scenarios (unbounded / OS paging / MAGE
+    memory program) under both cores, assert the SimResults are exactly
+    equal, and report per-scenario + combined instr/s.  The PR-5 headline:
+    >=5x simulate-stage throughput at the default chunk size (CI gates 3x
+    on the smoke size)."""
+    from repro.core.simulator import (DeviceModel, simulate_memory_program,
+                                      simulate_os_paging, simulate_unbounded)
+    from repro.scenarios import GC_SLOT_BYTES, OS_PAGE_BYTES, cost_fn
+
+    cfg = _cores_config(live_pages)
+    page_bytes = (1 << PAGE_SHIFT) * GC_SLOT_BYTES
+    model = DeviceModel(bandwidth=1e9, latency=300e-6, readahead=2)
+    cost = cost_fn("gc")
+    out: dict = {"n": n, "chunk_instrs": chunk_instrs,
+                 "live_pages": live_pages, "num_frames": cfg.num_frames}
+    wd = tempfile.mkdtemp(prefix="mage_sim_")
+    try:
+        vpath = os.path.join(wd, "virtual.bc")
+        w = ProgramWriter(vpath, page_shift=PAGE_SHIFT, protocol="gc",
+                          vspace_slots=live_pages << PAGE_SHIFT,
+                          chunk_instrs=chunk_instrs)
+        w.extend(synth_value_instrs(n, live_pages))
+        pf = w.close()
+        mem, _rep = plan_streaming(pf, cfg, workdir=wd,
+                                   chunk_instrs=chunk_instrs)
+        results: dict = {}
+        for core in ("scalar", "array"):
+            row: dict = {}
+            t0 = time.perf_counter()
+            r_unb = simulate_unbounded(pf, cost, core=core,
+                                       chunk_instrs=chunk_instrs)
+            row["unbounded_s"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            r_os = simulate_os_paging(pf, cost, cfg.num_frames, page_bytes,
+                                      model, os_page_bytes=OS_PAGE_BYTES,
+                                      core=core, chunk_instrs=chunk_instrs)
+            row["os_s"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            r_mage = simulate_memory_program(mem, cost, page_bytes, model,
+                                             core=core,
+                                             chunk_instrs=chunk_instrs)
+            row["mage_s"] = time.perf_counter() - t0
+            row["total_s"] = row["unbounded_s"] + row["os_s"] + row["mage_s"]
+            total_instrs = 2 * n + len(mem)
+            row["ips"] = total_instrs / max(row["total_s"], 1e-12)
+            results[core] = (r_unb, r_os, r_mage)
+            out[core] = row
+            print(f"sim[{core:6s}]: unb {n / max(row['unbounded_s'], 1e-12):>11,.0f} i/s "
+                  f"os {n / max(row['os_s'], 1e-12):>11,.0f} i/s "
+                  f"mage {len(mem) / max(row['mage_s'], 1e-12):>11,.0f} i/s "
+                  f"(total {row['total_s']:.2f}s, {total_instrs} instrs)")
+        os.unlink(mem.path)
+    finally:
+        shutil.rmtree(wd, ignore_errors=True)
+    out["identical"] = results["scalar"] == results["array"]
+    out["speedup"] = {
+        k: out["scalar"][f"{k}_s"] / max(out["array"][f"{k}_s"], 1e-12)
+        for k in ("unbounded", "os", "mage")}
+    out["speedup"]["combined"] = \
+        out["scalar"]["total_s"] / max(out["array"]["total_s"], 1e-12)
+    sp = out["speedup"]
+    print(f"array-vs-scalar sim speedup: unbounded {sp['unbounded']:.1f}x, "
+          f"os {sp['os']:.1f}x, mage {sp['mage']:.1f}x, combined "
+          f"{sp['combined']:.1f}x (results "
+          f"{'exactly equal' if out['identical'] else 'DIFFER!'})")
+    assert out["identical"], "array/scalar simulator results differ"
+    if check:
+        assert sp["combined"] >= 5.0, \
+            f"array sim core only {sp['combined']:.1f}x scalar (< 5x claim)"
     return out
 
 
@@ -324,6 +403,8 @@ def main(argv=None) -> None:
                     help="run the out-of-core planner sweep")
     ap.add_argument("--cores", action="store_true",
                     help="run the array-vs-scalar planner core comparison")
+    ap.add_argument("--sim", action="store_true",
+                    help="run the array-vs-scalar SIMULATOR core comparison")
     ap.add_argument("--tiny", action="store_true",
                     help="small sizes + no scale assertions (CI smoke)")
     ap.add_argument("--json", metavar="PATH",
@@ -332,7 +413,7 @@ def main(argv=None) -> None:
                     help="skip claim assertions")
     args = ap.parse_args(argv)
     check = not args.no_check and not args.tiny
-    only = args.streaming or args.cores
+    only = args.streaming or args.cores or args.sim
 
     results: dict = {"record_bytes": RECORD_BYTES}
     if args.streaming or args.tiny:
@@ -340,6 +421,12 @@ def main(argv=None) -> None:
             sizes=TINY_SWEEP_SIZES if args.tiny else None, check=check)
     if args.cores or args.tiny:
         results["cores"] = run_cores(
+            n=TINY_CORES_N if args.tiny else CORES_N,
+            live_pages=CORES_LIVE_PAGES // 2 if args.tiny
+            else CORES_LIVE_PAGES,
+            check=check)
+    if args.sim or args.tiny:
+        results["sim"] = run_sim(
             n=TINY_CORES_N if args.tiny else CORES_N,
             live_pages=CORES_LIVE_PAGES // 2 if args.tiny
             else CORES_LIVE_PAGES,

@@ -234,7 +234,7 @@ def cmd_bench(args) -> int:
         streaming_case = TINY_STREAMING_CASE if args.tiny else STREAMING_CASE
     rows = run_bench(cases=cases, budget_frac=args.budget_frac,
                      check=not args.no_check and not args.tiny,
-                     streaming_case=streaming_case)
+                     streaming_case=streaming_case, sim_core=args.sim_core)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
@@ -306,6 +306,11 @@ def main(argv=None) -> int:
                    help="small sizes + no claim assertions (CI smoke)")
     p.add_argument("--streaming", action="store_true",
                    help="add a past-planner-cap case via the file pipeline")
+    p.add_argument("--sim-core", default="array",
+                   choices=("array", "scalar"),
+                   help="timing-simulator core: vectorized record-chunk "
+                        "replay (default) or the scalar reference; results "
+                        "are identical (docs/SIMULATOR.md)")
     p.add_argument("--no-check", action="store_true")
     p.add_argument("--json", metavar="PATH",
                    help="write rows as JSON (CI artifact)")

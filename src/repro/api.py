@@ -69,9 +69,10 @@ SLOT_BYTES = {"gc": 16, "ckks": 8}
 #: JobSpec fields that determine the planned memory program.  Execution
 #: details (driver, storage, workdir, parallelism, chunking) are excluded:
 #: a plan produced under any of them is valid under all of them, and
-#: ``plan_mode`` / ``plan_core`` are excluded because the streaming and
-#: in-memory pipelines and the array and scalar planner cores are all
-#: instruction-identical by construction (tested).
+#: ``plan_mode`` / ``plan_core`` / ``sim_core`` are excluded because the
+#: streaming and in-memory pipelines, the array and scalar planner cores,
+#: and the array and scalar simulator cores are all output-identical by
+#: construction (tested).
 PLAN_HASH_FIELDS = ("workload", "n", "num_workers", "memory_budget",
                     "lookahead", "prefetch_pages", "policy", "swap_bypass",
                     "ckks_ring", "ckks_levels")
@@ -199,6 +200,7 @@ class JobSpec:
     swap_bypass: bool = False
     plan_mode: str = "memory"             # memory | streaming | unbounded
     plan_core: str = "array"              # array | scalar (identical output)
+    sim_core: str = "array"               # simulator core (identical results)
     parallel_plan: bool | str = "serial"  # serial | thread | process
     driver: str = "auto"                  # auto → protocol default
     storage: str = "ram"                  # ram | memmap
@@ -217,6 +219,9 @@ class JobSpec:
         if self.plan_core not in CORES:
             raise ValueError(f"plan_core must be one of {CORES}, "
                              f"got {self.plan_core!r}")
+        if self.sim_core not in CORES:
+            raise ValueError(f"sim_core must be one of {CORES}, "
+                             f"got {self.sim_core!r}")
         if self.plan_mode == "unbounded":
             if self.memory_budget is not None:
                 raise ValueError("unbounded jobs take no memory_budget")
@@ -491,9 +496,17 @@ class Session:
 
     def simulate(self, cost_fn: Callable, model: DeviceModel | None = None,
                  os_page_bytes: int | None = None,
-                 slot_bytes: int | None = None) -> list[WorkerScenarios]:
+                 slot_bytes: int | None = None,
+                 core: str | None = None) -> list[WorkerScenarios]:
         """Replay the three §8.2 scenarios (Unbounded / OS swap / MAGE)
-        per worker with the given per-instruction cost model."""
+        per worker with the given per-instruction cost model.
+
+        ``core`` overrides the spec's ``sim_core``: ``"array"`` (default)
+        replays record chunks through the vectorized simulator cores —
+        pricing whole chunks with ``cost_fn.cost_chunk`` when the cost
+        object provides one — while ``"scalar"`` runs the per-instruction
+        reference loops.  Results are exactly equal either way (see
+        docs/SIMULATOR.md)."""
         if self.spec.plan_mode == "unbounded":
             raise ValueError("simulate() compares scenarios under a memory "
                              "budget; plan_mode='unbounded' has none")
@@ -505,16 +518,21 @@ class Session:
                 "in-session plan(); a Session loaded with from_plan() can "
                 "only execute() its artifacts")
         sb = slot_bytes if slot_bytes is not None else SLOT_BYTES[self.protocol]
+        sim_core = core if core is not None else self.spec.sim_core
+        chunk = self.spec.chunk_instrs
         out = []
         for wk, prog in enumerate(progs):
             page_bytes = prog.page_slots * sb
             cfg = self._cfgs[wk]
-            ub = simulate_unbounded(prog, cost_fn)
+            ub = simulate_unbounded(prog, cost_fn, core=sim_core,
+                                    chunk_instrs=chunk)
             osr = simulate_os_paging(prog, cost_fn, cfg.num_frames,
                                      page_bytes, model,
-                                     os_page_bytes=os_page_bytes)
+                                     os_page_bytes=os_page_bytes,
+                                     core=sim_core, chunk_instrs=chunk)
             mem = planned[wk]
-            mage = simulate_memory_program(mem, cost_fn, page_bytes, model)
+            mage = simulate_memory_program(mem, cost_fn, page_bytes, model,
+                                           core=sim_core, chunk_instrs=chunk)
             if isinstance(mem, ProgramFile):
                 nbytes = os.path.getsize(mem.path)
             else:

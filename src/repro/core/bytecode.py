@@ -164,6 +164,31 @@ def iter_instructions(prog) -> Iterator[Instr]:
     return iter(instrs) if instrs is not None else prog.iter_instrs()
 
 
+def iter_record_chunks(prog, chunk_instrs: int | None = None
+                       ) -> "Iterator[tuple[int, np.ndarray | None, list]]":
+    """Yield ``(start, rec, instrs)`` chunks of a Program or ProgramFile.
+
+    THE shared chunk iteration for record-consuming replay paths (the
+    array simulator cores): ``rec`` is the [m, RECORD_WORDS] record array
+    (``None`` for an in-memory chunk the record format cannot express —
+    wide arity or non-scalar immediates), ``instrs`` the instruction list
+    (``None`` for file chunks, which consumers decode on demand)."""
+    if chunk_instrs is None:
+        chunk_instrs = DEFAULT_CHUNK_INSTRS
+    instrs = getattr(prog, "instrs", None)
+    if instrs is None:
+        for s, rec in prog.iter_chunks(chunk_instrs):
+            yield s, rec, None
+        return
+    for s in range(0, len(instrs), chunk_instrs):
+        sub = instrs[s:s + chunk_instrs]
+        try:
+            rec = encode_chunk(sub)
+        except (TypeError, ValueError):
+            rec = None
+        yield s, rec, sub
+
+
 # ---------------------------------------------------------------------------
 # On-disk chunked bytecode format (§6.1: the planner is out-of-core).
 #

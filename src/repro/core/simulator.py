@@ -16,6 +16,29 @@ Three scenarios, matching §8.2:
                 contends for device bandwidth; per-fault CPU overhead;
   * MAGE      — replay of the planned memory program: ISSUE_* overlap with
                 compute; FINISH_* block only until the transfer completes.
+
+Each simulator has TWO cores behind a ``core="array"|"scalar"`` knob
+(array is the default; the scalar loops are kept as the reference):
+
+  * the array cores consume record chunks and price each chunk with ONE
+    vectorized ``cost_chunk`` call (see ``GCCostModel.cost_chunk`` /
+    ``CkksCostModel.cost_chunk`` and the rec-level wrapper the scenarios
+    harness provides), dropping to scalar handlers only at *events* —
+    swap/NET directives in the memory-program replay, residency misses in
+    the OS baseline (found by a vectorized probe over the touch arrays,
+    the same adaptive-window pattern as replacement's ``_ArrayCore``);
+
+  * results are EXACTLY equal to the scalar cores for any chunk size:
+    per-instruction costs are bitwise-identical by the cost models'
+    chunk contract, and both cores accumulate compute sequentially
+    between events, folding it into the clock at the same points
+    (asserted in tests/test_array_sim.py).
+
+Costs: ``cost`` is a per-instruction callable; if it also exposes
+``cost_chunk(rec) -> float64[m]`` over raw record chunks (the scenarios
+harness's cost objects do), the array cores use it — otherwise they fall
+back to calling the scalar cost per instruction, keeping results
+identical but losing the speed edge.
 """
 
 from __future__ import annotations
@@ -24,9 +47,13 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable
 
-from .bytecode import (DEFAULT_CHUNK_INSTRS, Instr, Op, Program, ProgramFile,
-                       iter_instructions)
+import numpy as np
+
+from .bytecode import (DEFAULT_CHUNK_INSTRS, INF, _IMM_OFF, _IN_OFF, Instr,
+                       Op, Program, ProgramFile, decode_chunk,
+                       iter_instructions, iter_record_chunks, unpack_heads)
 from .liveness import W_WRITE, iter_touch_chunks
+from .replacement import ARRAY_MAX_VPAGES, _check_core
 
 
 @dataclasses.dataclass
@@ -46,7 +73,7 @@ class SimResult:
     stall: float = 0.0
     reads: int = 0
     writes: int = 0
-    read_bytes: int = 0
+    read_bytes: int = 0        # bytes the device actually transferred
     write_bytes: int = 0
     net_msgs: int = 0          # NET_SEND directives replayed
     net_bytes: int = 0         # bytes those sends would move on the fabric
@@ -57,6 +84,26 @@ class SimResult:
 
 
 CostFn = Callable[[Instr], float]
+
+
+def _chunk_costs(cost: CostFn, rec: np.ndarray | None, instrs,
+                 skip: frozenset) -> list[float]:
+    """Per-instruction seconds for one chunk, as a Python float list.
+
+    Prefers the cost object's vectorized ``cost_chunk(rec)``; otherwise
+    prices instructions with the scalar callable (ops in ``skip`` — rows
+    the scalar reference never prices — get 0.0, which is what the array
+    cores' sequential sums need: adding 0.0 is exact)."""
+    ck = getattr(cost, "cost_chunk", None)
+    if ck is not None and rec is not None:
+        costs = np.asarray(ck(rec), dtype=np.float64)
+        if skip:
+            ops = unpack_heads(rec[:, 0])[0]
+            costs = np.where(np.isin(ops, list(skip)), 0.0, costs)
+        return costs.tolist()
+    if instrs is None:
+        instrs = decode_chunk(rec)
+    return [0.0 if int(i.op) in skip else cost(i) for i in instrs]
 
 
 class _Device:
@@ -80,75 +127,411 @@ class _Device:
         return start + xfer + self.m.latency
 
 
-def simulate_unbounded(prog: Program | ProgramFile, cost: CostFn) -> SimResult:
+# ---------------------------------------------------------------------------
+# Unbounded
+# ---------------------------------------------------------------------------
+
+_SKIP_FREE = frozenset({int(Op.FREE)})
+
+
+def simulate_unbounded(prog: Program | ProgramFile, cost: CostFn,
+                       core: str = "array",
+                       chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> SimResult:
+    _check_core(core)
     r = SimResult()
-    for ins in iter_instructions(prog):
-        if ins.op not in (Op.FREE,):
-            r.compute += cost(ins)
+    if core == "scalar":
+        for ins in iter_instructions(prog):
+            if ins.op not in (Op.FREE,):
+                r.compute += cost(ins)
+    else:
+        comp = 0.0
+        for _s, rec, instrs in iter_record_chunks(prog, chunk_instrs):
+            comp = sum(_chunk_costs(cost, rec, instrs, _SKIP_FREE), comp)
+        r.compute = comp
     r.total = r.compute
     return r
 
 
-def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
-                            page_bytes: int,
-                            model: DeviceModel | None = None) -> SimResult:
-    """Replay a 'physical' or 'memory' phase program."""
-    model = model or DeviceModel()
-    dev = _Device(model, page_bytes)
-    r = SimResult()
-    t = 0.0
-    slot_done: dict[int, float] = {}
-    slot_bytes = max(page_bytes // max(prog.page_slots, 1), 1)
-    for ins in iter_instructions(prog):
-        op = ins.op
-        if op == Op.SWAP_IN:
+# ---------------------------------------------------------------------------
+# MAGE: memory-program replay
+# ---------------------------------------------------------------------------
+
+_E_SWAP_IN = int(Op.SWAP_IN)
+_E_SWAP_OUT = int(Op.SWAP_OUT)
+_E_ISSUE_IN = int(Op.ISSUE_SWAP_IN)
+_E_FINISH_IN = int(Op.FINISH_SWAP_IN)
+_E_COPY_OUT = int(Op.COPY_OUT)
+_E_ISSUE_OUT = int(Op.ISSUE_SWAP_OUT)
+_E_FINISH_OUT = int(Op.FINISH_SWAP_OUT)
+_E_NET_SEND = int(Op.NET_SEND)
+
+_MEM_EVENTS = frozenset({_E_SWAP_IN, _E_SWAP_OUT, _E_ISSUE_IN, _E_FINISH_IN,
+                         _E_COPY_OUT, _E_ISSUE_OUT, _E_FINISH_OUT,
+                         _E_NET_SEND})
+_MEM_EVENTS_ARR = np.array(sorted(_MEM_EVENTS), dtype=np.int64)
+_MEM_SKIP = frozenset({int(Op.NET_RECV), int(Op.NET_BARRIER), int(Op.FREE)})
+_MEM_NONCOMPUTE = _MEM_EVENTS | _MEM_SKIP
+
+
+class _MemoryReplay:
+    """Event-time state of the memory-program replay, shared by both cores:
+    the simulated clock, the device, and the in-flight pf-slot completions.
+    Pending compute is folded in via :meth:`flush` only at events (and once
+    at the end), so both cores add the same floats in the same order."""
+
+    def __init__(self, model: DeviceModel, page_bytes: int, slot_bytes: int,
+                 r: SimResult):
+        self.dev = _Device(model, page_bytes)
+        self.page_bytes = page_bytes
+        self.slot_bytes = slot_bytes
+        self.r = r
+        self.t = 0.0
+        self.slot_done: dict[int, float] = {}
+
+    def flush(self, sub: float) -> None:
+        self.t += sub
+        self.r.compute += sub
+
+    def event(self, op: int, a: int, b: int, n0: int) -> None:
+        """One directive: ``a``/``b`` are imm[0]/imm[1], ``n0`` is
+        ins[0]'s slot count (NET_SEND accounting)."""
+        r, dev, t = self.r, self.dev, self.t
+        if op == _E_SWAP_IN or op == _E_SWAP_OUT:
             done = dev.submit(t)
             r.stall += done - t
             t = done
+            if op == _E_SWAP_IN:
+                r.reads += 1
+                r.read_bytes += self.page_bytes
+            else:
+                r.writes += 1
+                r.write_bytes += self.page_bytes
+        elif op == _E_ISSUE_IN:
+            self.slot_done[b] = dev.submit(t)
             r.reads += 1
-        elif op == Op.SWAP_OUT:
-            done = dev.submit(t)
-            r.stall += done - t
-            t = done
+            r.read_bytes += self.page_bytes
+        elif op == _E_ISSUE_OUT:
+            self.slot_done[b] = dev.submit(t)
             r.writes += 1
-        elif op == Op.ISSUE_SWAP_IN:
-            slot_done[ins.imm[1]] = dev.submit(t)
-            r.reads += 1
-        elif op == Op.ISSUE_SWAP_OUT:
-            slot_done[ins.imm[1]] = dev.submit(t)
-            r.writes += 1
-        elif op in (Op.FINISH_SWAP_IN, Op.FINISH_SWAP_OUT):
-            slot = ins.imm[1] if op == Op.FINISH_SWAP_IN else ins.imm[0]
-            done = slot_done.pop(slot, t)
+            r.write_bytes += self.page_bytes
+        elif op == _E_FINISH_IN or op == _E_FINISH_OUT:
+            slot = b if op == _E_FINISH_IN else a
+            done = self.slot_done.pop(slot, t)
             if done > t:
                 r.stall += done - t
                 t = done
-            if op == Op.FINISH_SWAP_IN:
-                t += page_bytes / 50e9  # pf->frame memcpy (~DRAM bw)
-        elif op == Op.COPY_OUT:
-            t += page_bytes / 50e9
-        elif op == Op.NET_SEND:
+            if op == _E_FINISH_IN:
+                t += self.page_bytes / 50e9  # pf->frame memcpy (~DRAM bw)
+        elif op == _E_COPY_OUT:
+            t += self.page_bytes / 50e9
+        elif op == _E_NET_SEND:
             # accounted like the transport fabric does (send side): the
             # span's slots at the protocol's slot width
             r.net_msgs += 1
-            r.net_bytes += ins.ins[0][1] * slot_bytes
-        elif op in (Op.NET_RECV, Op.NET_BARRIER, Op.FREE):
+            r.net_bytes += n0 * self.slot_bytes
+        self.t = t
+
+
+def _mem_walk(instrs, cost: CostFn, rp: _MemoryReplay, sub: float) -> float:
+    """The scalar reference walk (also prices array-core fallback chunks):
+    accumulate compute sequentially, fold at events."""
+    for ins in instrs:
+        op = int(ins.op)
+        if op in _MEM_SKIP:
             continue
+        if op in _MEM_EVENTS:
+            rp.flush(sub)
+            sub = 0.0
+            imm = ins.imm
+            rp.event(op, imm[0] if imm else 0,
+                     imm[1] if len(imm) > 1 else 0,
+                     ins.ins[0][1] if ins.ins else 0)
         else:
-            c = cost(ins)
-            r.compute += c
-            t += c
-    r.read_bytes = r.reads * page_bytes
-    r.write_bytes = r.writes * page_bytes
-    r.total = t
+            sub += cost(ins)
+    return sub
+
+
+def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
+                            page_bytes: int,
+                            model: DeviceModel | None = None,
+                            core: str = "array",
+                            chunk_instrs: int = DEFAULT_CHUNK_INSTRS
+                            ) -> SimResult:
+    """Replay a 'physical' or 'memory' phase program."""
+    _check_core(core)
+    model = model or DeviceModel()
+    r = SimResult()
+    slot_bytes = max(page_bytes // max(prog.page_slots, 1), 1)
+    rp = _MemoryReplay(model, page_bytes, slot_bytes, r)
+    if core == "scalar":
+        rp.flush(_mem_walk(iter_instructions(prog), cost, rp, 0.0))
+    else:
+        sub = 0.0
+        for _s, rec, instrs in iter_record_chunks(prog, chunk_instrs):
+            if rec is None:
+                sub = _mem_walk(instrs, cost, rp, sub)
+                continue
+            costs = _chunk_costs(cost, rec, instrs, _MEM_NONCOMPUTE)
+            ops = unpack_heads(rec[:, 0])[0]
+            prev = 0
+            for e in np.nonzero(np.isin(ops, _MEM_EVENTS_ARR))[0].tolist():
+                rp.flush(sum(costs[prev:e], sub))
+                sub = 0.0
+                row = rec[e]
+                rp.event(int(ops[e]), int(row[_IMM_OFF]),
+                         int(row[_IMM_OFF + 1]), int(row[_IN_OFF + 1]))
+                prev = e + 1
+            sub = sum(costs[prev:], sub)
+        rp.flush(sub)
+    r.total = rp.t
     return r
+
+
+# ---------------------------------------------------------------------------
+# OS demand paging
+# ---------------------------------------------------------------------------
+
+
+class _OsReplay:
+    """Event-time state of the OS-paging baseline, shared by both cores:
+    the clock, the device, the OS-granularity fault-cluster geometry and
+    the write-back throttle.  Residency structures stay core-specific
+    (dict/LRU list vs. flat arrays); only the event arithmetic lives here,
+    so the two cores cannot drift."""
+
+    def __init__(self, model: DeviceModel, page_bytes: int,
+                 os_page_bytes: int | None, r: SimResult):
+        self.m = model
+        self.dev = _Device(model, page_bytes)
+        os_page = os_page_bytes or page_bytes
+        self.os_pages_per = max(page_bytes // os_page, 1)
+        self.clusters = max(
+            (self.os_pages_per + model.readahead - 1) // model.readahead, 1)
+        self.cluster_bytes = min(model.readahead * os_page, page_bytes)
+        self.page_bytes = page_bytes
+        self.r = r
+        self.t = 0.0
+
+    def flush(self, sub: float) -> None:
+        self.t += sub
+        self.r.compute += sub
+
+    def major_fault(self) -> None:
+        """Blocking reads at OS granularity: ceil(page/os_page/readahead)
+        I/O clusters (Linux swap readahead) plus per-OS-page trap cost."""
+        r = self.r
+        t = self.t + self.m.fault_overhead * self.os_pages_per
+        for _ in range(self.clusters):
+            done = self.dev.submit(t, nbytes=self.cluster_bytes)
+            r.stall += done - t
+            t = done
+            r.read_bytes += self.cluster_bytes
+        r.reads += 1
+        self.t = t
+
+    def writeback(self) -> None:
+        """Async write-back of a dirty victim: contends for the device;
+        direct-reclaim throttling blocks the faulting process once the
+        write-back queue is deep."""
+        r = self.r
+        now = self.t
+        self.dev.submit(now, nbytes=self.page_bytes)
+        r.writes += 1
+        r.write_bytes += self.page_bytes
+        lag = self.dev.free_at - now
+        if lag > self.m.os_writeback_throttle_s:
+            blocked = lag - self.m.os_writeback_throttle_s
+            r.stall += blocked
+            self.t = now + blocked
+
+
+def _os_scalar(prog, cost: CostFn, num_frames: int, rp: _OsReplay,
+               chunk_instrs: int) -> None:
+    """The scalar reference: reactive LRU with blocking major faults."""
+    lru: OrderedDict[int, None] = OrderedDict()    # resident pages, LRU order
+    dirty: set[int] = set()
+    stored: set[int] = set()
+    sub = 0.0
+    for instrs, offs, pg, fl in iter_touch_chunks(prog, chunk_instrs):
+        offs_l = offs.tolist()
+        pg_l = pg.tolist()
+        fl_l = fl.tolist()
+        for i, ins in enumerate(instrs):
+            for k in range(offs_l[i], offs_l[i + 1]):
+                p = pg_l[k]
+                if p in lru:
+                    lru.move_to_end(p)
+                else:
+                    rp.flush(sub)
+                    sub = 0.0
+                    if p in stored:
+                        rp.major_fault()
+                    # else: first touch, anonymous page, no I/O
+                    while len(lru) >= num_frames:
+                        victim, _ = lru.popitem(last=False)
+                        if victim in dirty:
+                            dirty.discard(victim)
+                            stored.add(victim)
+                            rp.writeback()
+                    lru[p] = None
+                if fl_l[k] & W_WRITE:
+                    dirty.add(p)
+            sub += cost(ins)
+    rp.flush(sub)
+
+
+class _OsArrayCore:
+    """Vectorized residency probe over the touch arrays; scalar fault /
+    evict handling only on misses (the ``_ArrayCore`` adaptive-window
+    pattern).  State: per-frame page/last-touch/dirty vectors plus
+    growable per-page slot/stored vectors — array analogues of the
+    scalar core's LRU dict, with the LRU order recovered exactly as the
+    argmin of last-touch indices (touch indices are globally unique, so
+    the victim matches the OrderedDict's pop order)."""
+
+    def __init__(self, num_frames: int, rp: _OsReplay):
+        self.nf = num_frames
+        self.rp = rp
+        self.slot_of = np.full(1024, -1, dtype=np.int64)
+        self.stored = np.zeros(1024, dtype=bool)
+        self.page_of = np.full(num_frames, -1, dtype=np.int64)
+        self.last_touch = np.full(num_frames, INF, dtype=np.int64)
+        self.dirty_of = np.zeros(num_frames, dtype=bool)
+        self.free = list(range(num_frames - 1, -1, -1))
+        self.used = 0
+        self.base = 0                  # global touch index of chunk start
+        self.win = _OS_PROBE_MAX
+        self._cand: list[tuple[int, int]] = []   # LRU victim candidates
+        self._ci = 0
+
+    def _grow(self, max_page: int) -> None:
+        if max_page < self.slot_of.shape[0]:
+            return
+        n = max(max_page + 1, 2 * self.slot_of.shape[0])
+        s2 = np.full(n, -1, dtype=np.int64)
+        s2[:self.slot_of.shape[0]] = self.slot_of
+        self.slot_of = s2
+        st2 = np.zeros(n, dtype=bool)
+        st2[:self.stored.shape[0]] = self.stored
+        self.stored = st2
+
+    def _evict_frame(self) -> int:
+        """The LRU victim: the frame with the globally smallest last-touch
+        index.  Per-eviction argmin is O(frames) — too slow at fig9-scale
+        working sets — so victims come from a snapshot of the 1024 smallest
+        keys (one argpartition, amortized over the burst of evictions that
+        follows).  Touch indices only ever grow, so a candidate whose key
+        is unchanged since the snapshot is still the global minimum: every
+        non-candidate exceeded the snapshot's largest key then and has only
+        grown, and any candidate touched since (or any newly faulted-in
+        page) carries a more recent — larger — index.  Stale entries are
+        skipped; an exhausted queue re-snapshots.  Exactly the argmin (and
+        the scalar OrderedDict pop order), tested bitwise."""
+        lt = self.last_touch
+        while True:
+            while self._ci < len(self._cand):
+                key, f = self._cand[self._ci]
+                self._ci += 1
+                if key < INF and lt[f] == key:
+                    return f
+            k = min(self.nf, 1024)
+            if k == self.nf:
+                idx = np.argsort(lt)
+            else:
+                part = np.argpartition(lt, k - 1)[:k]
+                idx = part[np.argsort(lt[part])]
+            self._cand = list(zip(lt[idx].tolist(), idx.tolist()))
+            self._ci = 0
+            if not self._cand:
+                raise RuntimeError("no frame to evict (num_frames == 0)")
+
+    def _touch(self, k: int, pg_l: list, fl_l: list) -> None:
+        """One scalar touch: exactly ``_os_scalar``'s per-touch body."""
+        p = pg_l[k]
+        s = int(self.slot_of[p])
+        if s < 0:
+            rp = self.rp
+            if self.stored[p]:
+                rp.major_fault()
+            while self.used >= self.nf:
+                vf = self._evict_frame()
+                vq = int(self.page_of[vf])
+                if self.dirty_of[vf]:
+                    self.dirty_of[vf] = False
+                    self.stored[vq] = True
+                    rp.writeback()
+                self.slot_of[vq] = -1
+                self.page_of[vf] = -1
+                self.last_touch[vf] = INF
+                self.free.append(vf)
+                self.used -= 1
+            s = self.free.pop()
+            self.slot_of[p] = s
+            self.page_of[s] = p
+            self.dirty_of[s] = False
+            self.used += 1
+        self.last_touch[s] = self.base + k
+        if fl_l[k] & W_WRITE:
+            self.dirty_of[s] = True
+
+    def process_chunk(self, m: int, offs: np.ndarray, pg: np.ndarray,
+                      fl: np.ndarray, costs: list[float],
+                      sub: float) -> float:
+        """Transduce one chunk's touches; returns the pending compute."""
+        T = pg.shape[0]
+        if T:
+            self._grow(int(pg.max()))
+        rows = np.repeat(np.arange(m, dtype=np.int64), np.diff(offs))
+        wm = (fl & W_WRITE) != 0
+        offs_l = offs.tolist()
+        pg_l = pg.tolist()
+        fl_l = fl.tolist()
+        rows_l = rows.tolist()
+        slot_of = self.slot_of
+        ci = 0                     # first instruction not yet priced
+        k = 0
+        win = self.win
+        while k < T:
+            end = min(k + win, T)
+            sl = slot_of[pg[k:end]]
+            missrel = np.nonzero(sl < 0)[0]
+            m0 = k + int(missrel[0]) if missrel.size else end
+            if m0 > k:
+                seg = slice(k, m0)
+                ssl = sl[:m0 - k]
+                # hits never evict, so the probe's verdict holds for the
+                # whole clean prefix: batch the LRU/dirty bookkeeping
+                self.last_touch[ssl] = self.base + np.arange(
+                    k, m0, dtype=np.int64)
+                self.dirty_of[ssl[wm[seg]]] = True
+            if m0 < end:
+                i = rows_l[m0]
+                self.rp.flush(sum(costs[ci:i], sub))
+                sub = 0.0
+                ci = i
+                row_end = offs_l[i + 1]
+                for kk in range(m0, row_end):
+                    self._touch(kk, pg_l, fl_l)
+                win = max(_OS_PROBE_MIN, min(win, 2 * (m0 - k + 8)))
+                k = row_end
+            else:
+                k = end
+                win = min(win * 2, _OS_PROBE_MAX)
+        self.win = win
+        self.base += T
+        return sum(costs[ci:m], sub)
+
+
+_OS_PROBE_MAX = 8192
+_OS_PROBE_MIN = 32
 
 
 def simulate_os_paging(virtual_prog: Program | ProgramFile, cost: CostFn,
                        num_frames: int, page_bytes: int,
                        model: DeviceModel | None = None,
                        os_page_bytes: int | None = None,
-                       chunk_instrs: int = DEFAULT_CHUNK_INSTRS) -> SimResult:
+                       chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+                       core: str = "array") -> SimResult:
     """Demand paging over the virtual trace: the OS-swapping baseline.
 
     Reactive LRU with blocking major faults.  The OS works at its own page
@@ -159,69 +542,43 @@ def simulate_os_paging(virtual_prog: Program | ProgramFile, cost: CostFn,
     contend for the device.  No future knowledge (no dead-page drop, no
     planned prefetch) — that is exactly what MAGE adds.
 
+    ``read_bytes``/``write_bytes`` report what the device actually
+    transferred: fault clusters at OS readahead granularity (which can
+    exceed the page size when the cluster count rounds up) and
+    whole-page write-backs.
+
     Streaming-capable: the trace is consumed as chunks (a ``ProgramFile``
-    is never materialized, and in-memory programs no longer grow a
+    is never materialized, and in-memory programs never grow a
     program-length touch sidecar), so the full §8.2 scenario path is
     O(frames + chunk) in simulator memory.
     """
+    _check_core(core)
+    if core == "array" and virtual_prog.num_vpages() >= ARRAY_MAX_VPAGES:
+        # the array core keeps O(num_vpages) slot/stored vectors (the
+        # analogue of replacement's per-page state); past this bound the
+        # scalar core's dicts — O(touched pages) — are the leaner choice.
+        # Results are identical either way.
+        core = "scalar"
     model = model or DeviceModel()
-    dev = _Device(model, page_bytes)
-    os_page = os_page_bytes or page_bytes
-    os_pages_per = max(page_bytes // os_page, 1)
-    clusters = max((os_pages_per + model.readahead - 1) // model.readahead, 1)
-    cluster_bytes = min(model.readahead * os_page, page_bytes)
-
     r = SimResult()
-    t = 0.0
-    lru: OrderedDict[int, None] = OrderedDict()    # resident pages, LRU order
-    dirty: set[int] = set()
-    stored: set[int] = set()
-
-    def evict_one(now: float) -> float:
-        page, _ = lru.popitem(last=False)
-        if page in dirty:
-            dirty.discard(page)
-            stored.add(page)
-            dev.submit(now, nbytes=page_bytes)  # async write-back: contends
-            r.writes += 1
-            # direct-reclaim throttling: once the write-back queue is deep,
-            # the faulting process blocks until it drains below the mark
-            lag = dev.free_at - now
-            if lag > model.os_writeback_throttle_s:
-                blocked = lag - model.os_writeback_throttle_s
-                r.stall += blocked
-                return now + blocked
-        return now
-
-    for instrs, offs, pg, fl in iter_touch_chunks(virtual_prog, chunk_instrs):
-        offs_l = offs.tolist()
-        pg_l = pg.tolist()
-        fl_l = fl.tolist()
-        for i, ins in enumerate(instrs):
-            for k in range(offs_l[i], offs_l[i + 1]):
-                p = pg_l[k]
-                f = fl_l[k]
-                if p in lru:
-                    lru.move_to_end(p)
-                else:
-                    if p in stored:
-                        # major fault: blocking reads at OS granularity
-                        t += model.fault_overhead * os_pages_per
-                        for _ in range(clusters):
-                            done = dev.submit(t, nbytes=cluster_bytes)
-                            r.stall += done - t
-                            t = done
-                        r.reads += 1
-                    # else: first touch, anonymous page, no I/O
-                    while len(lru) >= num_frames:
-                        t = evict_one(t)
-                    lru[p] = None
-                if f & W_WRITE:
-                    dirty.add(p)
-            c = cost(ins)
-            r.compute += c
-            t += c
-    r.read_bytes = r.reads * page_bytes
-    r.write_bytes = r.writes * page_bytes
-    r.total = t
+    rp = _OsReplay(model, page_bytes, os_page_bytes, r)
+    if core == "scalar":
+        _os_scalar(virtual_prog, cost, num_frames, rp, chunk_instrs)
+    else:
+        ac = _OsArrayCore(num_frames, rp)
+        need_instrs = getattr(cost, "cost_chunk", None) is None
+        sub = 0.0
+        for head, offs, pg, fl, rec in iter_touch_chunks(
+                virtual_prog, chunk_instrs, decode=need_instrs,
+                records=True):
+            if rec is not None and not need_instrs:
+                m = head if isinstance(head, int) else len(head)
+                costs = np.asarray(cost.cost_chunk(rec),
+                                   dtype=np.float64).tolist()
+            else:
+                m = len(head)
+                costs = [cost(i) for i in head]
+            sub = ac.process_chunk(m, offs, pg, fl, costs, sub)
+        rp.flush(sub)
+    r.total = rp.t
     return r

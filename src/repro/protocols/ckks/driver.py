@@ -67,6 +67,50 @@ class CkksCostModel:
             t += 4 * self.ntt_s(n_ring)
         return t
 
+    def cost_chunk(self, ops: np.ndarray, imm: np.ndarray,
+                   n_ring: int) -> np.ndarray:
+        """Vectorized :meth:`cost` over one record chunk.
+
+        ``ops`` is int64 [m]; ``imm`` the zero-padded int64 immediate
+        matrix (the NTT-count formulas only read the integer level/
+        component immediates).  Per-instruction results are IDENTICAL to
+        the scalar path: every count stays exact int64 and the float
+        operations replay ``cost``'s order (overhead, then NTTs, then the
+        pointwise epilogue)."""
+        ops = np.asarray(ops, dtype=np.int64)
+        imm = np.asarray(imm, dtype=np.int64)
+        t = np.full(ops.shape[0], self.instr_overhead_s, dtype=np.float64)
+        ntt = self.ntt_s(n_ring)
+        lvl = imm[:, 0]
+
+        mk = ops == int(Op.CT_ADD)
+        if mk.any():
+            nc = np.maximum(imm[mk, 1], imm[mk, 2])
+            t[mk] += (nc * (lvl[mk] + 1) * n_ring).astype(np.float64) \
+                * self.pointwise
+        is_mul = (ops == int(Op.CT_MUL)) | (ops == int(Op.CT_MUL_NR))
+        mk = is_mul | (ops == int(Op.CT_RELIN)) | (ops == int(Op.CT_MUL_PLAIN))
+        if mk.any():
+            nprime = lvl[mk] + 1
+            ntts = np.where(is_mul[mk], 7 * nprime, 0)
+            relin = is_mul[mk] & (ops[mk] == int(Op.CT_MUL))
+            relin |= ops[mk] == int(Op.CT_RELIN)
+            ntts = ntts + np.where(
+                relin, nprime * (nprime + 1) + 2 * (nprime + 1) + 2 * nprime,
+                0)
+            ntts = ntts + np.where(ops[mk] == int(Op.CT_MUL_PLAIN),
+                                   2 * 2 * nprime + nprime, 0)
+            t[mk] += ntts.astype(np.float64) * ntt
+            t[mk] += (nprime * n_ring * 6).astype(np.float64) * self.pointwise
+        mk = ops == int(Op.CT_ADD_PLAIN)
+        if mk.any():
+            t[mk] += ((lvl[mk] + 1) * n_ring).astype(np.float64) \
+                * self.pointwise
+        mk = (ops == int(Op.INPUT)) | (ops == int(Op.OUTPUT))
+        if mk.any():
+            t[mk] += 4 * ntt
+        return t
+
 
 class CkksDriver(ProtocolDriver):
     lane = 1

@@ -29,7 +29,7 @@ import numpy as np
 from .api import SLOT_BYTES, FabricSpec, JobSpec, Session
 from .core.transport import LinkStats, aggregate_links
 from .core import DeviceModel
-from .core.bytecode import Op
+from .core.bytecode import _IMM_OFF, _IN_OFF, _OUT_OFF, Op, unpack_heads
 from .protocols.ckks import CkksCostModel, CkksParams
 from .protocols.garbled.cost import GCCostModel
 from .workloads import get
@@ -54,25 +54,61 @@ CKKS_PLAN = dict(lookahead=100, prefetch_pages=16)
 PLANNER_CAP_MB = 8.0
 
 
-def cost_fn(protocol: str):
+class ScenarioCost:
     """Driver cost model + input/output FILE streaming (paid identically in
-    every scenario — §8.1.3 phase 1/3)."""
-    slot_bytes = GC_SLOT_BYTES if protocol == "gc" else CKKS_SLOT_BYTES
-    if protocol == "gc":
-        base = GCCostModel().cost
-    else:
-        model = CkksCostModel(pointwise=1.2e-9)
-        n = BENCH_CKKS.n_ring
-        base = lambda instr: model.cost(instr, n)  # noqa: E731
+    every scenario — §8.1.3 phase 1/3).
 
-    def cost(instr):
-        c = base(instr)
+    Callable per instruction (the scalar simulator cores' interface) and
+    chunkable via :meth:`cost_chunk` over raw record chunks (what the
+    ``core="array"`` simulators consume) — per-instruction values are
+    IDENTICAL between the two paths (property-tested), which is what makes
+    the array and scalar simulator cores exactly equal end-to-end."""
+
+    def __init__(self, protocol: str, n_ring: int | None = None):
+        self.protocol = protocol
+        self.slot_bytes = GC_SLOT_BYTES if protocol == "gc" \
+            else CKKS_SLOT_BYTES
+        if protocol == "gc":
+            self.model = GCCostModel()
+            self._base = self.model.cost
+        else:
+            self.model = CkksCostModel(pointwise=1.2e-9)
+            self.n_ring = n_ring if n_ring is not None else BENCH_CKKS.n_ring
+            self._base = lambda instr: self.model.cost(instr, self.n_ring)
+
+    def __call__(self, instr) -> float:
+        c = self._base(instr)
         if instr.op in (Op.INPUT, Op.OUTPUT):
             spans = instr.outs if instr.op == Op.INPUT else instr.ins
-            nbytes = sum(s[1] for s in spans) * slot_bytes
+            nbytes = sum(s[1] for s in spans) * self.slot_bytes
             c += nbytes / FILE_BW
         return c
-    return cost
+
+    def cost_chunk(self, rec: np.ndarray) -> np.ndarray:
+        """Per-instruction seconds for one [m, RECORD_WORDS] record chunk:
+        the protocol model's vectorized formulas plus the INPUT/OUTPUT
+        file-streaming bytes (span slot counts straight off the zero-padded
+        record columns)."""
+        ops, _n_outs, _n_ins, n_imm = unpack_heads(rec[:, 0])
+        imm = rec[:, _IMM_OFF:]
+        if self.protocol == "gc":
+            c = self.model.cost_chunk(ops, imm, n_imm)
+        else:
+            c = self.model.cost_chunk(ops, imm, self.n_ring)
+        is_in = ops == int(Op.INPUT)
+        io = is_in | (ops == int(Op.OUTPUT))
+        if io.any():
+            sel = rec[io]
+            outs_n = sel[:, _OUT_OFF + 1] + sel[:, _OUT_OFF + 3]
+            ins_n = sel[:, _IN_OFF + 1:_IN_OFF + 8:2].sum(axis=1)
+            nbytes = np.where(is_in[io], outs_n, ins_n) * self.slot_bytes
+            c[io] += nbytes.astype(np.float64) / FILE_BW
+        return c
+
+
+def cost_fn(protocol: str) -> ScenarioCost:
+    """The calibrated §8.2 cost model for one protocol (see ScenarioCost)."""
+    return ScenarioCost(protocol)
 
 
 @dataclasses.dataclass
@@ -90,6 +126,14 @@ class ScenarioResult:
     instructions: int
     program_bytes: int = 0
     plan_mode: str = "memory"
+    sim_core: str = "array"
+    #: bytes the simulated device actually transferred (fig8's I/O columns):
+    #: OS faults read whole readahead clusters, so os_read_bytes can exceed
+    #: pages * page_bytes; write-backs and MAGE swaps move whole pages.
+    os_read_bytes: int = 0
+    os_write_bytes: int = 0
+    mage_read_bytes: int = 0
+    mage_write_bytes: int = 0
 
     @property
     def speedup_vs_os(self) -> float:
@@ -102,7 +146,8 @@ class ScenarioResult:
 
 def scenario_spec(name: str, n: int, budget_frac: float = 0.25,
                   num_workers: int = 1, plan_overrides: dict | None = None,
-                  plan_mode: str = "memory") -> JobSpec:
+                  plan_mode: str = "memory",
+                  sim_core: str = "array") -> JobSpec:
     """The JobSpec the §8.2 benchmarks use for one (workload, size) case."""
     w = get(name)
     knobs = dict(GC_PLAN if w.protocol == "gc" else CKKS_PLAN)
@@ -122,17 +167,20 @@ def scenario_spec(name: str, n: int, budget_frac: float = 0.25,
                    prefetch_pages=knobs["prefetch_pages"],
                    policy=knobs.get("policy", "min"),
                    swap_bypass=knobs.get("swap_bypass", False),
-                   plan_mode=plan_mode, track_plan_memory=True, **extra)
+                   plan_mode=plan_mode, sim_core=sim_core,
+                   track_plan_memory=True, **extra)
 
 
 def run_workload_workers(name: str, n: int, num_workers: int = 1,
                          budget_frac: float = 0.25,
                          plan_overrides: dict | None = None,
-                         plan_mode: str = "memory") -> list[ScenarioResult]:
+                         plan_mode: str = "memory",
+                         sim_core: str = "array") -> list[ScenarioResult]:
     """All three scenarios for every worker of one case (one Session)."""
     spec = scenario_spec(name, n, budget_frac=budget_frac,
                          num_workers=num_workers,
-                         plan_overrides=plan_overrides, plan_mode=plan_mode)
+                         plan_overrides=plan_overrides, plan_mode=plan_mode,
+                         sim_core=sim_core)
     with Session(spec) as s:
         scenarios = s.simulate(cost_fn(s.protocol), model=STORAGE,
                                os_page_bytes=OS_PAGE_BYTES)
@@ -149,14 +197,19 @@ def run_workload_workers(name: str, n: int, num_workers: int = 1,
             budget_pages=sc.config.num_frames,
             instructions=sc.instructions,
             program_bytes=sc.program_bytes,
-            plan_mode=plan_mode))
+            plan_mode=plan_mode, sim_core=sim_core,
+            os_read_bytes=sc.os.read_bytes,
+            os_write_bytes=sc.os.write_bytes,
+            mage_read_bytes=sc.mage.read_bytes,
+            mage_write_bytes=sc.mage.write_bytes))
     return out
 
 
 def run_workload(name: str, n: int, budget_frac: float = 0.25,
                  num_workers: int = 1, worker: int = 0,
                  plan_overrides: dict | None = None,
-                 plan_mode: str = "memory") -> ScenarioResult:
+                 plan_mode: str = "memory",
+                 sim_core: str = "array") -> ScenarioResult:
     """One worker's scenarios.  Note: plans and simulates ALL workers of
     the trace (one Session); with num_workers > 1 and a single worker of
     interest, call sites wanting to skip the others should drive Session
@@ -164,7 +217,8 @@ def run_workload(name: str, n: int, budget_frac: float = 0.25,
     return run_workload_workers(name, n, num_workers=num_workers,
                                 budget_frac=budget_frac,
                                 plan_overrides=plan_overrides,
-                                plan_mode=plan_mode)[worker]
+                                plan_mode=plan_mode,
+                                sim_core=sim_core)[worker]
 
 
 def fmt_row(name: str, r: ScenarioResult) -> str:
@@ -173,6 +227,16 @@ def fmt_row(name: str, r: ScenarioResult) -> str:
             f"os={r.os_s:8.3f}s mage={r.mage_s:8.3f}s | "
             f"speedup={r.speedup_vs_os:5.2f}x "
             f"overhead={100*r.pct_of_unbounded:6.1f}%")
+
+
+def fmt_io_row(name: str, r: ScenarioResult) -> str:
+    """The I/O columns: bytes the simulated device actually moved."""
+    mib = 2**20
+    return (f"{name:12s} io: os r/w={r.os_read_bytes / mib:8.1f}/"
+            f"{r.os_write_bytes / mib:8.1f} MiB  "
+            f"mage r/w={r.mage_read_bytes / mib:8.1f}/"
+            f"{r.mage_write_bytes / mib:8.1f} MiB  "
+            f"(mage moves {(r.mage_read_bytes + r.mage_write_bytes) / max(r.os_read_bytes + r.os_write_bytes, 1):.2f}x the OS bytes)")
 
 
 # --- measured traffic (the transport fabric's accounting) -------------------
@@ -236,12 +300,13 @@ TINY_STREAMING_CASE = ("merge", 4096)
 
 
 def run_bench(cases=None, budget_frac: float = 0.4, check: bool = True,
-              streaming_case=None) -> list[dict]:
+              streaming_case=None, sim_core: str = "array") -> list[dict]:
     """Drive the §8.2 scenarios; returns JSON-ready row dicts."""
     cases = cases if cases is not None else BENCH_CASES
     rows = []
     for name, n in cases:
-        r = run_workload(name, n, budget_frac=budget_frac)
+        r = run_workload(name, n, budget_frac=budget_frac,
+                         sim_core=sim_core)
         print("bench:", fmt_row(name, r), flush=True)
         rows.append({"workload": name, "n": n,
                      "speedup_vs_os": r.speedup_vs_os,
@@ -250,7 +315,7 @@ def run_bench(cases=None, budget_frac: float = 0.4, check: bool = True,
     if streaming_case is not None:
         name, n = streaming_case
         r = run_workload(name, n, budget_frac=budget_frac,
-                         plan_mode="streaming")
+                         plan_mode="streaming", sim_core=sim_core)
         print("bench (streaming):", fmt_row(name, r), flush=True)
         rows.append({"workload": name, "n": n,
                      "speedup_vs_os": r.speedup_vs_os,

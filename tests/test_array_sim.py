@@ -1,0 +1,279 @@
+"""Array simulator cores == scalar reference cores, exactly.
+
+The ``core="array"`` timing simulators (one vectorized cost_chunk per
+record chunk, scalar handlers only at events) must be invisible in the
+results: for GC and CKKS cost models, all three §8.2 scenarios, in-memory
+Programs and on-disk ProgramFiles, and any chunk size, every SimResult
+field matches the scalar cores bit for bit — including NET_SEND
+accounting and the OS write-back-throttle path.  The chunked cost models
+themselves are property-tested against their scalar formulas over random
+immediate widths.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.api import JobSpec, Session
+from repro.core import PlanConfig, plan
+from repro.core.bytecode import (Instr, MAX_IMM, Op, Program, encode_chunk,
+                                 unpack_heads, write_program)
+from repro.core.simulator import (DeviceModel, simulate_memory_program,
+                                  simulate_os_paging, simulate_unbounded)
+from repro.protocols.ckks.driver import CkksCostModel
+from repro.protocols.garbled.cost import (GCCostModel, gate_cost,
+                                          gate_cost_chunk)
+from repro.scenarios import (OS_PAGE_BYTES, STORAGE, ScenarioCost, cost_fn,
+                             scenario_spec)
+
+from test_core_planner import _random_program
+
+# ---------------------------------------------------------------------------
+# chunked cost models == scalar formulas (property over random imm widths)
+# ---------------------------------------------------------------------------
+
+_GC_OPS = [Op.ADD, Op.SUB, Op.MUL, Op.CMP_GE, Op.CMP_EQ, Op.SELECT, Op.XOR,
+           Op.AND, Op.OR, Op.NOT, Op.MINMAX, Op.SORT_LOCAL, Op.PAIR_JOIN,
+           Op.MAC8, Op.XNOR_POP_SIGN, Op.REDUCE_ADD, Op.REVERSE, Op.INPUT,
+           Op.OUTPUT, Op.COPY, Op.NET_SEND, Op.NET_RECV, Op.SWAP_IN,
+           Op.ISSUE_SWAP_OUT]
+
+
+def _random_gc_batch(seed: int, m: int = 64):
+    rng = np.random.default_rng(seed)
+    cases = []
+    for _ in range(m):
+        op = _GC_OPS[int(rng.integers(0, len(_GC_OPS)))]
+        n = int(rng.integers(1, 400))
+        w = int(rng.integers(1, 65))
+        kw = int(rng.integers(1, 65))
+        if op == Op.SORT_LOCAL:
+            if rng.random() < 0.7:
+                n = 1 << int(rng.integers(1, 10))
+            imm = (n, w, kw, 0, int(rng.integers(0, 2))) \
+                if rng.random() < 0.5 else (n, w, kw)
+        elif op == Op.PAIR_JOIN:
+            imm = (n, int(rng.integers(1, 200)), w, kw)
+        elif op == Op.MAC8:
+            imm = (n, int(rng.integers(1, 600)), int(rng.integers(16, 65)))
+        elif op == Op.XNOR_POP_SIGN:
+            imm = (n, int(rng.integers(1, 3000)))
+        else:
+            imm = (n, w, kw)
+        cases.append((op, imm))
+    ops = np.array([int(o) for o, _ in cases], dtype=np.int64)
+    imm = np.zeros((m, MAX_IMM), dtype=np.int64)
+    n_imm = np.zeros(m, dtype=np.int64)
+    for i, (_, im) in enumerate(cases):
+        imm[i, :len(im)] = im
+        n_imm[i] = len(im)
+    return cases, ops, imm, n_imm
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gc_cost_chunk_matches_scalar(seed):
+    cases, ops, imm, n_imm = _random_gc_batch(seed)
+    va, vc = gate_cost_chunk(ops, imm, n_imm)
+    model_g = GCCostModel()
+    model_e = GCCostModel(role="evaluator")
+    cg = model_g.cost_chunk(ops, imm, n_imm)
+    ce = model_e.cost_chunk(ops, imm, n_imm)
+    bv = model_g.bytes_chunk(ops, imm, n_imm)
+    for i, (op, im) in enumerate(cases):
+        sa, sc = gate_cost(op, im)
+        assert (sa, sc) == (va[i], vc[i]), (op.name, im)
+        ins = Instr(op, imm=im)
+        assert model_g.cost(ins) == cg[i]
+        assert model_e.cost(ins) == ce[i]
+        assert model_g.bytes_of(ins) == bv[i]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(8, 13))
+def test_ckks_cost_chunk_matches_scalar(seed, ring_log2):
+    rng = np.random.default_rng(seed)
+    model = CkksCostModel(pointwise=1.2e-9)
+    n_ring = 1 << ring_log2
+    ckks_ops = [Op.CT_ADD, Op.CT_MUL, Op.CT_MUL_NR, Op.CT_RELIN,
+                Op.CT_ADD_PLAIN, Op.CT_MUL_PLAIN, Op.INPUT, Op.OUTPUT,
+                Op.COPY, Op.NET_SEND, Op.SWAP_OUT]
+    cases = []
+    for _ in range(48):
+        op = ckks_ops[int(rng.integers(0, len(ckks_ops)))]
+        imm = (int(rng.integers(0, 8)), int(rng.integers(2, 4)),
+               int(rng.integers(2, 4)))
+        cases.append((op, imm))
+    ops = np.array([int(o) for o, _ in cases], dtype=np.int64)
+    imm = np.zeros((len(cases), MAX_IMM), dtype=np.int64)
+    for i, (_, im) in enumerate(cases):
+        imm[i, :len(im)] = im
+    cv = model.cost_chunk(ops, imm, n_ring)
+    for i, (op, im) in enumerate(cases):
+        assert model.cost(Instr(op, imm=im), n_ring) == cv[i], (op.name, im)
+
+
+@pytest.mark.parametrize("protocol,workload,n", [("gc", "merge", 512),
+                                                 ("ckks", "rsum", 64)])
+def test_scenario_cost_chunk_matches_call(protocol, workload, n):
+    """The rec-level ScenarioCost.cost_chunk (protocol formulas + the
+    INPUT/OUTPUT file-streaming bytes) equals __call__ per instruction on
+    a real trace."""
+    spec = scenario_spec(workload, n, budget_frac=0.5)
+    with Session(spec) as s:
+        prog = s.trace()[0]
+    cost = cost_fn(protocol)
+    instrs = [i for i in prog.instrs if i.op != Op.FREE]
+    rec = encode_chunk(instrs)
+    chunk = cost.cost_chunk(rec)
+    ops = unpack_heads(rec[:, 0])[0]
+    n_io = int(((ops == int(Op.INPUT)) | (ops == int(Op.OUTPUT))).sum())
+    assert n_io > 0, "trace must exercise the file-streaming path"
+    for i, ins in enumerate(instrs):
+        assert cost(ins) == chunk[i], (i, ins.op.name)
+
+
+# ---------------------------------------------------------------------------
+# simulator cores: exact equality, GC/CKKS x scenarios x Program/ProgramFile
+# ---------------------------------------------------------------------------
+
+
+def _simulate(name, n, sim_core, plan_mode="memory", num_workers=1):
+    spec = scenario_spec(name, n, budget_frac=0.4, num_workers=num_workers,
+                         plan_mode=plan_mode, sim_core=sim_core)
+    with Session(spec) as s:
+        return s.simulate(cost_fn(s.protocol), model=STORAGE,
+                          os_page_bytes=OS_PAGE_BYTES)
+
+
+@pytest.mark.parametrize("plan_mode", ("memory", "streaming"))
+@pytest.mark.parametrize("name,n,workers", [("merge", 1024, 2),
+                                            ("rsum", 64, 1)])
+def test_session_sim_cores_identical(name, n, workers, plan_mode):
+    """GC (2 workers: NET_SEND accounting) + CKKS, in-memory and
+    streaming plans (the latter replays a ProgramFile memory program):
+    every SimResult field equal across cores."""
+    sc_s = _simulate(name, n, "scalar", plan_mode, workers)
+    sc_a = _simulate(name, n, "array", plan_mode, workers)
+    assert len(sc_s) == len(sc_a) == workers
+    for ws, wa in zip(sc_s, sc_a):
+        assert wa.unbounded == ws.unbounded
+        assert wa.os == ws.os
+        assert wa.mage == ws.mage
+    if workers > 1:
+        assert any(w.mage.net_msgs > 0 for w in sc_a), \
+            "multi-worker replay must account NET_SEND traffic"
+        assert all(wa.mage.net_bytes == ws.mage.net_bytes
+                   for ws, wa in zip(sc_s, sc_a))
+
+
+def test_sim_cores_identical_on_files(tmp_path):
+    """All three simulators consume ProgramFiles; results equal the
+    in-memory run under both cores and any chunk size."""
+    prog = _random_program(17)
+    cost = lambda ins: 2.3e-6 * (1 + len(ins.ins) + len(ins.outs))  # noqa: E731
+    model = DeviceModel(bandwidth=2e8, latency=1e-4)
+    mem, _ = plan(prog, PlanConfig(num_frames=7, lookahead=15,
+                                   prefetch_pages=2))
+    vpf = write_program(prog, tmp_path / "v.bc", strip_free=True)
+    mpf = write_program(mem, tmp_path / "m.bc")
+    ref = (simulate_unbounded(prog, cost, core="scalar"),
+           simulate_os_paging(prog, cost, 6, 1024, model,
+                              os_page_bytes=256, core="scalar"),
+           simulate_memory_program(mem, cost, 1024, model, core="scalar"))
+    for src_v, src_m in ((prog, mem), (vpf, mpf)):
+        for core in ("scalar", "array"):
+            for chunk in (13, 8192):
+                got = (simulate_unbounded(src_v, cost, core=core,
+                                          chunk_instrs=chunk),
+                       simulate_os_paging(src_v, cost, 6, 1024, model,
+                                          os_page_bytes=256, core=core,
+                                          chunk_instrs=chunk),
+                       simulate_memory_program(src_m, cost, 1024, model,
+                                               core=core,
+                                               chunk_instrs=chunk))
+                assert got == ref, (type(src_v).__name__, core, chunk)
+    assert ref[1].reads > 0 and ref[1].writes > 0
+
+
+def test_writeback_throttle_path_identical():
+    """A throttled device (deep write-back queue blocks the faulter) takes
+    the direct-reclaim path in both cores and still agrees."""
+    prog = _swap_heavy()
+    # compute-heavy: an un-throttled write-back would hide entirely under
+    # the compute until the next fault, so the direct-reclaim block is the
+    # only thing separating the two devices below
+    cost = lambda ins: 1e-3  # noqa: E731
+    throttled = DeviceModel(bandwidth=5e6, latency=1e-5,
+                            os_writeback_throttle_s=1e-4)
+    free = DeviceModel(bandwidth=5e6, latency=1e-5,
+                       os_writeback_throttle_s=math.inf)
+    rs = simulate_os_paging(prog, cost, 8, 1024, throttled, core="scalar")
+    ra = simulate_os_paging(prog, cost, 8, 1024, throttled, core="array")
+    assert ra == rs
+    assert rs.writes > 0
+    r_free = simulate_os_paging(prog, cost, 8, 1024, free, core="array")
+    assert rs.stall > r_free.stall, "throttle path was not exercised"
+
+
+def _swap_heavy(n=600, live_pages=32, page_shift=6):
+    psize = 1 << page_shift
+    rng = np.random.default_rng(5)
+    instrs = [Instr(Op.INPUT, outs=((p * psize, psize),), imm=(p,))
+              for p in range(live_pages)]
+    for i in range(n):
+        wp = i % live_pages
+        a = int(rng.integers(0, live_pages))
+        instrs.append(Instr(Op.ADD, outs=((wp * psize, psize),),
+                            ins=((a * psize, psize),), imm=(1, 32)))
+    return Program(instrs=instrs, page_shift=page_shift, protocol="gc",
+                   vspace_slots=live_pages << page_shift)
+
+
+def test_os_paging_large_frame_eviction_path_identical():
+    """num_frames > the candidate-snapshot size exercises the argpartition
+    LRU victim queue; victims must still match the scalar OrderedDict pop
+    order exactly."""
+    prog = _swap_heavy(n=6000, live_pages=1600)
+    cost = lambda ins: 1e-7  # noqa: E731
+    rs = simulate_os_paging(prog, cost, 1300, 1024, core="scalar")
+    ra = simulate_os_paging(prog, cost, 1300, 1024, core="array",
+                            chunk_instrs=512)
+    assert ra == rs
+    assert rs.reads > 0 and rs.writes > 0
+
+
+def test_os_paging_accounts_actual_device_bytes():
+    """read_bytes reports whole readahead clusters (which round UP past
+    the page size), write_bytes whole-page write-backs."""
+    prog = _swap_heavy()
+    cost = lambda ins: 1e-7  # noqa: E731
+    model = DeviceModel(readahead=3)
+    # page = 1024 B, os_page = 256 B -> 4 os-pages, readahead 3 ->
+    # 2 clusters x 768 B = 1536 B actually read per fault
+    r = simulate_os_paging(prog, cost, 8, 1024, model, os_page_bytes=256)
+    assert r.reads > 0
+    assert r.read_bytes == r.reads * 2 * 768
+    assert r.read_bytes > r.reads * 1024
+    assert r.write_bytes == r.writes * 1024
+
+
+def test_bad_sim_core_rejected():
+    prog = _random_program(0)
+    with pytest.raises(ValueError, match="core"):
+        simulate_unbounded(prog, lambda i: 0.0, core="simd")
+    with pytest.raises(ValueError, match="sim_core"):
+        JobSpec(workload="merge", n=64, memory_budget=8, sim_core="simd")
+
+
+def test_scenario_cost_is_chunkable():
+    """The scenarios harness's cost object advertises the chunk API the
+    array cores look for."""
+    c = cost_fn("gc")
+    assert isinstance(c, ScenarioCost)
+    assert callable(c) and hasattr(c, "cost_chunk")
+    rec = encode_chunk([Instr(Op.ADD, outs=((0, 8),), ins=((8, 8), (16, 8)),
+                              imm=(1, 32))])
+    assert c.cost_chunk(rec).shape == (1,)

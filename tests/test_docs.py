@@ -1,0 +1,51 @@
+"""Documentation integrity: no dangling relative links.
+
+Scans README.md and every markdown file under docs/ for markdown links
+and validates that relative targets exist (anchors and external URLs are
+skipped).  Run standalone in CI as the docs link-check step:
+
+    python -m pytest -q tests/test_docs.py
+"""
+
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _doc_files():
+    out = [os.path.join(REPO, "README.md")]
+    docdir = os.path.join(REPO, "docs")
+    if os.path.isdir(docdir):
+        out += sorted(os.path.join(docdir, f) for f in os.listdir(docdir)
+                      if f.endswith(".md"))
+    return [p for p in out if os.path.exists(p)]
+
+
+def test_required_docs_exist():
+    for name in ("README.md", "docs/SIMULATOR.md", "docs/PLANNER.md",
+                 "docs/API.md", "docs/DISTRIBUTED.md"):
+        assert os.path.exists(os.path.join(REPO, name)), f"{name} missing"
+
+
+@pytest.mark.parametrize("path", _doc_files(),
+                         ids=[os.path.relpath(p, REPO) for p in _doc_files()])
+def test_no_dangling_relative_links(path):
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    dangling = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+            dangling.append(target)
+    assert not dangling, \
+        f"{os.path.relpath(path, REPO)}: dangling links {dangling}"
