@@ -1,0 +1,118 @@
+"""Serving-daemon benchmark: steady-state jobs/sec, hot cache vs cold.
+
+Starts an in-process :class:`repro.serve_daemon.ServeDaemon` on a unix
+socket, then drives the same job shapes through ``repro.serve_client``
+two ways:
+
+  * **cold** — every submit bypasses the artifact cache
+    (``use_cache=False``): full trace + plan each time, the §8.2
+    pipeline's worst case;
+  * **hot**  — one warming pass populates the cache, then every submit
+    is served from validated on-disk artifacts: zero tracing and zero
+    planning, verified against the daemon's own cache counters.
+
+The acceptance claims checked here (and by the CI ``serve`` job):
+hot jobs/sec strictly above cold, plan digests bitwise identical
+between the two, and the hot phase performing no tracing or planning.
+
+    PYTHONPATH=src python benchmarks/serve_bench.py [--tiny] [--json out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.api import SCHEMA_VERSION, JobSpec
+from repro.serve_daemon.client import serve_client
+from repro.serve_daemon.server import ServeDaemon
+
+CASES = [("merge", 4096), ("sort", 2048), ("rsum", 128)]
+TINY_CASES = [("merge", 512), ("rsum", 64)]
+ROUNDS = 5
+TINY_ROUNDS = 3
+
+
+def bench_specs(cases) -> list[JobSpec]:
+    return [JobSpec(workload=name, n=n, memory_budget=0.4,
+                    plan_mode="streaming") for name, n in cases]
+
+
+def drive(client, specs, rounds: int, use_cache: bool) -> dict:
+    """Submit every spec ``rounds`` times; returns timing + digests."""
+    digests: dict[str, list[str]] = {}
+    t0 = time.perf_counter()
+    jobs = 0
+    for _ in range(rounds):
+        for spec in specs:
+            r = client.submit(spec, use_cache=use_cache)
+            digests[f"{spec.workload}/{spec.n}"] = r["digests"]["plan"]
+            jobs += 1
+    dt = time.perf_counter() - t0
+    return {"jobs": jobs, "seconds": dt, "jobs_per_s": jobs / dt,
+            "digests": digests}
+
+
+def run(tiny: bool = False) -> dict:
+    cases = TINY_CASES if tiny else CASES
+    rounds = TINY_ROUNDS if tiny else ROUNDS
+    specs = bench_specs(cases)
+    with tempfile.TemporaryDirectory(prefix="serve_bench_") as td:
+        daemon = ServeDaemon(os.path.join(td, "cache"),
+                             socket_path=os.path.join(td, "mage.sock"))
+        daemon.start()
+        try:
+            with serve_client(daemon.address) as c:
+                cold = drive(c, specs, rounds, use_cache=False)
+                for spec in specs:          # warm the cache once
+                    c.submit(spec)
+                before = c.status()["cache"]
+                hot = drive(c, specs, rounds, use_cache=True)
+                after = c.status()["cache"]
+                c.shutdown()
+        finally:
+            daemon.shutdown()
+
+    # zero tracing + zero planning while hot: only hit counters moved
+    assert after["trace_misses"] == before["trace_misses"], \
+        f"hot phase traced: {before} -> {after}"
+    assert after["plan_misses"] == before["plan_misses"], \
+        f"hot phase planned: {before} -> {after}"
+    assert after["plan_hits"] == before["plan_hits"] + hot["jobs"]
+    assert hot["digests"] == cold["digests"], \
+        "hot plans must be bitwise identical to cold plans"
+    assert hot["jobs_per_s"] > cold["jobs_per_s"], \
+        (f"hot ({hot['jobs_per_s']:.1f}/s) must beat cold "
+         f"({cold['jobs_per_s']:.1f}/s)")
+    return {"schema_version": SCHEMA_VERSION,
+            "cases": [{"workload": w, "n": n} for w, n in cases],
+            "rounds": rounds,
+            "cold": cold, "hot": hot,
+            "speedup": hot["jobs_per_s"] / cold["jobs_per_s"],
+            "cache": after}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="small sizes + fewer rounds (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the report as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+    report = run(tiny=args.tiny)
+    print(f"serve_bench: cold {report['cold']['jobs_per_s']:8.1f} jobs/s")
+    print(f"serve_bench: hot  {report['hot']['jobs_per_s']:8.1f} jobs/s "
+          f"({report['speedup']:.1f}x, digests identical, "
+          f"0 traces / 0 plans while hot)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,12 +8,25 @@ out as a multi-pod training/serving framework.  See DESIGN.md for the map:
   repro.workloads   the paper's ten workloads + §8.8 applications
   repro.models/...  the LM framework (10 assigned architectures)
   repro.launch      mesh, multi-pod dryrun, train, serve entry points
+
+The stable public surface (docs/API.md) is re-exported here:
+
+  JobSpec, Session, plan, run_job    the staged facade (repro.api)
+  serve_client                       talk to a `python -m repro serve` daemon
+  list_workloads/list_drivers/
+  list_storages/list_transports      registry discovery
+  SpecMismatchError, SCHEMA_VERSION, register_driver, register_storage
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
 
-_API_NAMES = ("JobSpec", "Session", "SpecMismatchError", "run_job",
-              "register_driver", "register_storage")
+_API_NAMES = ("JobSpec", "Session", "SpecMismatchError", "run_job", "plan",
+              "estimate_job_resources", "SCHEMA_VERSION",
+              "register_driver", "register_storage",
+              "list_workloads", "list_drivers", "list_storages",
+              "list_transports")
+
+_SERVE_NAMES = ("serve_client", "ServeClient")
 
 
 def __getattr__(name):
@@ -21,4 +34,11 @@ def __getattr__(name):
     if name in _API_NAMES:
         from . import api
         return getattr(api, name)
+    if name in _SERVE_NAMES:
+        from .serve_daemon import client
+        return getattr(client, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_NAMES) | set(_SERVE_NAMES))

@@ -6,6 +6,9 @@ execute; §8.2 — the scenario benchmarks).
     python -m repro run   job/ --worker 1 --peers h0:9000,h1:9001 [--json o.json]
     python -m repro fabric job/ [--check] [--real] [--json merged.json]
     python -m repro bench [--tiny] [--streaming] [--json out.json]
+    python -m repro serve  --cache ~/.cache/mage --socket /tmp/mage.sock
+    python -m repro submit --connect /tmp/mage.sock --workload merge \
+                           -n 4096 --budget 64 --execute
 
 ``plan`` writes memory-program files through the out-of-core streaming
 pipeline plus a ``job.json`` manifest; the spec hash is stamped into every
@@ -16,6 +19,12 @@ rejects stale or tampered plans (SpecMismatchError, exit code 2).
 party*num_workers + worker) against remote peers over the TCP transport
 fabric; ``fabric`` launches the whole fleet as N localhost processes,
 merges their outputs, and can check them against the oracle.
+
+``serve`` runs the multi-tenant plan-cache daemon and ``submit`` sends it
+jobs (docs/SERVE.md).  Every ``--json`` output is wrapped as
+``{"schema_version": N, ...}``; stage cores are selected uniformly with
+``--plan-core`` / ``--sim-core`` on every subcommand (``--core`` is a
+deprecated alias for ``--plan-core``).
 """
 
 from __future__ import annotations
@@ -29,8 +38,8 @@ import tempfile
 
 import numpy as np
 
-from .api import (FabricSpec, JobSpec, Session, SpecMismatchError,
-                  check_outputs, driver_parties, run_job)
+from .api import (SCHEMA_VERSION, FabricSpec, JobSpec, Session,
+                  SpecMismatchError, check_outputs, driver_parties, run_job)
 from .core.transport import TransportError, pick_free_ports
 from .workloads import get as get_workload
 
@@ -42,9 +51,42 @@ def _parse_budget(text: str) -> int | float:
     return int(text)
 
 
+class _DeprecatedCore(argparse.Action):
+    """``--core`` → ``--plan-core`` rename shim (kept one release)."""
+
+    def __call__(self, parser, namespace, values, option_string=None):
+        print(f"warning: {option_string} is deprecated, use --plan-core",
+              file=sys.stderr)
+        setattr(namespace, self.dest, values)
+
+
+def _add_core_args(ap: argparse.ArgumentParser, default="array") -> None:
+    """The uniform stage-core knobs every subcommand takes.
+
+    ``default=None`` (run/serve) means "keep what the manifest/spec says"
+    instead of forcing the array cores."""
+    ap.add_argument("--plan-core", dest="plan_core", default=default,
+                    choices=("array", "scalar"),
+                    help="planner core: vectorized record arrays (default) "
+                         "or the scalar reference; outputs are identical")
+    ap.add_argument("--core", dest="plan_core", action=_DeprecatedCore,
+                    choices=("array", "scalar"), help=argparse.SUPPRESS)
+    ap.add_argument("--sim-core", dest="sim_core", default=default,
+                    choices=("array", "scalar"),
+                    help="timing-simulator core: vectorized record-chunk "
+                         "replay (default) or the scalar reference; results "
+                         "are identical (docs/SIMULATOR.md)")
+
+
+def _add_cache_arg(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--cache", metavar="DIR", default=None,
+                    help="artifact-cache root: reuse traced bytecode and "
+                         "plans across invocations (docs/SERVE.md)")
+
+
 def _add_spec_args(ap: argparse.ArgumentParser) -> None:
-    ap.add_argument("--workload", required=True,
-                    help="workload name (see repro.workloads.all_names())")
+    ap.add_argument("--workload", default=None,
+                    help="workload name (see repro.list_workloads())")
     ap.add_argument("-n", type=int, default=None,
                     help="problem size (default: workload default)")
     ap.add_argument("--workers", type=int, default=1,
@@ -57,9 +99,7 @@ def _add_spec_args(ap: argparse.ArgumentParser) -> None:
                     help="prefetch buffer pages B (0 = replacement only)")
     ap.add_argument("--policy", default="min",
                     help="eviction policy (min, min_clean, lru, fifo)")
-    ap.add_argument("--core", default="array", choices=("array", "scalar"),
-                    help="planner core: vectorized record arrays (default) "
-                         "or the scalar reference; outputs are identical")
+    _add_core_args(ap)
     ap.add_argument("--mode", default=None,
                     choices=("memory", "streaming", "unbounded"),
                     help="plan mode (default: streaming for plan, "
@@ -72,24 +112,29 @@ def _add_spec_args(ap: argparse.ArgumentParser) -> None:
 
 
 def _spec_from_args(args, default_mode: str) -> JobSpec:
+    if args.workload is None:
+        raise SystemExit("error: --workload is required")
     mode = args.mode or (default_mode if args.budget is not None
                          else "unbounded")
     return JobSpec(workload=args.workload, n=args.n,
                    num_workers=args.workers, memory_budget=args.budget,
                    lookahead=args.lookahead, prefetch_pages=args.prefetch,
-                   policy=args.policy, plan_mode=mode, plan_core=args.core,
+                   policy=args.policy, plan_mode=mode,
+                   plan_core=args.plan_core, sim_core=args.sim_core,
                    parallel_plan=args.parallel,
                    ckks_ring=args.ckks_ring, ckks_levels=args.ckks_levels)
 
 
 def cmd_plan(args) -> int:
     spec = _spec_from_args(args, default_mode="streaming")
-    with Session(spec) as s:
+    with Session(spec, cache=args.cache) as s:
         manifest = s.save_plan(args.out)
         planned = s.plan()
         for i, p in enumerate(planned):
             print(f"worker{i}: {len(p)} instructions -> "
                   f"{getattr(p, 'path', '(in-memory)')}")
+        if s.cache_events:
+            print(f"cache: {s.cache_events}")
     print(f"spec hash {spec.plan_hash()}; manifest: {manifest}")
     return 0
 
@@ -117,6 +162,14 @@ def cmd_run(args) -> int:
     sess = Session.from_plan(args.jobdir, storage=args.storage,
                              driver=args.driver, transport=transport,
                              fabric=fabric)
+    # core knobs never change outputs (and are not plan-hashed), so they
+    # may be overridden on an already-planned job
+    import dataclasses
+    overrides = {k: v for k, v in (("plan_core", args.plan_core),
+                                   ("sim_core", args.sim_core))
+                 if v is not None}
+    if overrides:
+        sess.spec = dataclasses.replace(sess.spec, **overrides)
     with sess:
         outputs = sess.execute(real=args.real or None, check=args.check)
     for tag in sorted(outputs):
@@ -134,15 +187,19 @@ def cmd_run(args) -> int:
 
 def _dump_outputs(path: str, outputs: dict) -> None:
     with open(path, "w") as f:
-        json.dump({str(tag): np.asarray(v).tolist()
-                   for tag, v in outputs.items()}, f)
+        json.dump({"schema_version": SCHEMA_VERSION,
+                   "outputs": {str(tag): np.asarray(v).tolist()
+                               for tag, v in outputs.items()}}, f)
 
 
 def _load_outputs(path: str, protocol: str) -> dict:
     dtype = np.uint64 if protocol == "gc" else np.float64
     with open(path) as f:
-        return {int(tag): np.asarray(v, dtype=dtype)
-                for tag, v in json.load(f).items()}
+        doc = json.load(f)
+    if "schema_version" in doc:          # v1 envelope
+        doc = doc["outputs"]
+    return {int(tag): np.asarray(v, dtype=dtype)
+            for tag, v in doc.items()}
 
 
 def cmd_fabric(args) -> int:
@@ -209,7 +266,8 @@ def cmd_fabric(args) -> int:
 
 def cmd_exec(args) -> int:
     spec = _spec_from_args(args, default_mode="memory")
-    outputs = run_job(spec, real=args.real or None, check=args.check)
+    outputs = run_job(spec, real=args.real or None, check=args.check,
+                      cache=args.cache)
     print(f"{len(outputs)} outputs"
           + (", oracle check OK" if args.check else ""))
     return 0
@@ -234,11 +292,59 @@ def cmd_bench(args) -> int:
         streaming_case = TINY_STREAMING_CASE if args.tiny else STREAMING_CASE
     rows = run_bench(cases=cases, budget_frac=args.budget_frac,
                      check=not args.no_check and not args.tiny,
-                     streaming_case=streaming_case, sim_core=args.sim_core)
+                     streaming_case=streaming_case, sim_core=args.sim_core,
+                     plan_core=args.plan_core, cache_dir=args.cache)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(rows, f, indent=2)
+            json.dump({"schema_version": SCHEMA_VERSION, "rows": rows},
+                      f, indent=2)
         print(f"wrote {args.json}")
+    return 0
+
+
+def cmd_serve(args) -> int:
+    from .serve_daemon.server import ServeDaemon
+    d = ServeDaemon(args.cache, socket_path=args.socket,
+                    host=args.host, port=args.port,
+                    frame_pool=args.frame_pool,
+                    memory_bytes=args.memory_bytes,
+                    cache_bytes=args.cache_bytes,
+                    max_queue=args.max_queue,
+                    plan_core=args.plan_core, sim_core=args.sim_core)
+    addr = d.address if isinstance(d.address, str) \
+        else f"{d.address[0]}:{d.address[1]}"
+    print(f"serving on {addr} (cache: {d.cache.root}, "
+          f"frame pool: {d.admission.frame_pool})", flush=True)
+    try:
+        d.serve_forever()
+    except KeyboardInterrupt:
+        d.shutdown()
+    return 0
+
+
+def cmd_submit(args) -> int:
+    from .serve_daemon.client import ServeError, serve_client
+    with serve_client(args.connect, timeout=args.timeout) as c:
+        if args.status:
+            resp = c.status()
+        elif args.shutdown:
+            resp = c.shutdown()
+        else:
+            spec = _spec_from_args(args, default_mode="streaming")
+            try:
+                resp = c.submit(spec, execute=args.execute,
+                                check=args.check,
+                                queue=not args.no_queue,
+                                timeout=args.timeout,
+                                use_cache=not args.no_cache)
+            except ServeError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 3 if e.rejected else 1
+    text = json.dumps(resp, indent=2)
+    print(text)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(text)
     return 0
 
 
@@ -249,6 +355,7 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("plan", help="plan memory programs to a directory")
     _add_spec_args(p)
+    _add_cache_arg(p)
     p.add_argument("--out", required=True, help="output directory")
     p.set_defaults(fn=cmd_plan)
 
@@ -275,6 +382,7 @@ def main(argv=None) -> int:
                    help="shaped: per-link bandwidth (bytes/s)")
     p.add_argument("--json", metavar="PATH",
                    help="write this process's outputs as JSON")
+    _add_core_args(p, default=None)
     p.set_defaults(fn=cmd_run)
 
     p = sub.add_parser("fabric", help="run a planned job as an N-process "
@@ -294,6 +402,7 @@ def main(argv=None) -> int:
 
     p = sub.add_parser("exec", help="trace+plan+execute in one shot")
     _add_spec_args(p)
+    _add_cache_arg(p)
     p.add_argument("--check", action="store_true")
     p.add_argument("--real", action="store_true")
     p.set_defaults(fn=cmd_exec)
@@ -306,15 +415,54 @@ def main(argv=None) -> int:
                    help="small sizes + no claim assertions (CI smoke)")
     p.add_argument("--streaming", action="store_true",
                    help="add a past-planner-cap case via the file pipeline")
-    p.add_argument("--sim-core", default="array",
-                   choices=("array", "scalar"),
-                   help="timing-simulator core: vectorized record-chunk "
-                        "replay (default) or the scalar reference; results "
-                        "are identical (docs/SIMULATOR.md)")
+    _add_core_args(p)
+    _add_cache_arg(p)
     p.add_argument("--no-check", action="store_true")
     p.add_argument("--json", metavar="PATH",
                    help="write rows as JSON (CI artifact)")
     p.set_defaults(fn=cmd_bench)
+
+    p = sub.add_parser("serve", help="run the multi-tenant plan-cache "
+                                     "daemon (docs/SERVE.md)")
+    p.add_argument("--cache", required=True, metavar="DIR",
+                   help="artifact-cache root the daemon owns")
+    p.add_argument("--socket", default=None, metavar="PATH",
+                   help="unix socket path to listen on (default: TCP)")
+    p.add_argument("--host", default="127.0.0.1")
+    p.add_argument("--port", type=int, default=None,
+                   help="TCP port (default: OS-assigned, printed on start)")
+    p.add_argument("--frame-pool", type=int, default=1 << 16,
+                   help="shared frame budget across concurrent jobs")
+    p.add_argument("--memory-bytes", type=int, default=None,
+                   help="optional cap on summed per-job memory estimates")
+    p.add_argument("--cache-bytes", type=int, default=None,
+                   help="LRU-evict cache entries beyond this many bytes")
+    p.add_argument("--max-queue", type=int, default=64,
+                   help="max jobs waiting for admission before rejecting")
+    _add_core_args(p, default=None)
+    p.set_defaults(fn=cmd_serve)
+
+    p = sub.add_parser("submit", help="submit a job to a serve daemon")
+    p.add_argument("--connect", required=True, metavar="ADDR",
+                   help="daemon address: unix socket path or host:port")
+    _add_spec_args(p)
+    p.add_argument("--execute", action="store_true",
+                   help="also execute the planned job on the daemon")
+    p.add_argument("--check", action="store_true",
+                   help="with --execute: verify against the oracle")
+    p.add_argument("--no-queue", action="store_true",
+                   help="reject (exit 3) instead of waiting for admission")
+    p.add_argument("--no-cache", action="store_true",
+                   help="bypass the daemon's artifact cache (cold run)")
+    p.add_argument("--timeout", type=float, default=None,
+                   help="admission + socket timeout (s)")
+    p.add_argument("--status", action="store_true",
+                   help="just print the daemon's status JSON")
+    p.add_argument("--shutdown", action="store_true",
+                   help="ask the daemon to shut down")
+    p.add_argument("--json", metavar="PATH",
+                   help="also write the response JSON here")
+    p.set_defaults(fn=cmd_submit)
 
     args = ap.parse_args(argv)
     try:

@@ -61,6 +61,11 @@ from .workloads import Workload, get
 
 PLAN_MODES = ("memory", "streaming", "unbounded")
 
+#: Version stamped into every machine-readable output (CLI ``--json``
+#: files and the serving daemon's protocol responses) so consumers can
+#: evolve with the formats.
+SCHEMA_VERSION = 1
+
 #: bytes per address-space slot, per protocol — a GC slot is one 128-bit
 #: wire label, a CKKS slot one 8-byte word (what the timing simulator and
 #: the OS-paging baseline charge per page).
@@ -76,6 +81,14 @@ SLOT_BYTES = {"gc": 16, "ckks": 8}
 PLAN_HASH_FIELDS = ("workload", "n", "num_workers", "memory_budget",
                     "lookahead", "prefetch_pages", "policy", "swap_bypass",
                     "ckks_ring", "ckks_levels")
+
+#: The subset of PLAN_HASH_FIELDS that determines the *traced* bytecode:
+#: the DSL trace is a pure function of the workload shape, so traced
+#: programs (and their next-use sidecars) are shared across every budget
+#: / lookahead / policy variation of the same shape in the artifact
+#: cache (``JobSpec.trace_hash``).
+TRACE_HASH_FIELDS = ("workload", "n", "num_workers", "ckks_ring",
+                     "ckks_levels")
 
 JOB_FILE = "job.json"
 
@@ -171,6 +184,33 @@ register_storage("memmap", lambda shape, dtype: MemmapStorage(shape, dtype))
 
 
 # ---------------------------------------------------------------------------
+# discovery: the stable way to enumerate what the registries offer
+# ---------------------------------------------------------------------------
+
+
+def list_workloads() -> list[str]:
+    """Registered workload names (`JobSpec.workload` values)."""
+    from .workloads import all_names
+    return all_names()
+
+
+def list_drivers() -> list[str]:
+    """Registered protocol drivers (`JobSpec.driver` values)."""
+    return sorted(DRIVERS)
+
+
+def list_storages() -> list[str]:
+    """Registered storage backends (`JobSpec.storage` values)."""
+    return sorted(STORAGE_BACKENDS)
+
+
+def list_transports() -> list[str]:
+    """Registered transport fabrics (`JobSpec.transport` values)."""
+    from .core.transport import TRANSPORTS
+    return sorted(TRANSPORTS)
+
+
+# ---------------------------------------------------------------------------
 # JobSpec
 # ---------------------------------------------------------------------------
 
@@ -249,8 +289,16 @@ class JobSpec:
 
     def plan_hash(self, workload: "Workload | None" = None) -> str:
         """Digest of the plan-determining fields (see PLAN_HASH_FIELDS)."""
+        return self._hash(PLAN_HASH_FIELDS, workload)
+
+    def trace_hash(self, workload: "Workload | None" = None) -> str:
+        """Digest of the trace-determining fields (see TRACE_HASH_FIELDS)."""
+        return self._hash(TRACE_HASH_FIELDS, workload)
+
+    def _hash(self, fields: tuple[str, ...],
+              workload: "Workload | None" = None) -> str:
         spec = self.normalized(workload)
-        payload = {k: getattr(spec, k) for k in PLAN_HASH_FIELDS}
+        payload = {k: getattr(spec, k) for k in fields}
         blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
@@ -319,25 +367,62 @@ class Session:
     or :meth:`save_plan` to move the artifacts somewhere durable.
     """
 
-    def __init__(self, spec: JobSpec, workload: Workload | None = None):
+    def __init__(self, spec: JobSpec, workload: Workload | None = None,
+                 cache=None):
         """``workload`` overrides the registry lookup (e.g. an unregistered
-        or parameter-adjusted Workload object); its name must match."""
+        or parameter-adjusted Workload object); its name must match.
+
+        ``cache`` — an :class:`~repro.serve_daemon.ArtifactCache` or a
+        cache-root path — makes ``trace()`` and ``plan()`` serve repeated
+        job shapes from validated on-disk artifacts (see docs/SERVE.md).
+        Custom workload objects bypass the cache: their traced programs
+        are not a pure function of the registry name."""
         if workload is not None and workload.name != spec.workload:
             raise ValueError(f"workload object {workload.name!r} does not "
                              f"match spec.workload {spec.workload!r}")
         self.workload: Workload = workload if workload is not None \
             else get(spec.workload)
         self.spec = spec.normalized(self.workload)
-        self._progs: list[Program] | None = None
+        self._progs: list[Program | ProgramFile] | None = None
         self._planned: list[Program | ProgramFile] | None = None
         self._cfgs: list[PlanConfig | None] | None = None
         self._ws: dict[int, int] = {}
         self._tmpdir: str | None = None
+        self._cache = None
+        self._plan_probed = False
+        self._trace_anns: list[str] | None = None
+        #: per-stage cache outcomes of THIS session: {"trace"|"plan":
+        #: "hit"|"miss"}; stages that never consulted the cache are absent
+        self.cache_events: dict[str, str] = {}
+        if cache is not None:
+            self.set_cache(cache)
         self.plan_reports: list[PlanReport] = []
         self.engine_stats: list[EngineStats] = []
         #: sent-traffic accounting of the last execute()'s fabric,
         #: (src_rank, dst_rank, tag) -> LinkStats
         self.transport_stats: dict[tuple[int, int, int], LinkStats] = {}
+
+    def set_cache(self, cache) -> None:
+        """Attach an artifact cache (an ArtifactCache or a root path)."""
+        from .serve_daemon.cache import ArtifactCache
+        if not isinstance(cache, ArtifactCache):
+            cache = ArtifactCache(cache)
+        self._cache = cache
+
+    @property
+    def cache(self):
+        """The attached ArtifactCache, or None."""
+        return self._cache
+
+    def _usable_cache(self):
+        """Custom (non-registry) workload objects must bypass the cache."""
+        if self._cache is None:
+            return None
+        try:
+            registered = get(self.spec.workload)
+        except KeyError:
+            return None
+        return self._cache if self.workload is registered else None
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -386,49 +471,126 @@ class Session:
 
     # -- stage 1: trace --------------------------------------------------------
 
-    def trace(self) -> list[Program]:
+    def trace(self, cache_dir=None) -> list[Program | ProgramFile]:
         """Trace the workload's DSL program, one bytecode per worker; the
-        spec hash is stamped into every program's meta (placement, §6.1)."""
+        spec hash is stamped into every program's meta (placement, §6.1).
+
+        With a cache attached (``cache_dir=`` here, or ``cache=`` at
+        construction), a repeated trace shape (``spec.trace_hash()``) is
+        served as validated FREE-stripped bytecode files + next-use
+        sidecars instead of re-running the DSL — the slowest §8.2 stage.
+        A fresh trace populates the cache, and the session adopts the
+        cached files so cold and hot runs plan identically."""
+        if cache_dir is not None:
+            self.set_cache(cache_dir)
         if self._progs is None:
             spec = self.spec
+            cache = self._usable_cache()
+            if cache is not None:
+                got = cache.get_trace(spec, self.workload)
+                if got is not None:
+                    self.cache_events["trace"] = "hit"
+                    self._adopt_trace(*got)
+                    return self._progs
+                self.cache_events["trace"] = "miss"
             extra = {}
             if self.protocol == "ckks":
                 extra["ckks_params"] = self.ckks_params()
             progs = self.workload.trace(spec.n, spec.num_workers, **extra)
-            h = spec.plan_hash(self.workload)
-            for p in progs:
-                p.meta["spec_hash"] = h
-                p.meta["job_spec"] = spec.to_dict()
-            self._progs = progs
+            if cache is not None:
+                self._adopt_trace(*cache.put_trace(
+                    spec, self.workload, progs,
+                    chunk_instrs=spec.chunk_instrs))
+            else:
+                h = spec.plan_hash(self.workload)
+                for p in progs:
+                    p.meta["spec_hash"] = h
+                    p.meta["job_spec"] = spec.to_dict()
+                self._progs = progs
         return self._progs
+
+    def _adopt_trace(self, progs: list[ProgramFile],
+                     anns: list[str]) -> None:
+        """Use cache-resident bytecode files as this session's trace; the
+        spec stamp lives in the entry as a pure trace hash, so the
+        session's own spec identity is restamped in-memory."""
+        h = self.spec.plan_hash(self.workload)
+        for pf in progs:
+            pf.meta["spec_hash"] = h
+            pf.meta["job_spec"] = self.spec.to_dict()
+        self._progs = list(progs)
+        self._trace_anns = list(anns)
 
     # -- stage 2: plan ---------------------------------------------------------
 
-    def plan(self) -> list[Program | ProgramFile]:
+    def plan(self, cache_dir=None) -> list[Program | ProgramFile]:
         """Replacement + scheduling per worker (§6.1) under the spec's
-        budget and mode; returns memory programs (files when streaming)."""
+        budget and mode; returns memory programs (files when streaming).
+
+        With a cache attached, a repeated plan shape (``spec.plan_hash()``)
+        is served from validated memory-program files — zero tracing and
+        zero planning — with the resolved per-worker configs and reports
+        restored, so a cache-hit session can still ``simulate()``."""
+        if cache_dir is not None:
+            self.set_cache(cache_dir)
         if self._planned is None:
-            progs = self.trace()
             spec = self.spec
+            if spec.plan_mode != "unbounded" and self.plan_if_cached():
+                return self._planned
+            progs = self.trace()
             if spec.plan_mode == "unbounded":
                 self._planned = list(progs)
                 self._cfgs = [None] * len(progs)
                 self.plan_reports = [PlanReport() for _ in progs]
             else:
+                streaming = spec.plan_mode == "streaming"
                 cfgs = [resolve_plan_config(spec, p, self.working_set(i))
                         if isinstance(spec.memory_budget, float)
                         else resolve_plan_config(spec, p)
                         for i, p in enumerate(progs)]
+                if not streaming:
+                    # the in-memory planner cores need .instrs; cache-hit
+                    # traces are files, so materialize them (small by
+                    # definition of the in-memory mode)
+                    progs = [p.read_program() if isinstance(p, ProgramFile)
+                             else p for p in progs]
                 planned, reports = plan_workers(
                     progs, cfgs, parallel=spec.parallel_plan,
-                    streaming=spec.plan_mode == "streaming",
+                    streaming=streaming,
                     workdir=self._workdir(),
                     track_memory=spec.track_plan_memory,
-                    chunk_instrs=spec.chunk_instrs)
+                    chunk_instrs=spec.chunk_instrs,
+                    annotations=self._trace_anns if streaming else None)
                 self._planned = planned
                 self._cfgs = cfgs
                 self.plan_reports = reports
+                cache = self._usable_cache()
+                if cache is not None:
+                    cache.put_plan(spec, self.workload, planned, cfgs,
+                                   reports)
         return self._planned
+
+    def plan_if_cached(self) -> bool:
+        """Probe the artifact cache for this spec's plan; on a hit, load
+        the memory programs + resolved configs + reports and return True
+        (the daemon uses this to size admission without planning)."""
+        if self._planned is not None:
+            return True
+        cache = self._usable_cache()
+        if cache is None or self.spec.plan_mode == "unbounded" or \
+                self._plan_probed:   # one probe per session: don't double-
+            return False             # count misses when plan() re-enters
+        self._plan_probed = True
+        got = cache.get_plan(self.spec, self.workload)
+        if got is None:
+            self.cache_events["plan"] = "miss"
+            return False
+        self.cache_events["plan"] = "hit"
+        planned, cfgs, reports = got
+        self._planned = list(planned)
+        self._cfgs = list(cfgs)
+        self.plan_reports = list(reports)
+        return True
 
     # -- stage 3a: execute -----------------------------------------------------
 
@@ -557,14 +719,19 @@ class Session:
         os.makedirs(outdir, exist_ok=True)
         planned = self.plan()
         names = []
+        cache_hit = self.cache_events.get("plan") == "hit"
         for i, p in enumerate(planned):
             dst = os.path.join(outdir, f"worker{i}.memory.bc")
             if isinstance(p, ProgramFile):
                 if os.path.abspath(p.path) != os.path.abspath(dst):
-                    shutil.move(p.path, dst)
-                    srcdir = os.path.dirname(p.path)
-                    if not os.listdir(srcdir):
-                        os.rmdir(srcdir)
+                    if cache_hit:
+                        # cache-resident artifacts stay in the cache
+                        shutil.copyfile(p.path, dst)
+                    else:
+                        shutil.move(p.path, dst)
+                        srcdir = os.path.dirname(p.path)
+                        if not os.listdir(srcdir):
+                            os.rmdir(srcdir)
                 planned[i] = ProgramFile(dst)
             else:
                 planned[i] = write_program(p, dst)
@@ -656,7 +823,61 @@ def check_outputs(w: Workload, n: int, outputs: dict[int, np.ndarray],
 
 
 def run_job(spec: JobSpec, real: bool | None = None,
-            check: bool = False) -> dict[int, np.ndarray]:
+            check: bool = False, cache=None) -> dict[int, np.ndarray]:
     """One-shot convenience: trace, plan, execute, clean up."""
-    with Session(spec) as s:
+    with Session(spec, cache=cache) as s:
         return s.execute(real=real, check=check)
+
+
+def plan(spec: JobSpec, outdir: str | os.PathLike, cache=None) -> str:
+    """One-shot plan: trace + plan ``spec`` (cache-aware when ``cache``
+    is an ArtifactCache or cache-root path) and save the memory programs
+    plus ``job.json`` manifest to ``outdir``; returns the manifest path.
+
+    The blessed top-level entry point (``repro.plan``) mirroring
+    ``python -m repro plan``; execute the artifacts later with
+    :meth:`Session.from_plan` or ``python -m repro run``."""
+    with Session(spec, cache=cache) as s:
+        return s.save_plan(outdir)
+
+
+# ---------------------------------------------------------------------------
+# admission sizing (the serving daemon's resource model)
+# ---------------------------------------------------------------------------
+
+
+def estimate_job_resources(sess: Session) -> tuple[int, int]:
+    """(frames, bytes) one job will pin while planning and executing.
+
+    Frames are the paper's T summed over workers — resolved from a
+    cached plan's configs when available (zero tracing), directly from
+    an integer budget, or by tracing for working-set-fractional budgets.
+    Bytes add the planner's O(frames) peak estimate
+    (:func:`repro.core.planner.plan_memory_estimate`) to the engine's
+    resident frame memory (frames x page bytes x parties).  This is what
+    the serving daemon's admission controller charges per tenant."""
+    from .core.planner import plan_memory_estimate
+    spec = sess.spec
+    cfgs: list[PlanConfig] | None = None
+    if spec.plan_mode == "unbounded":
+        # no plan: the engine keeps the whole working set resident
+        frames_w = [sess.working_set(i) for i in range(spec.num_workers)]
+    elif sess.plan_if_cached():
+        cfgs = [c for c in sess._cfgs if c is not None]
+        frames_w = [c.num_frames for c in cfgs]
+        cfgs = None                     # planning is skipped on a hit
+    elif not isinstance(spec.memory_budget, float):
+        cfgs = [resolve_plan_config(spec, None)] * spec.num_workers
+        frames_w = [c.num_frames for c in cfgs]
+    else:
+        cfgs = [resolve_plan_config(spec, p, self_ws)
+                for p, self_ws in ((sess.trace()[i], sess.working_set(i))
+                                   for i in range(spec.num_workers))]
+        frames_w = [c.num_frames for c in cfgs]
+    frames = sum(frames_w)
+    page_bytes = (1 << sess.workload.page_shift) * SLOT_BYTES[sess.protocol]
+    parties = driver_parties(spec.driver) if spec.driver in DRIVERS else 1
+    engine_bytes = frames * page_bytes * parties
+    planner_bytes = sum(plan_memory_estimate(c, spec.chunk_instrs)
+                        for c in cfgs) if cfgs else 0
+    return frames, engine_bytes + planner_bytes

@@ -130,12 +130,31 @@ def plan_unbounded(virtual_prog: Program) -> Program:
     return virtual_prog
 
 
+def plan_memory_estimate(cfg: PlanConfig, chunk_instrs: int = 8192) -> int:
+    """Upper-bound bytes of planner peak memory for one worker, O(frames).
+
+    The streaming pipeline's state is the Table-1 bound
+    O(chunk + frames + lookahead): per-frame bookkeeping (frame table,
+    residency maps, MIN-policy heap entries — a few machine words each),
+    the scheduler's lookahead window, and a handful of in-flight record
+    chunks per stage.  The constants below are deliberately generous
+    (~2x measured ``PlanReport.peak_mem_bytes``) so the admission
+    controller errs toward under-, not over-, commitment."""
+    from .bytecode import RECORD_BYTES
+    per_frame = 128          # frame table + residency + heap, with slack
+    chunks_in_flight = 8     # 3 stages x (read + write) + fused-core slack
+    return (cfg.num_frames * per_frame
+            + max(cfg.lookahead, 1) * 32
+            + chunks_in_flight * chunk_instrs * RECORD_BYTES)
+
+
 def plan_streaming(virtual: Program | ProgramFile, cfg: PlanConfig,
                    out_path: str | os.PathLike | None = None,
                    workdir: str | os.PathLike | None = None,
                    track_memory: bool = False,
                    chunk_instrs: int = 8192,
                    keep_intermediates: bool = False,
+                   annotations: str | os.PathLike | None = None,
                    ) -> tuple[ProgramFile, PlanReport]:
     """Out-of-core planning: file-to-file stages, bounded planner memory.
 
@@ -151,6 +170,12 @@ def plan_streaming(virtual: Program | ProgramFile, cfg: PlanConfig,
     the memory program can be far larger than RAM, so nothing here can
     decide its lifetime.  Pass ``out_path`` to place the result somewhere
     you already manage.
+
+    ``annotations`` is an optional pre-computed next-use sidecar for
+    ``virtual`` (as written by ``annotate_next_use``); when given, the
+    backward annotation pass is skipped (``report.annotate_s == 0``) and
+    the caller keeps ownership of the sidecar file — this is how the
+    artifact cache replans a cached trace without re-annotating.
     """
     report = PlanReport()
     if cfg.prefetch_pages >= cfg.num_frames:
@@ -178,11 +203,15 @@ def plan_streaming(virtual: Program | ProgramFile, cfg: PlanConfig,
         assert virtual.phase == "virtual", virtual.phase
 
         t0 = time.perf_counter()
-        ann = annotate_next_use(virtual, apath, chunk_instrs)
-        t1 = time.perf_counter()
+        if annotations is not None:
+            apath = os.fspath(annotations)   # caller-owned: never unlinked
+            t1 = t0                          # pass skipped: annotate_s == 0
+        else:
+            annotate_next_use(virtual, apath, chunk_instrs)
+            t1 = time.perf_counter()
         phys, rstats = plan_replacement_file(
             virtual, ppath, cfg.replacement_frames, policy=cfg.policy,
-            annotations=ann.path, chunk_instrs=chunk_instrs, core=cfg.core)
+            annotations=apath, chunk_instrs=chunk_instrs, core=cfg.core)
         t2 = time.perf_counter()
         mem, sstats = plan_schedule_file(
             phys, mpath, cfg.lookahead, cfg.prefetch_pages,
@@ -199,7 +228,11 @@ def plan_streaming(virtual: Program | ProgramFile, cfg: PlanConfig,
         if not done and made_workdir:
             shutil.rmtree(workdir, ignore_errors=True)
         elif not keep_intermediates:
-            for p in ([vpath] if wrote_virtual else []) + [apath, ppath]:
+            doomed = [vpath] if wrote_virtual else []
+            if annotations is None:
+                doomed.append(apath)
+            doomed.append(ppath)
+            for p in doomed:
                 if os.path.exists(p):
                     os.unlink(p)
     report.annotate_s = t1 - t0

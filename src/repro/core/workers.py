@@ -80,13 +80,15 @@ PARALLEL_MODES = ("serial", "thread", "process")
 
 def _plan_one(w: int, prog: Program | ProgramFile, cfg: PlanConfig,
               streaming: bool, workdir: str | None, track_memory: bool,
-              chunk_instrs: int) -> tuple[Program | ProgramFile, PlanReport]:
+              chunk_instrs: int, annotation: str | None,
+              ) -> tuple[Program | ProgramFile, PlanReport]:
     """Module-level so ``parallel="process"`` can pickle it."""
     if streaming:
         wd = os.path.join(workdir, f"worker{w}") if workdir else None
         return plan_streaming(prog, cfg, workdir=wd,
                               track_memory=track_memory,
-                              chunk_instrs=chunk_instrs)
+                              chunk_instrs=chunk_instrs,
+                              annotations=annotation)
     return plan(prog, cfg, track_memory=track_memory)
 
 
@@ -94,6 +96,7 @@ def plan_workers(progs: Sequence[Program], cfg: PlanConfig | Sequence[PlanConfig
                  parallel: bool | str = False, streaming: bool = False,
                  workdir: str | None = None, track_memory: bool = False,
                  chunk_instrs: int = 8192,
+                 annotations: Sequence[str] | None = None,
                  ) -> tuple[list[Program | ProgramFile], list[PlanReport]]:
     """Plan each worker's program independently (§6.1).
 
@@ -111,10 +114,18 @@ def plan_workers(progs: Sequence[Program], cfg: PlanConfig | Sequence[PlanConfig
     tracemalloc is process-global, so concurrent planner threads would reset
     each other's measurement (``"process"`` keeps both parallelism and
     per-worker peaks).
+
+    ``annotations`` — optional per-worker pre-computed next-use sidecar
+    paths (streaming only), e.g. from the artifact cache; the annotation
+    pass is skipped for workers that have one.
     """
     cfgs = list(cfg) if isinstance(cfg, (list, tuple)) else [cfg] * len(progs)
     if len(cfgs) != len(progs):
         raise ValueError(f"{len(cfgs)} configs for {len(progs)} workers")
+    anns = list(annotations) if annotations is not None \
+        else [None] * len(progs)
+    if len(anns) != len(progs):
+        raise ValueError(f"{len(anns)} annotations for {len(progs)} workers")
     mode = {False: "serial", True: "thread"}.get(parallel, parallel)
     if mode not in PARALLEL_MODES:
         raise ValueError(f"parallel must be one of {PARALLEL_MODES}, "
@@ -125,7 +136,7 @@ def plan_workers(progs: Sequence[Program], cfg: PlanConfig | Sequence[PlanConfig
         mode = "serial"
     args = (range(len(progs)), progs, cfgs, itertools.repeat(streaming),
             itertools.repeat(workdir), itertools.repeat(track_memory),
-            itertools.repeat(chunk_instrs))
+            itertools.repeat(chunk_instrs), anns)
     if mode == "serial" or len(progs) <= 1:
         results = list(map(_plan_one, *args))
     elif mode == "thread":

@@ -147,7 +147,8 @@ class ScenarioResult:
 def scenario_spec(name: str, n: int, budget_frac: float = 0.25,
                   num_workers: int = 1, plan_overrides: dict | None = None,
                   plan_mode: str = "memory",
-                  sim_core: str = "array") -> JobSpec:
+                  sim_core: str = "array",
+                  plan_core: str = "array") -> JobSpec:
     """The JobSpec the §8.2 benchmarks use for one (workload, size) case."""
     w = get(name)
     knobs = dict(GC_PLAN if w.protocol == "gc" else CKKS_PLAN)
@@ -168,6 +169,7 @@ def scenario_spec(name: str, n: int, budget_frac: float = 0.25,
                    policy=knobs.get("policy", "min"),
                    swap_bypass=knobs.get("swap_bypass", False),
                    plan_mode=plan_mode, sim_core=sim_core,
+                   plan_core=plan_core,
                    track_plan_memory=True, **extra)
 
 
@@ -175,13 +177,19 @@ def run_workload_workers(name: str, n: int, num_workers: int = 1,
                          budget_frac: float = 0.25,
                          plan_overrides: dict | None = None,
                          plan_mode: str = "memory",
-                         sim_core: str = "array") -> list[ScenarioResult]:
-    """All three scenarios for every worker of one case (one Session)."""
+                         sim_core: str = "array",
+                         plan_core: str = "array",
+                         cache_dir=None) -> list[ScenarioResult]:
+    """All three scenarios for every worker of one case (one Session).
+
+    ``cache_dir`` attaches the artifact cache (docs/SERVE.md): repeated
+    bench/figure invocations of the same case skip re-tracing (and, for
+    streaming cases, re-planning)."""
     spec = scenario_spec(name, n, budget_frac=budget_frac,
                          num_workers=num_workers,
                          plan_overrides=plan_overrides, plan_mode=plan_mode,
-                         sim_core=sim_core)
-    with Session(spec) as s:
+                         sim_core=sim_core, plan_core=plan_core)
+    with Session(spec, cache=cache_dir) as s:
         scenarios = s.simulate(cost_fn(s.protocol), model=STORAGE,
                                os_page_bytes=OS_PAGE_BYTES)
     out = []
@@ -209,7 +217,9 @@ def run_workload(name: str, n: int, budget_frac: float = 0.25,
                  num_workers: int = 1, worker: int = 0,
                  plan_overrides: dict | None = None,
                  plan_mode: str = "memory",
-                 sim_core: str = "array") -> ScenarioResult:
+                 sim_core: str = "array",
+                 plan_core: str = "array",
+                 cache_dir=None) -> ScenarioResult:
     """One worker's scenarios.  Note: plans and simulates ALL workers of
     the trace (one Session); with num_workers > 1 and a single worker of
     interest, call sites wanting to skip the others should drive Session
@@ -218,7 +228,8 @@ def run_workload(name: str, n: int, budget_frac: float = 0.25,
                                 budget_frac=budget_frac,
                                 plan_overrides=plan_overrides,
                                 plan_mode=plan_mode,
-                                sim_core=sim_core)[worker]
+                                sim_core=sim_core, plan_core=plan_core,
+                                cache_dir=cache_dir)[worker]
 
 
 def fmt_row(name: str, r: ScenarioResult) -> str:
@@ -300,13 +311,15 @@ TINY_STREAMING_CASE = ("merge", 4096)
 
 
 def run_bench(cases=None, budget_frac: float = 0.4, check: bool = True,
-              streaming_case=None, sim_core: str = "array") -> list[dict]:
+              streaming_case=None, sim_core: str = "array",
+              plan_core: str = "array", cache_dir=None) -> list[dict]:
     """Drive the §8.2 scenarios; returns JSON-ready row dicts."""
     cases = cases if cases is not None else BENCH_CASES
     rows = []
     for name, n in cases:
         r = run_workload(name, n, budget_frac=budget_frac,
-                         sim_core=sim_core)
+                         sim_core=sim_core, plan_core=plan_core,
+                         cache_dir=cache_dir)
         print("bench:", fmt_row(name, r), flush=True)
         rows.append({"workload": name, "n": n,
                      "speedup_vs_os": r.speedup_vs_os,
@@ -315,7 +328,8 @@ def run_bench(cases=None, budget_frac: float = 0.4, check: bool = True,
     if streaming_case is not None:
         name, n = streaming_case
         r = run_workload(name, n, budget_frac=budget_frac,
-                         plan_mode="streaming", sim_core=sim_core)
+                         plan_mode="streaming", sim_core=sim_core,
+                         plan_core=plan_core, cache_dir=cache_dir)
         print("bench (streaming):", fmt_row(name, r), flush=True)
         rows.append({"workload": name, "n": n,
                      "speedup_vs_os": r.speedup_vs_os,

@@ -1,0 +1,32 @@
+"""Plan-cache serving daemon (`python -m repro serve`).
+
+MAGE's central artifact — the memory program — is a deterministic,
+spec-hash-stamped function of the job spec (§5–§7), so a production
+service should never re-trace or re-plan a repeated job shape.  This
+package is the serving layer built on that observation:
+
+  cache.py      on-disk :class:`ArtifactCache` of traced bytecode,
+                next-use sidecars and memory-program plans, keyed by
+                spec hash, validated on hit exactly like
+                ``Session.from_plan`` (tampered entries are rejected
+                and transparently re-planned), LRU size-capped;
+  admission.py  :class:`AdmissionController` — a shared frame-pool
+                budget plus planner/engine memory estimates bound how
+                many tenants plan/execute concurrently;
+  server.py     :class:`ServeDaemon` — a line-delimited JSON request
+                protocol over a local (unix or TCP) socket;
+  client.py     :class:`ServeClient` / :func:`serve_client` — the
+                matching helper `python -m repro submit` and the
+                benchmarks use.
+
+See docs/SERVE.md for the protocol, the cache layout and the admission
+semantics.
+"""
+
+from .admission import AdmissionController, AdmissionError
+from .cache import ArtifactCache, CacheStats
+from .client import ServeClient, serve_client
+from .server import ServeDaemon
+
+__all__ = ["AdmissionController", "AdmissionError", "ArtifactCache",
+           "CacheStats", "ServeClient", "ServeDaemon", "serve_client"]

@@ -1,0 +1,300 @@
+"""Serving daemon + artifact cache + admission control (docs/SERVE.md).
+
+Covers the acceptance claims: a cache hit returns bitwise-identical
+artifacts with zero tracing/planning (daemon counters), tampered entries
+are rejected and transparently re-planned, LRU eviction respects the
+size cap, concurrent admissions never exceed the frame pool, and the
+stable ``repro.*`` public surface resolves."""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.__main__ import main
+from repro.api import JobSpec, Session, estimate_job_resources
+from repro.serve_daemon.admission import AdmissionController, AdmissionError
+from repro.serve_daemon.cache import ArtifactCache
+from repro.serve_daemon.client import ServeError, serve_client
+from repro.serve_daemon.server import ServeDaemon, program_digest
+
+SPEC = JobSpec(workload="merge", n=1024, memory_budget=24,
+               plan_mode="streaming")
+
+
+# ---------------------------------------------------------------------------
+# artifact cache via the Session facade
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_identical_digests(tmp_path):
+    cache = ArtifactCache(tmp_path / "cache")
+    with Session(SPEC, cache=cache) as s:
+        cold = [program_digest(p) for p in s.plan()]
+        assert s.cache_events == {"trace": "miss", "plan": "miss"}
+    with Session(SPEC, cache=cache) as s:
+        hot = [program_digest(p) for p in s.plan()]
+        assert s.cache_events == {"plan": "hit"}     # no trace needed at all
+        # the resolved configs + reports are restored, so simulate() works
+        assert s._cfgs[0].num_frames == 24
+        assert s.plan_reports[0].replacement is not None
+    assert hot == cold
+    assert cache.stats.plan_hits == 1 and cache.stats.invalid == 0
+
+
+def test_cache_hit_execute_matches_cold(tmp_path):
+    with Session(SPEC, cache=tmp_path / "c") as s:
+        cold = s.execute()
+    with Session(SPEC, cache=tmp_path / "c") as s:
+        hot = s.execute()
+        assert s.cache_events == {"plan": "hit"}
+    assert sorted(cold) == sorted(hot)
+    for tag in cold:
+        np.testing.assert_array_equal(cold[tag], hot[tag])
+
+
+def test_trace_cache_shared_across_budgets(tmp_path):
+    """The trace entry is keyed by shape only: a different budget re-plans
+    but serves the traced bytecode (and sidecar) from the cache."""
+    cache = ArtifactCache(tmp_path / "cache")
+    with Session(SPEC, cache=cache) as s:
+        s.plan()
+    other = JobSpec(workload="merge", n=1024, memory_budget=12,
+                    plan_mode="streaming")
+    assert other.trace_hash() == SPEC.trace_hash()
+    assert other.plan_hash() != SPEC.plan_hash()
+    with Session(other, cache=cache) as s:
+        s.plan()
+        assert s.cache_events == {"trace": "hit", "plan": "miss"}
+        # the cached sidecar is reused: no annotation pass was run
+        assert s.plan_reports[0].annotate_s == 0.0
+    assert cache.stats.trace_hits == 1
+
+
+def test_trace_cache_dir_standalone(tmp_path):
+    """Session.trace(cache_dir=...) alone caches the traced bytecode."""
+    with Session(SPEC) as s:
+        progs = s.trace(cache_dir=tmp_path / "c")
+        n_instrs = len(progs[0])
+    with Session(SPEC) as s:
+        progs = s.trace(cache_dir=tmp_path / "c")
+        assert s.cache_events == {"trace": "hit"}
+        assert len(progs[0]) == n_instrs
+        # adopted cache files are restamped with THIS spec's identity
+        assert progs[0].meta["spec_hash"] == SPEC.plan_hash()
+
+
+def test_tampered_plan_rejected_and_replanned(tmp_path):
+    cache = ArtifactCache(tmp_path / "cache")
+    with Session(SPEC, cache=cache) as s:
+        cold = [program_digest(p) for p in s.plan()]
+    victim = os.path.join(cache.root, "plan", SPEC.plan_hash(),
+                          "worker0.memory.bc")
+    with open(victim, "r+b") as f:       # flip bytes mid-file
+        f.seek(os.path.getsize(victim) // 2)
+        f.write(b"\xff\xff\xff\xff")
+    with Session(SPEC, cache=cache) as s:
+        hot = [program_digest(p) for p in s.plan()]
+        assert s.cache_events["plan"] == "miss"      # rejected, not served
+    assert hot == cold                               # transparently re-planned
+    assert cache.stats.invalid == 1
+    assert not os.path.exists(victim) or \
+        program_digest_path_ok(victim, cold[0])
+    # the re-plan repopulated the entry: next session hits again
+    with Session(SPEC, cache=cache) as s:
+        s.plan()
+        assert s.cache_events["plan"] == "hit"
+
+
+def program_digest_path_ok(path, digest):
+    from repro.core.bytecode import ProgramFile
+    return program_digest(ProgramFile(path)) == digest
+
+
+def test_tampered_manifest_spec_rejected(tmp_path):
+    """from_plan-style validation: an edited manifest spec re-hashes to a
+    different key, so the entry is invalid even with intact files."""
+    cache = ArtifactCache(tmp_path / "cache")
+    with Session(SPEC, cache=cache) as s:
+        s.plan()
+    man = os.path.join(cache.root, "plan", SPEC.plan_hash(),
+                       "manifest.json")
+    doc = json.load(open(man))
+    doc["spec"]["n"] = 4096
+    json.dump(doc, open(man, "w"))
+    assert cache.get_plan(SPEC) is None
+    assert cache.stats.invalid == 1
+
+
+def test_lru_eviction_respects_cap(tmp_path):
+    cache = ArtifactCache(tmp_path / "cache")
+    specs = [JobSpec(workload="merge", n=n, memory_budget=16,
+                     plan_mode="streaming") for n in (512, 1024, 2048)]
+    for spec in specs:
+        with Session(spec, cache=cache) as s:
+            s.plan()
+    full = cache.total_bytes()
+    assert cache.entry_count() == 6          # 3 traces + 3 plans
+    cache.max_bytes = full // 2
+    # touch the newest spec so LRU prefers evicting the older ones
+    time.sleep(0.02)
+    assert cache.get_plan(specs[-1]) is not None
+    with Session(JobSpec(workload="rsum", n=64, memory_budget=8,
+                         plan_mode="streaming"), cache=cache) as s:
+        s.plan()                             # put triggers eviction
+    assert cache.total_bytes() <= cache.max_bytes
+    assert cache.stats.evictions > 0
+    # the just-touched plan survived; the oldest entries are gone
+    assert cache.get_plan(specs[-1]) is not None
+    assert cache.get_plan(specs[0]) is None
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_never_exceeds_pool():
+    ctl = AdmissionController(frame_pool=100)
+    peak_seen = []
+    lock = threading.Lock()
+
+    def job(frames):
+        with ctl.admit(frames):
+            with lock:
+                peak_seen.append(ctl.frames_in_use)
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=job, args=(f,))
+               for f in (60, 60, 40, 40, 30, 30, 90, 10) * 4]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert ctl.frames_in_use == 0 and ctl.active == 0
+    assert ctl.peak_frames <= 100
+    assert max(peak_seen) <= 100
+    assert ctl.admitted == len(threads)
+
+
+def test_admission_reject_and_never_fits():
+    ctl = AdmissionController(frame_pool=10, max_queue=1)
+    with pytest.raises(AdmissionError, match="never"):
+        ctl.admit(11)
+    with ctl.admit(8):
+        with pytest.raises(AdmissionError, match="declined to queue"):
+            ctl.admit(8, queue=False)
+        with pytest.raises(AdmissionError, match="timed out"):
+            ctl.admit(8, timeout=0.01)
+    with ctl.admit(8):                       # pool drained: admits again
+        pass
+    assert ctl.rejected == 2
+
+
+def test_admission_memory_budget():
+    ctl = AdmissionController(frame_pool=100, memory_bytes=1000)
+    with pytest.raises(AdmissionError, match="memory budget"):
+        ctl.admit(1, mem_bytes=2000)
+    with ctl.admit(1, mem_bytes=900):
+        with pytest.raises(AdmissionError):
+            ctl.admit(1, mem_bytes=200, queue=False)
+
+
+def test_estimate_job_resources_without_tracing(tmp_path):
+    """Integer budgets are sized by arithmetic alone — no trace."""
+    with Session(SPEC) as s:
+        frames, mem = estimate_job_resources(s)
+        assert frames == 24 and mem > 0
+        assert s._progs is None              # really did not trace
+
+
+# ---------------------------------------------------------------------------
+# the daemon end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def daemon(tmp_path):
+    d = ServeDaemon(tmp_path / "cache",
+                    socket_path=str(tmp_path / "mage.sock"),
+                    frame_pool=4096)
+    d.start()
+    yield d
+    d.shutdown()
+
+
+def test_daemon_hot_submit_zero_trace_zero_plan(daemon):
+    with serve_client(daemon.address) as c:
+        assert c.ping()["ok"]
+        r1 = c.submit(SPEC, execute=True)
+        assert r1["cache"] == {"trace": "miss", "plan": "miss"}
+        before = c.status()["cache"]
+        r2 = c.submit(SPEC, execute=True)
+        after = c.status()["cache"]
+        assert r2["cache"] == {"trace": "skipped", "plan": "hit"}
+        assert r2["digests"] == r1["digests"]
+        assert r2["outputs_digest"] == r1["outputs_digest"]
+        assert r2["schema_version"] == repro.SCHEMA_VERSION
+        # THE tentpole claim: the hot submission performed zero tracing
+        # and zero planning, per the daemon's own counters
+        assert after["trace_misses"] == before["trace_misses"]
+        assert after["plan_misses"] == before["plan_misses"]
+        assert after["plan_hits"] == before["plan_hits"] + 1
+
+
+def test_daemon_rejects_oversized_job(daemon):
+    big = JobSpec(workload="merge", n=1024, memory_budget=100_000,
+                  plan_mode="streaming")
+    with serve_client(daemon.address) as c:
+        with pytest.raises(ServeError, match="never") as ei:
+            c.submit(big)
+        assert ei.value.rejected
+        assert c.status()["jobs"]["rejected"] == 1
+
+
+def test_daemon_bad_requests(daemon):
+    with serve_client(daemon.address) as c:
+        with pytest.raises(ServeError, match="unknown op"):
+            c.request({"op": "frobnicate"})
+        with pytest.raises(ServeError, match="unknown submit fields"):
+            c.request({"op": "submit", "spec": SPEC.to_dict(), "bogus": 1})
+        with pytest.raises(ServeError, match="unknown JobSpec fields"):
+            c.submit({"workload": "merge", "wat": 1})
+        assert c.ping()["ok"]                # the connection survived
+
+
+def test_cli_submit_roundtrip(daemon, tmp_path, capsys):
+    out = tmp_path / "resp.json"
+    assert main(["submit", "--connect", str(daemon.address),
+                 "--workload", "merge", "-n", "1024", "--budget", "24",
+                 "--json", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["ok"] and doc["schema_version"] == 1
+    assert main(["submit", "--connect", str(daemon.address),
+                 "--status"]) == 0
+    assert '"plan_misses": 1' in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# stable public surface
+# ---------------------------------------------------------------------------
+
+
+def test_public_api_surface(tmp_path):
+    assert "merge" in repro.list_workloads()
+    assert {"gc-plaintext", "gc-2party", "ckks"} <= set(repro.list_drivers())
+    assert {"ram", "memmap"} <= set(repro.list_storages())
+    assert {"inproc", "tcp", "shaped"} <= set(repro.list_transports())
+    assert repro.Session is Session and repro.JobSpec is JobSpec
+    assert callable(repro.serve_client) and callable(repro.plan)
+    # old import paths keep working
+    from repro.api import run_job                          # noqa: F401
+    from repro.serve_daemon import ServeClient             # noqa: F401
+    manifest = repro.plan(SPEC, tmp_path / "job", cache=tmp_path / "c")
+    assert os.path.basename(manifest) == "job.json"
+    assert Session.from_plan(tmp_path / "job").spec.plan_hash() == \
+        SPEC.plan_hash()

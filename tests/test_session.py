@@ -175,7 +175,9 @@ def test_cli_bench_tiny_json(tmp_path):
     out = tmp_path / "bench.json"
     assert main(["bench", "--tiny", "--cases", "rsum=64",
                  "--json", str(out)]) == 0
-    rows = json.loads(out.read_text())
+    doc = json.loads(out.read_text())
+    assert doc["schema_version"] == 1
+    rows = doc["rows"]
     assert rows[0]["workload"] == "rsum"
     assert {"unbounded_s", "os_s", "mage_s", "plan_peak_mb",
             "program_bytes"} <= set(rows[0])

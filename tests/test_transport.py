@@ -360,8 +360,8 @@ def test_two_process_tcp_run_matches_single_process(tmp_path):
         assert proc.wait(timeout=180) == 0
     merged = {}
     for out, _ in procs:
-        merged.update(json.loads(out.read_text()))
-    expect = json.loads(single.read_text())
+        merged.update(json.loads(out.read_text())["outputs"])
+    expect = json.loads(single.read_text())["outputs"]
     assert merged == expect, "distributed outputs must be bitwise identical"
 
 
