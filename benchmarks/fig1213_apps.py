@@ -4,22 +4,36 @@ and computational PIR (CKKS).
 Claim (§8.8): for a fixed time budget, MAGE processes ~3x the user-password
 records and ~5x the PIR database elements compared to OS swapping.  We
 compute records-per-second under both scenarios across problem sizes and
-report the capacity ratio at equal time."""
+report the capacity ratio at equal time.
+
+    PYTHONPATH=src python benchmarks/fig1213_apps.py [--tiny] [--json out]
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
+
 from common import run_workload
+from repro.api import SCHEMA_VERSION
+
+CASES = [("passreuse", [2048, 4096], 3.0), ("pir", [256, 512], 4.0)]
+TINY_CASES = [("passreuse", [2048], 3.0), ("pir", [256], 4.0)]
 
 
-def run(check: bool = True):
+def run(check: bool = True, tiny: bool = False,
+        rows_out: list | None = None):
     out = {}
-    for name, sizes, target in [("passreuse", [2048, 4096], 3.0),
-                                ("pir", [256, 512], 4.0)]:
+    rows = [] if rows_out is None else rows_out
+    for name, sizes, target in (TINY_CASES if tiny else CASES):
         ratios = []
         for n in sizes:
             r = run_workload(name, n, budget_frac=0.3)
             ratio = r.os_s / r.mage_s
             ratios.append(ratio)
+            rows.append({"workload": name, "n": n, "os_s": r.os_s,
+                         "mage_s": r.mage_s, "capacity_ratio": ratio,
+                         "target": target})
             print(f"{name:10s} n={n:6d}: os={r.os_s:8.3f}s "
                   f"mage={r.mage_s:8.3f}s -> capacity ratio ~{ratio:4.2f}x",
                   flush=True)
@@ -34,5 +48,23 @@ def run(check: bool = True):
     return out
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="one size per app (CI smoke)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as a schema-stamped JSON envelope")
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+    rows: list = []
+    out = run(check=not args.no_check, tiny=args.tiny, rows_out=rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "benchmark": "fig1213_apps", "tiny": args.tiny,
+                       "claims": out, "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -109,6 +109,11 @@ def _add_spec_args(ap: argparse.ArgumentParser) -> None:
                     help="per-worker planning executor")
     ap.add_argument("--ckks-ring", type=int, default=None)
     ap.add_argument("--ckks-levels", type=int, default=None)
+    ap.add_argument("--exec-backend", dest="exec_backend", default="scalar",
+                    choices=("scalar", "batched"),
+                    help="engine backend: per-instruction reference loop or "
+                         "plan-derived batched dispatch (docs/ENGINE.md); "
+                         "outputs are identical")
 
 
 def _spec_from_args(args, default_mode: str) -> JobSpec:
@@ -122,6 +127,7 @@ def _spec_from_args(args, default_mode: str) -> JobSpec:
                    policy=args.policy, plan_mode=mode,
                    plan_core=args.plan_core, sim_core=args.sim_core,
                    parallel_plan=args.parallel,
+                   exec_backend=args.exec_backend,
                    ckks_ring=args.ckks_ring, ckks_levels=args.ckks_levels)
 
 
@@ -162,11 +168,12 @@ def cmd_run(args) -> int:
     sess = Session.from_plan(args.jobdir, storage=args.storage,
                              driver=args.driver, transport=transport,
                              fabric=fabric)
-    # core knobs never change outputs (and are not plan-hashed), so they
-    # may be overridden on an already-planned job
+    # core/backend knobs never change outputs (and are not plan-hashed),
+    # so they may be overridden on an already-planned job
     import dataclasses
     overrides = {k: v for k, v in (("plan_core", args.plan_core),
-                                   ("sim_core", args.sim_core))
+                                   ("sim_core", args.sim_core),
+                                   ("exec_backend", args.exec_backend))
                  if v is not None}
     if overrides:
         sess.spec = dataclasses.replace(sess.spec, **overrides)
@@ -382,6 +389,10 @@ def main(argv=None) -> int:
                    help="shaped: per-link bandwidth (bytes/s)")
     p.add_argument("--json", metavar="PATH",
                    help="write this process's outputs as JSON")
+    p.add_argument("--exec-backend", dest="exec_backend", default=None,
+                   choices=("scalar", "batched"),
+                   help="override the engine backend for this run "
+                        "(docs/ENGINE.md); outputs are identical")
     _add_core_args(p, default=None)
     p.set_defaults(fn=cmd_run)
 

@@ -60,6 +60,12 @@ from .protocols.garbled.gates import PartyChannel
 from .workloads import Workload, get
 
 PLAN_MODES = ("memory", "streaming", "unbounded")
+#: Engine execution backends: "scalar" is the per-instruction reference
+#: loop; "batched" precomputes a batch schedule from the plan's oblivious
+#: instruction stream and executes uniform independent groups through
+#: ``driver.execute_batch`` (see repro.exec and docs/ENGINE.md).  Like
+#: plan_core/sim_core, the two are output-identical by construction.
+EXEC_BACKENDS = ("scalar", "batched")
 
 #: Version stamped into every machine-readable output (CLI ``--json``
 #: files and the serving daemon's protocol responses) so consumers can
@@ -72,7 +78,8 @@ SCHEMA_VERSION = 1
 SLOT_BYTES = {"gc": 16, "ckks": 8}
 
 #: JobSpec fields that determine the planned memory program.  Execution
-#: details (driver, storage, workdir, parallelism, chunking) are excluded:
+#: details (driver, exec_backend, storage, workdir, parallelism, chunking)
+#: are excluded:
 #: a plan produced under any of them is valid under all of them, and
 #: ``plan_mode`` / ``plan_core`` / ``sim_core`` are excluded because the
 #: streaming and in-memory pipelines, the array and scalar planner cores,
@@ -243,6 +250,7 @@ class JobSpec:
     sim_core: str = "array"               # simulator core (identical results)
     parallel_plan: bool | str = "serial"  # serial | thread | process
     driver: str = "auto"                  # auto → protocol default
+    exec_backend: str = "scalar"          # scalar | batched (see docs/ENGINE.md)
     storage: str = "ram"                  # ram | memmap
     transport: str = "inproc"             # inproc | tcp | shaped
     fabric: FabricSpec | None = None      # endpoint placement / shaping
@@ -262,6 +270,9 @@ class JobSpec:
         if self.sim_core not in CORES:
             raise ValueError(f"sim_core must be one of {CORES}, "
                              f"got {self.sim_core!r}")
+        if self.exec_backend not in EXEC_BACKENDS:
+            raise ValueError(f"exec_backend must be one of {EXEC_BACKENDS}, "
+                             f"got {self.exec_backend!r}")
         if self.plan_mode == "unbounded":
             if self.memory_budget is not None:
                 raise ValueError("unbounded jobs take no memory_budget")
@@ -626,6 +637,8 @@ class Session:
             raise ValueError("check=True needs the full outputs; a "
                              "distributed rank only holds its own (run "
                              "`python -m repro fabric` for a checked fleet)")
+        scheds = self._batch_schedules(planned) \
+            if spec.exec_backend == "batched" else None
         outputs: dict[int, np.ndarray] = {}
         try:
             fx.connect()
@@ -634,12 +647,17 @@ class Session:
             for r in sorted(drivers):
                 party, wk = divmod(r, p)
                 drv = drivers[r]
+                if scheds is not None:
+                    from .exec import make_batched
+                    drv = make_batched(drv)
                 prog = planned[wk]
                 storage = make_storage((prog.page_slots, drv.lane),
                                        drv.dtype)
                 jobs.append(EngineJob(prog, drv,
                                       net=fx.view(r, party * p, p),
                                       storage=storage,
+                                      batch_schedule=(scheds[wk] if scheds
+                                                      else None),
                                       tag=f"party{party}/worker{wk}"))
             self.engine_stats = run_engines(jobs)
             if fx.distributed:
@@ -653,6 +671,30 @@ class Session:
         if check:
             check_outputs(self.workload, spec.n, outputs)
         return outputs
+
+    def _batch_schedules(self, planned) -> list:
+        """One exec/ batch schedule per worker memory program, served from
+        the artifact cache when possible (see docs/ENGINE.md).
+
+        Keyed by ``plan_hash`` like the plan entry it describes.  Unbounded
+        runs build in-process: ``plan_mode`` is excluded from the plan hash
+        (the planned pipelines are output-identical), but an unbounded
+        "plan" is the raw trace, so its sidecar would collide with the
+        memory-mode entry of the same spec."""
+        from .exec.batching import build_batch_schedule
+        spec = self.spec
+        cache = self._usable_cache()
+        if cache is not None and spec.plan_mode != "unbounded":
+            got = cache.get_batch(spec, self.workload)
+            if got is not None and len(got) == len(planned):
+                self.cache_events["batch"] = "hit"
+                return got
+            self.cache_events["batch"] = "miss"
+            scheds = [build_batch_schedule(p, spec.chunk_instrs)
+                      for p in planned]
+            cache.put_batch(spec, self.workload, scheds)
+            return scheds
+        return [build_batch_schedule(p, spec.chunk_instrs) for p in planned]
 
     # -- stage 3b: simulate ----------------------------------------------------
 

@@ -164,7 +164,8 @@ def iter_instructions(prog) -> Iterator[Instr]:
     return iter(instrs) if instrs is not None else prog.iter_instrs()
 
 
-def iter_record_chunks(prog, chunk_instrs: int | None = None
+def iter_record_chunks(prog, chunk_instrs: int | None = None, *,
+                       cache: bool = False
                        ) -> "Iterator[tuple[int, np.ndarray | None, list]]":
     """Yield ``(start, rec, instrs)`` chunks of a Program or ProgramFile.
 
@@ -172,7 +173,11 @@ def iter_record_chunks(prog, chunk_instrs: int | None = None
     array simulator cores): ``rec`` is the [m, RECORD_WORDS] record array
     (``None`` for an in-memory chunk the record format cannot express —
     wide arity or non-scalar immediates), ``instrs`` the instruction list
-    (``None`` for file chunks, which consumers decode on demand)."""
+    (``None`` for file chunks, which consumers decode on demand).
+
+    ``cache=True`` memoizes the encoded chunks on an in-memory Program so
+    repeated replays (the batched engine loop, benchmarks) do not pay the
+    Python-side encode again; ~152 bytes/record of extra memory."""
     if chunk_instrs is None:
         chunk_instrs = DEFAULT_CHUNK_INSTRS
     instrs = getattr(prog, "instrs", None)
@@ -180,13 +185,25 @@ def iter_record_chunks(prog, chunk_instrs: int | None = None
         for s, rec in prog.iter_chunks(chunk_instrs):
             yield s, rec, None
         return
+    memo = None
+    if cache:
+        memo = getattr(prog, "_rec_chunk_cache", None)
+        if memo is not None and memo[0] == chunk_instrs:
+            for i, s in enumerate(range(0, len(instrs), chunk_instrs)):
+                yield s, memo[1][i], instrs[s:s + chunk_instrs]
+            return
+        memo = (chunk_instrs, [])
     for s in range(0, len(instrs), chunk_instrs):
         sub = instrs[s:s + chunk_instrs]
         try:
             rec = encode_chunk(sub)
         except (TypeError, ValueError):
             rec = None
+        if memo is not None:
+            memo[1].append(rec)
         yield s, rec, sub
+    if memo is not None:
+        prog._rec_chunk_cache = memo
 
 
 # ---------------------------------------------------------------------------

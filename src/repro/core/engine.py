@@ -22,7 +22,9 @@ from typing import Any, Callable
 
 import numpy as np
 
-from .bytecode import Instr, Op, Program, ProgramFile, iter_instructions
+from .bytecode import (_IMM_OFF, _IN_OFF, _OUT_OFF, Instr, Op, Program,
+                       ProgramFile, decode_chunk, iter_instructions,
+                       iter_record_chunks, unpack_heads)
 from .storage import AsyncIO, MemmapStorage, RamStorage, StorageBackend
 from .transport import PartyView, TransportError
 
@@ -64,6 +66,10 @@ class EngineStats:
     net_messages: int = 0
     net_sent_bytes: int = 0
     net_recv_bytes: int = 0
+    #: instructions executed through driver.execute_batch (exec/ backend)
+    batched_instructions: int = 0
+    #: number of execute_batch calls those instructions collapsed into
+    batches: int = 0
     #: per-link totals, (src_worker, dst_worker) -> [messages, bytes]; a key
     #: with src == this worker is outgoing traffic, dst == this worker
     #: incoming.  Counted by the engine thread itself (thread-confined, so
@@ -87,9 +93,11 @@ class Engine:
                  storage: StorageBackend | None = None,
                  net: PartyView | None = None,
                  io_threads: int = 2,
-                 use_memmap: bool = False):
+                 use_memmap: bool = False,
+                 batch_schedule: Any = None):
         self.prog = program
         self.driver = driver
+        self.batch_schedule = batch_schedule
         psize = program.page_slots
         page_shape = (psize, driver.lane)
         if program.phase == "virtual":
@@ -140,7 +148,11 @@ class Engine:
         # try/finally: a mid-run driver/storage exception must not leak the
         # AsyncIO thread pool or an open (possibly temp-file) backend.
         try:
-            self._run_loop(on_output)
+            if self.batch_schedule is not None \
+                    and hasattr(self.driver, "execute_batch"):
+                self._run_loop_batched(on_output)
+            else:
+                self._run_loop(on_output)
         finally:
             self.stats.io_read_bytes = self.io.bytes_read
             self.stats.io_write_bytes = self.io.bytes_written
@@ -148,9 +160,61 @@ class Engine:
         return self.stats
 
     def _run_loop(self, on_output) -> None:
+        exec_one = self._exec_one
+        for instr in self._instructions():
+            exec_one(instr, on_output)
+        self.driver.finalize()
+
+    def _run_loop_batched(self, on_output) -> None:
+        """The exec/ fast path: walk the precomputed batch schedule.
+
+        Batchable groups (same op, uniform shape, mutually independent;
+        see exec/batching.py) go through ``driver.execute_batch`` as
+        gathered span columns; everything else — barriers, ops outside
+        the driver's ``batch_ops``, singleton groups — replays through
+        the scalar ``_exec_one`` reference path in schedule order."""
+        drv = self.driver
+        sched = self.batch_schedule
+        sched.validate_for(self.prog)
+        batch_ops = getattr(drv, "batch_ops", frozenset())
+        order, bounds = sched.order, sched.bounds
+        group_op, chunk_groups = sched.group_op, sched.chunk_groups
+        ci = 0
+        for start, rec, instrs in iter_record_chunks(self.prog,
+                                                     sched.chunk_instrs,
+                                                     cache=True):
+            for g in range(chunk_groups[ci], chunk_groups[ci + 1]):
+                rows = order[bounds[g]:bounds[g + 1]]
+                gop = int(group_op[g])
+                if gop >= 0 and len(rows) >= 2 and rec is not None \
+                        and Op(gop) in batch_ops:
+                    self._exec_batch(Op(gop), rec, rows)
+                elif instrs is not None:
+                    for r in rows:
+                        self._exec_one(instrs[r], on_output)
+                else:
+                    for ins in decode_chunk(rec[rows]):
+                        self._exec_one(ins, on_output)
+            ci += 1
+        drv.finalize()
+
+    def _exec_batch(self, op: Op, rec: np.ndarray, rows: np.ndarray) -> None:
+        r0 = rec[rows[0]]
+        _, n_outs, n_ins, n_imm = unpack_heads(r0[0])
+        imm = tuple(int(r0[_IMM_OFF + j]) for j in range(n_imm))
+        out_idx = [(rec[rows, _OUT_OFF + 2 * j],
+                    int(r0[_OUT_OFF + 1 + 2 * j])) for j in range(n_outs)]
+        in_idx = [(rec[rows, _IN_OFF + 2 * j],
+                   int(r0[_IN_OFF + 1 + 2 * j])) for j in range(n_ins)]
+        self.driver.execute_batch(op, imm, out_idx, in_idx, self.memory)
+        self.stats.instructions += len(rows)
+        self.stats.batched_instructions += len(rows)
+        self.stats.batches += 1
+
+    def _exec_one(self, instr: Instr, on_output) -> None:
         drv = self.driver
         w = self.prog.worker
-        for instr in self._instructions():
+        if True:
             op = instr.op
             if op == Op.SWAP_IN:
                 self.stats.directives += 1
@@ -211,7 +275,7 @@ class Engine:
                 # instruction semantic.
                 self.stats.directives += 1
             elif op == Op.FREE:
-                continue
+                pass
             elif op == Op.OUTPUT:
                 self.stats.instructions += 1
                 views = [self._view(s) for s in instr.ins]
@@ -223,4 +287,3 @@ class Engine:
                 drv.execute(op, instr.imm,
                             [self._view(s) for s in instr.outs],
                             [self._view(s) for s in instr.ins])
-        drv.finalize()

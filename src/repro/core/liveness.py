@@ -260,16 +260,41 @@ def flat_touches(rec: np.ndarray, shift: int, psize: int
         flags[rows, slots]
 
 
+class _NextUseCarry:
+    """Earliest known next-touch / next-read per page across the already-
+    visited (later) chunks of the reverse scan.
+
+    Dense grow-on-demand int64 arrays instead of int→int dicts: page ids
+    are small consecutive integers here, so a direct gather/scatter
+    replaces millions of boxed-int dict probes on paper-scale traces
+    (same doubling pattern as ``working_set_pages_stream``)."""
+
+    __slots__ = ("any", "read")
+
+    def __init__(self, cap: int = 1024):
+        self.any = np.full(cap, INF, dtype=np.int64)
+        self.read = np.full(cap, INF, dtype=np.int64)
+
+    def ensure(self, max_page: int) -> None:
+        cap = self.any.shape[0]
+        if max_page < cap:
+            return
+        grow = max(max_page + 1, 2 * cap)
+        for name in self.__slots__:
+            arr = np.full(grow, INF, dtype=np.int64)
+            arr[:cap] = getattr(self, name)
+            setattr(self, name, arr)
+
+
 def _chunk_next_use(tl_page: np.ndarray, tl_flags: np.ndarray,
-                    gi: np.ndarray, carry_any: dict[int, int],
-                    carry_read: dict[int, int]
+                    gi: np.ndarray, carry: _NextUseCarry
                     ) -> tuple[np.ndarray, np.ndarray]:
     """Vectorized next_any/next_read for one chunk's flat touch list.
 
     ``gi`` is the global instruction index per touch; chunks must be
-    visited in *reverse* program order — the carry dicts hold the earliest
+    visited in *reverse* program order — ``carry`` holds the earliest
     known next-touch / next-read per page across already-visited (later)
-    chunks and are updated in place."""
+    chunks and is updated in place."""
     nt = len(gi)
     t_any = np.empty(nt, dtype=np.int64)
     t_read = np.empty(nt, dtype=np.int64)
@@ -284,16 +309,14 @@ def _chunk_next_use(tl_page: np.ndarray, tl_flags: np.ndarray,
     seg_id = np.cumsum(seg_start) - 1
     seg_first = np.where(seg_start)[0]
     upages = spage[seg_first]
+    carry.ensure(int(upages[-1]))          # upages is sorted ascending
 
     has_next = np.zeros(nt, dtype=bool)
     has_next[:-1] = spage[:-1] == spage[1:]
     nxt_in_chunk = np.empty(nt, dtype=np.int64)
     nxt_in_chunk[:-1] = sgi[1:]
     nxt_in_chunk[-1] = INF
-    c_any = np.fromiter(
-        (carry_any.get(int(p), INF) for p in upages),
-        np.int64, len(upages))
-    s_any = np.where(has_next, nxt_in_chunk, c_any[seg_id])
+    s_any = np.where(has_next, nxt_in_chunk, carry.any[upages][seg_id])
 
     # suffix-min of read positions within each page segment
     sent = nt
@@ -304,25 +327,19 @@ def _chunk_next_use(tl_page: np.ndarray, tl_flags: np.ndarray,
     incl = np.minimum.accumulate(key[::-1])[::-1] - seg_id * big
     excl = np.full(nt, sent, dtype=np.int64)
     excl[:-1] = np.where(has_next[:-1], incl[1:], sent)
-    c_read = np.fromiter(
-        (carry_read.get(int(p), INF) for p in upages),
-        np.int64, len(upages))
     s_read = np.where(excl < sent,
                       sgi[np.minimum(excl, nt - 1)],
-                      c_read[seg_id])
+                      carry.read[upages][seg_id])
 
     t_any[order] = s_any
     t_read[order] = s_read
 
     # carries: this chunk is *earlier* in the program than everything
     # processed so far
-    first_gi = sgi[seg_first]
     first_rd = incl[seg_first]
-    for ui in range(len(upages)):
-        p = int(upages[ui])
-        carry_any[p] = int(first_gi[ui])
-        if first_rd[ui] < sent:
-            carry_read[p] = int(sgi[first_rd[ui]])
+    carry.any[upages] = sgi[seg_first]
+    has_rd = first_rd < sent
+    carry.read[upages[has_rd]] = sgi[first_rd[has_rd]]
     return t_any, t_read
 
 
@@ -333,8 +350,7 @@ def annotate_next_use(pf: ProgramFile, ann_path: str | os.PathLike,
     ann_path = os.fspath(ann_path)
     shift = pf.page_shift
     psize = pf.page_slots
-    carry_any: dict[int, int] = {}
-    carry_read: dict[int, int] = {}
+    carry = _NextUseCarry()
     num_pages = 0
     max_touches = 0
     crc = 0
@@ -350,8 +366,7 @@ def annotate_next_use(pf: ProgramFile, ann_path: str | os.PathLike,
             ann[:, 0] = counts
             if nt:
                 t_any, t_read = _chunk_next_use(tl_page, tl_flags,
-                                                start + rows,
-                                                carry_any, carry_read)
+                                                start + rows, carry)
                 row_start = np.zeros(m, dtype=np.int64)
                 np.cumsum(counts[:-1], out=row_start[1:])
                 ordinal = np.arange(nt, dtype=np.int64) - \
@@ -383,14 +398,12 @@ def touches_from_records(rec: np.ndarray, shift: int, psize: int,
     record format cannot express (page-straddling spans, FREEs); callers
     fall back to the scalar :func:`compute_touches`."""
     n = rec.shape[0]
-    carry_any: dict[int, int] = {}
-    carry_read: dict[int, int] = {}
+    carry = _NextUseCarry()
     parts = []
     for s in reversed(range(0, n, chunk_instrs)):
         sub = rec[s:s + chunk_instrs]
         counts, rows, pg, fl = flat_touches(sub, shift, psize)
-        t_any, t_read = _chunk_next_use(pg, fl, s + rows,
-                                        carry_any, carry_read)
+        t_any, t_read = _chunk_next_use(pg, fl, s + rows, carry)
         parts.append((counts, pg, fl, t_any, t_read))
     parts.reverse()
     if parts:

@@ -36,15 +36,19 @@ from .liveness import (ANN_TOUCH_SLOTS, ANN_WORDS, W_FULL_WRITE, W_WRITE,
 
 
 class EvictionPolicy:
-    """Planner calls touch() on every page touch and evict() on frame need."""
+    """Planner calls touch() on every page touch and evict() on frame need.
+
+    ``resident`` / ``dirty`` are mappings/sets of page ids — plain dict/set
+    or the scalar core's dense-array equivalents (:class:`_DensePageMap` /
+    :class:`_DensePageSet`); policies must only rely on membership,
+    indexing and iteration."""
 
     name = "abstract"
 
     def touch(self, page: int, next_use: int, now: int) -> None:
         raise NotImplementedError
 
-    def evict(self, pinned: set[int], resident: dict[int, int],
-              dirty: set[int]) -> int:
+    def evict(self, pinned: set[int], resident, dirty) -> int:
         raise NotImplementedError
 
     def remove(self, page: int) -> None:
@@ -223,17 +227,112 @@ class ReplacementStats:
 _TouchRow = tuple[int, int, int, int]
 _AnnotatedInstr = tuple[Instr, list[_TouchRow]]
 
+_MISSING = object()
+
+
+class _DensePageMap:
+    """int→int map over a grow-on-demand page-indexed int64 array.
+
+    Drop-in for the dicts the scalar core keeps per page (software page
+    table, per-page next-read): page ids are dense small integers here,
+    so direct array indexing replaces boxed-int hashing on every touch.
+    Values are non-negative (frames, instruction indices, INF); -1 marks
+    absent.  Exposes the dict surface the eviction policies consume
+    (membership, indexing, ``pop``, ``len``, iteration)."""
+
+    __slots__ = ("_arr", "_n")
+
+    def __init__(self, cap: int = 1024):
+        self._arr = np.full(cap, -1, dtype=np.int64)
+        self._n = 0
+
+    def _ensure(self, p: int) -> None:
+        cap = self._arr.shape[0]
+        if p >= cap:
+            arr = np.full(max(p + 1, 2 * cap), -1, dtype=np.int64)
+            arr[:cap] = self._arr
+            self._arr = arr
+
+    def __contains__(self, p: int) -> bool:
+        return 0 <= p < self._arr.shape[0] and self._arr[p] >= 0
+
+    def __getitem__(self, p: int) -> int:
+        if p not in self:
+            raise KeyError(p)
+        return int(self._arr[p])
+
+    def __setitem__(self, p: int, v: int) -> None:
+        self._ensure(p)
+        if self._arr[p] < 0:
+            self._n += 1
+        self._arr[p] = v
+
+    def pop(self, p: int, default=_MISSING) -> int:
+        if p in self:
+            v = int(self._arr[p])
+            self._arr[p] = -1
+            self._n -= 1
+            return v
+        if default is _MISSING:
+            raise KeyError(p)
+        return default
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        return iter(np.nonzero(self._arr >= 0)[0].tolist())
+
+    def keys(self):
+        return iter(self)
+
+
+class _DensePageSet:
+    """Set of page ids over a grow-on-demand boolean array (see
+    :class:`_DensePageMap` for why arrays beat dict/set here)."""
+
+    __slots__ = ("_arr", "_n")
+
+    def __init__(self, cap: int = 1024):
+        self._arr = np.zeros(cap, dtype=bool)
+        self._n = 0
+
+    def add(self, p: int) -> None:
+        cap = self._arr.shape[0]
+        if p >= cap:
+            arr = np.zeros(max(p + 1, 2 * cap), dtype=bool)
+            arr[:cap] = self._arr
+            self._arr = arr
+        if not self._arr[p]:
+            self._n += 1
+            self._arr[p] = True
+
+    def discard(self, p: int) -> None:
+        if p in self:
+            self._arr[p] = False
+            self._n -= 1
+
+    def __contains__(self, p: int) -> bool:
+        return 0 <= p < self._arr.shape[0] and bool(self._arr[p])
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        return iter(np.nonzero(self._arr)[0].tolist())
+
 
 def _replacement_core(items: Iterable[_AnnotatedInstr], num_frames: int,
                       pol: EvictionPolicy, shift: int, psize: int,
                       emit: Callable[[Instr], None],
                       stats: ReplacementStats) -> None:
-    """Streaming Belady transducer: O(frames + pages-on-storage) state."""
-    page_table: dict[int, int] = {}          # vpage -> frame
+    """Streaming Belady transducer: O(frames + pages-on-storage) state
+    (dense page-indexed arrays; see :class:`_DensePageMap`)."""
+    page_table = _DensePageMap()             # vpage -> frame
     free_frames = list(range(num_frames - 1, -1, -1))
-    dirty: set[int] = set()
-    stored: set[int] = set()                 # storage holds current content
-    cur_next_read: dict[int, int] = {}       # resident pages only
+    dirty = _DensePageSet()
+    stored = _DensePageSet()                 # storage holds current content
+    cur_next_read = _DensePageMap()          # resident pages only
 
     def acquire_frame(pinned: set[int]) -> int:
         if free_frames:

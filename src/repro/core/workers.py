@@ -169,6 +169,10 @@ class EngineJob:
     use_memmap: bool = False
     on_output: Callable | None = None
     tag: Any = None
+    #: optional exec/ batch schedule (see repro.exec.batching); engines run
+    #: the batched fast path when both this and a batch-capable driver are
+    #: present, the scalar reference loop otherwise
+    batch_schedule: Any = None
 
 
 def run_engines(jobs: Sequence[EngineJob],
@@ -182,7 +186,8 @@ def run_engines(jobs: Sequence[EngineJob],
         try:
             eng = Engine(job.program, job.driver, storage=job.storage,
                          net=job.net, io_threads=io_threads,
-                         use_memmap=job.use_memmap)
+                         use_memmap=job.use_memmap,
+                         batch_schedule=job.batch_schedule)
             results[k] = eng.run(on_output=job.on_output)
         except Exception as e:  # surfaced below
             errors.append((job.tag if job.tag is not None else k, e))

@@ -1,0 +1,31 @@
+"""Batched compiled execution backend (docs/ENGINE.md).
+
+Three layers:
+
+* :mod:`repro.exec.batching`    — plan-derived batch schedules (the
+  sidecar artifact; built once per plan, cached by ``plan_hash``);
+* :mod:`repro.exec.base`        — the ``BatchedProtocolDriver`` contract
+  and gather/scatter helpers;
+* :mod:`repro.exec.batched_gc` / :mod:`repro.exec.batched_ckks` — the
+  protocol batch kernels (numpy-vectorized on CPU, Pallas-compiled when a
+  real XLA backend is present).
+
+``Engine.run`` walks a :class:`~repro.exec.batching.BatchSchedule` when
+one is attached and the driver implements ``execute_batch``; otherwise it
+interprets instruction by instruction (the scalar reference path).
+"""
+
+from .base import BatchedProtocolDriver, make_batched
+from .batched_ckks import BatchedCkksDriver
+from .batched_gc import BatchedGCDriver, BatchedPlaintextDriver
+from .batching import BatchSchedule, build_batch_schedule
+
+__all__ = [
+    "BatchSchedule",
+    "BatchedCkksDriver",
+    "BatchedGCDriver",
+    "BatchedPlaintextDriver",
+    "BatchedProtocolDriver",
+    "build_batch_schedule",
+    "make_batched",
+]

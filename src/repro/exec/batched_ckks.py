@@ -1,0 +1,110 @@
+"""Batched CKKS driver: vectorized RNS ciphertext arithmetic over groups.
+
+CKKS ops are pure modular arithmetic over per-prime residue planes, and the
+numpy NTT (``protocols.ckks.ntt``) already vectorizes over arbitrary
+leading axes — so a batch of ``count`` independent CT_ADD / CT_ADD_PLAIN /
+CT_MUL_NR instructions collapses to one broadcasted expression (or one
+leading-dim NTT sweep) per prime.  All primes are < 2^31, so uint64 sums
+and products of residues never overflow and the batched formulas replay the
+scalar ``CkksContext`` arithmetic bit for bit.
+
+CT_MUL / CT_RELIN / INPUT / OUTPUT stay scalar: relinearization walks the
+eval-key digit structure and INPUT consumes the driver RNG, both of which
+are cheaper to keep on the reference path than to batch (and INPUT must
+preserve RNG order anyway — the schedule builder pins it as a barrier).
+
+With a compiled XLA backend present (``kernels.use_pallas``), the NTT
+sweeps route through the Pallas kernels (``kernels.ntt.ops``), proven
+bitwise-identical to the numpy transform.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.bytecode import Op
+from ..kernels import use_pallas
+from ..kernels.ntt import ops as ntt_ops
+from ..protocols.ckks import ntt as ntt_np
+from ..protocols.ckks.driver import CkksDriver
+from .base import (BatchedProtocolDriver, SpanCol, gather_spans,
+                   scatter_spans)
+
+
+class BatchedCkksDriver(BatchedProtocolDriver):
+    batch_ops = frozenset({Op.COPY, Op.CT_ADD, Op.CT_ADD_PLAIN,
+                           Op.CT_MUL_NR})
+
+    def __init__(self, inner: CkksDriver):
+        super().__init__(inner)
+        self.p = inner.p
+
+    def _ntt(self):
+        if use_pallas():
+            return (lambda a, q: ntt_ops.ntt_forward(a, q, interpret=False),
+                    lambda a, q: ntt_ops.ntt_inverse(a, q, interpret=False))
+        return ntt_np.ntt_forward, ntt_np.ntt_inverse
+
+    def _cts(self, memory: np.ndarray, col: SpanCol, level: int,
+             ncomp: int = 2) -> np.ndarray:
+        """(count, ncomp, level+1, n_ring) gathered ciphertext columns."""
+        count = len(col[0])
+        return gather_spans(memory, col)[:, :, 0].reshape(
+            count, ncomp, level + 1, self.p.n_ring)
+
+    def execute_batch(self, op: Op, imm: tuple, out_idx: list[SpanCol],
+                      in_idx: list[SpanCol], memory: np.ndarray) -> None:
+        p = self.p
+        if op == Op.COPY:
+            scatter_spans(memory, out_idx[0],
+                          gather_spans(memory, in_idx[0]))
+            return
+        level = imm[0]
+        primes = p.level_primes(level)
+        count = len(out_idx[0][0])
+        # (1, level+1, 1): broadcasts over (count, level+1, n_ring) planes
+        qs = np.asarray(primes, dtype=np.uint64)[None, :, None]
+        if op == Op.CT_ADD:
+            nc1, nc2 = imm[1], imm[2]
+            sub = bool(imm[3]) if len(imm) > 3 else False
+            A = self._cts(memory, in_idx[0], level, nc1)
+            B = self._cts(memory, in_idx[1], level, nc2)
+            nc = max(nc1, nc2)
+            out = np.zeros((count, nc, level + 1, p.n_ring),
+                           dtype=np.uint64)
+            for k in range(nc):
+                x = A[:, k] if k < nc1 else np.uint64(0)
+                y = B[:, k] if k < nc2 else np.uint64(0)
+                out[:, k] = ((x + qs - y % qs) if sub else (x + y)) % qs
+            scatter_spans(memory, out_idx[0],
+                          out.reshape(count, -1, 1))
+        elif op == Op.CT_ADD_PLAIN:
+            ct = self._cts(memory, in_idx[0], level)
+            # encoded plaintexts span the FULL prime chain; add uses the
+            # first level+1 planes (scalar add_plain indexes per level prime)
+            pt = gather_spans(memory, in_idx[1])[:, :, 0].reshape(
+                count, p.levels + 1, p.n_ring)[:, :level + 1]
+            out = ct.copy()
+            out[:, 0] = (ct[:, 0] + pt) % qs
+            scatter_spans(memory, out_idx[0],
+                          out.reshape(count, -1, 1))
+        elif op == Op.CT_MUL_NR:
+            fwd, inv = self._ntt()
+            c1 = self._cts(memory, in_idx[0], level)
+            c2 = self._cts(memory, in_idx[1], level)
+            out = np.zeros((count, 3, level + 1, p.n_ring),
+                           dtype=np.uint64)
+            for j, qj in enumerate(primes):
+                qq = np.uint64(qj)
+                a0 = fwd(c1[:, 0, j] % qq, qj)
+                a1 = fwd(c1[:, 1, j] % qq, qj)
+                b0 = fwd(c2[:, 0, j] % qq, qj)
+                b1 = fwd(c2[:, 1, j] % qq, qj)
+                out[:, 0, j] = inv((a0 * b0) % qq, qj)
+                out[:, 1, j] = inv(((a0 * b1) % qq + (a1 * b0) % qq) % qq,
+                                   qj)
+                out[:, 2, j] = inv((a1 * b1) % qq, qj)
+            scatter_spans(memory, out_idx[0],
+                          out.reshape(count, -1, 1))
+        else:  # pragma: no cover - engine checks batch_ops first
+            raise NotImplementedError(f"batched ckks: {op}")

@@ -1,0 +1,256 @@
+"""Batched drivers for the GC protocol family (garbler/evaluator and the
+plaintext oracle).
+
+The GC drivers are elementwise over the value axis: an ADD of n values is n
+independent ripple-carry subcircuits.  A batch of ``count`` independent
+ADDs is therefore exactly one ADD of ``count * n`` values — gather the
+label columns, stack them on the value axis, and run the *same*
+``AndXorOps`` subcircuit code once.  Bit-level gates (XOR/AND/OR/NOT)
+flatten all the way to one ``Gates`` call per batch, which also collapses
+the per-column garbled-table messages into one table message per batch.
+
+Both parties derive the identical batch schedule from the identical plan,
+so their gate-id streams and table messages stay in lockstep — the same
+lockstep argument the scalar drivers rely on, applied to the reordered
+stream.  Revealed outputs are plaintext values and match the scalar run
+bitwise; the digest tests assert exactly that.
+
+When a compiled XLA backend is present (``kernels.use_pallas``), AND gates
+route through the Pallas half-gates kernels (``kernels.garble.ops``),
+which are proven bitwise-identical to the numpy gates; on CPU the numpy
+gates run directly (compiled ``pallas_call`` cannot lower on the CPU
+backend).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.bytecode import Op
+from ..kernels import use_pallas
+from ..kernels.garble import ops as garble_ops
+from ..protocols.garbled.driver import PlaintextDriver, _GCDriverBase
+from ..protocols.garbled.gates import GarblerGates
+from .base import (BatchedProtocolDriver, SpanCol, gather_spans,
+                   scatter_spans, strided_positions)
+
+_GC_BATCH_OPS = frozenset({
+    Op.COPY, Op.XOR, Op.AND, Op.OR, Op.NOT, Op.ADD, Op.SUB, Op.MUL,
+    Op.CMP_GE, Op.CMP_EQ, Op.SELECT, Op.MINMAX, Op.REVERSE,
+    Op.SORT_LOCAL,
+})
+
+
+def _sort_network(n: int, direction_up: bool, merge_only: bool):
+    """Yield the public bitonic-network steps ``(lo, hi, up)`` exactly as
+    ``engineops.sort_local`` walks them — the layout only depends on
+    ``(n, direction, merge_only)``, never on the data, so a batch of
+    independent sorts shares one walk."""
+    k = 2 * n if merge_only else 2
+    while (k <= 2 * n) if merge_only else (k <= n):
+        j = min(k, n) // 2 if merge_only else k // 2
+        while j >= 1:
+            idx = np.arange(n)
+            partner = idx ^ j
+            lo = idx[idx < partner]
+            hi = lo ^ j
+            if merge_only:
+                up = np.full(len(lo), direction_up)
+            else:
+                up = ((lo & k) == 0) == direction_up
+            yield lo, hi, up
+            j //= 2
+        if merge_only:
+            break
+        k *= 2
+
+
+class BatchedGCDriver(BatchedProtocolDriver):
+    """Batched garbler/evaluator driver (wraps a ``_GCDriverBase``)."""
+
+    batch_ops = _GC_BATCH_OPS
+
+    def __init__(self, inner: _GCDriverBase):
+        super().__init__(inner)
+        self.gates = inner.gates
+        self.ops = inner.ops
+        self._garbler = isinstance(inner.gates, GarblerGates)
+
+    # -- gate primitives over flat (m, 2) label arrays -----------------------
+
+    def _and_flat(self, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        g = self.gates
+        if not use_pallas():
+            return g.and_(a, b)
+        # compiled path: the Pallas half-gates kernels are bitwise-identical
+        # to the numpy gates (tests/test_kernels.py), so the table stream
+        # interoperates with either implementation on the far side
+        m = len(a)
+        gid0 = g.gid
+        g.gid += m
+        g.counts.ands += m
+        if self._garbler:
+            c0, tab = garble_ops.garble_and(a, b, g.R, gid0,
+                                            interpret=False)
+            g.ch.send("tab", tab)
+            return c0
+        tab = g.ch.recv("tab")
+        return garble_ops.eval_and(a, b, tab, gid0, interpret=False)
+
+    def _bit_flat(self, op: Op, a: np.ndarray,
+                  b: np.ndarray | None) -> np.ndarray:
+        g = self.gates
+        if op == Op.NOT:
+            return g.not_(a)
+        if op == Op.XOR:
+            return g.xor(a, b)
+        if op == Op.AND:
+            return self._and_flat(a, b)
+        return g.xor(g.xor(a, b), self._and_flat(a, b))  # OR
+
+    # -- the batch entry point ----------------------------------------------
+
+    def execute_batch(self, op: Op, imm: tuple, out_idx: list[SpanCol],
+                      in_idx: list[SpanCol], memory: np.ndarray) -> None:
+        if op == Op.COPY:
+            scatter_spans(memory, out_idx[0],
+                          gather_spans(memory, in_idx[0]))
+            return
+        n, w = imm[0], imm[1]
+        count = len(out_idx[0][0])
+        o = self.ops
+
+        def stacked(col: SpanCol, ww: int) -> np.ndarray:
+            # (count, n*ww, 2) labels -> (count*n, ww, 2): batch on the
+            # value axis, where every GC subcircuit is elementwise
+            return gather_spans(memory, col).reshape(count * n, ww, 2)
+
+        def put(col: SpanCol, r: np.ndarray) -> None:
+            scatter_spans(memory, col, r.reshape(count, -1, 2))
+
+        if op in (Op.XOR, Op.AND, Op.OR, Op.NOT):
+            a = gather_spans(memory, in_idx[0]).reshape(-1, 2)
+            b = None if op == Op.NOT else \
+                gather_spans(memory, in_idx[1]).reshape(-1, 2)
+            put(out_idx[0], self._bit_flat(op, a, b))
+        elif op == Op.ADD:
+            put(out_idx[0], o.add(stacked(in_idx[0], w),
+                                  stacked(in_idx[1], w)))
+        elif op == Op.SUB:
+            put(out_idx[0], o.sub(stacked(in_idx[0], w),
+                                  stacked(in_idx[1], w)))
+        elif op == Op.MUL:
+            put(out_idx[0], o.mul(stacked(in_idx[0], w),
+                                  stacked(in_idx[1], w)))
+        elif op == Op.CMP_GE:
+            put(out_idx[0], o.cmp_ge(stacked(in_idx[0], w),
+                                     stacked(in_idx[1], w), imm[2]))
+        elif op == Op.CMP_EQ:
+            put(out_idx[0], o.cmp_eq(stacked(in_idx[0], w),
+                                     stacked(in_idx[1], w), imm[2]))
+        elif op == Op.SELECT:
+            put(out_idx[0], o.select(stacked(in_idx[0], 1),
+                                     stacked(in_idx[1], w),
+                                     stacked(in_idx[2], w)))
+        elif op == Op.MINMAX:
+            mn, mx = o.minmax(stacked(in_idx[0], w),
+                              stacked(in_idx[1], w), imm[2])
+            put(out_idx[0], mn)
+            put(out_idx[1], mx)
+        elif op == Op.REVERSE:
+            x = gather_spans(memory, in_idx[0]).reshape(count, n, w, 2)
+            put(out_idx[0], x[:, ::-1])
+        elif op == Op.SORT_LOCAL:
+            kw = imm[2]
+            desc = bool(imm[3]) if len(imm) > 3 else False
+            merge_only = bool(imm[4]) if len(imm) > 4 else False
+            # count independent bitonic networks over the same public
+            # layout: each compare-exchange step is ONE minmax over the
+            # stacked (count * pairs) columns instead of count calls
+            v = gather_spans(memory, in_idx[0]).reshape(count, n, w, 2)
+            for lo, hi, up in _sort_network(n, not desc, merge_only):
+                p = len(lo)
+                mn, mx = o.minmax(v[:, lo].reshape(count * p, w, 2),
+                                  v[:, hi].reshape(count * p, w, 2), kw)
+                mn = mn.reshape(count, p, w, 2)
+                mx = mx.reshape(count, p, w, 2)
+                sel = up[None, :, None, None]
+                new = np.array(v)
+                new[:, lo] = np.where(sel, mn, mx)
+                new[:, hi] = np.where(sel, mx, mn)
+                v = new
+            put(out_idx[0], v)
+        else:  # pragma: no cover - engine checks batch_ops first
+            raise NotImplementedError(f"batched GC: {op}")
+
+
+class BatchedPlaintextDriver(BatchedProtocolDriver):
+    """Batched plaintext oracle: the vectorized mirror of
+    ``PlaintextDriver``'s stride-w value layout.  Writes exactly the slots
+    the scalar driver writes (stride positions only for value ops), so the
+    engine array stays bitwise identical to a scalar replay."""
+
+    batch_ops = _GC_BATCH_OPS
+
+    def __init__(self, inner: PlaintextDriver):
+        super().__init__(inner)
+
+    def execute_batch(self, op: Op, imm: tuple, out_idx: list[SpanCol],
+                      in_idx: list[SpanCol], memory: np.ndarray) -> None:
+        if op == Op.COPY:
+            scatter_spans(memory, out_idx[0],
+                          gather_spans(memory, in_idx[0]))
+            return
+        n, w = imm[0], imm[1]
+        mask = PlaintextDriver._m
+
+        def val(col: SpanCol, stride: int) -> np.ndarray:
+            return memory[strided_positions(col, n, stride), 0]
+
+        def put(col: SpanCol, stride: int, vals: np.ndarray) -> None:
+            memory[strided_positions(col, n, stride), 0] = vals
+
+        if op == Op.ADD:
+            put(out_idx[0], w, (val(in_idx[0], w) + val(in_idx[1], w))
+                & mask(w))
+        elif op == Op.SUB:
+            put(out_idx[0], w, (val(in_idx[0], w) - val(in_idx[1], w))
+                & mask(w))
+        elif op == Op.MUL:
+            put(out_idx[0], w, (val(in_idx[0], w) * val(in_idx[1], w))
+                & mask(w))
+        elif op == Op.XOR:
+            put(out_idx[0], w, val(in_idx[0], w) ^ val(in_idx[1], w))
+        elif op == Op.AND:
+            put(out_idx[0], w, val(in_idx[0], w) & val(in_idx[1], w))
+        elif op == Op.OR:
+            put(out_idx[0], w, val(in_idx[0], w) | val(in_idx[1], w))
+        elif op == Op.NOT:
+            put(out_idx[0], w, (~val(in_idx[0], w)) & mask(w))
+        elif op in (Op.CMP_GE, Op.CMP_EQ):
+            km = mask(imm[2])
+            a, b = val(in_idx[0], w) & km, val(in_idx[1], w) & km
+            r = (a >= b) if op == Op.CMP_GE else (a == b)
+            put(out_idx[0], 1, r.astype(np.uint64))
+        elif op == Op.SELECT:
+            put(out_idx[0], w, np.where(val(in_idx[0], 1).astype(bool),
+                                        val(in_idx[1], w),
+                                        val(in_idx[2], w)))
+        elif op == Op.MINMAX:
+            km = mask(imm[2])
+            a, b = val(in_idx[0], w), val(in_idx[1], w)
+            ge = (a & km) >= (b & km)
+            put(out_idx[0], w, np.where(ge, b, a))
+            put(out_idx[1], w, np.where(ge, a, b))
+        elif op == Op.REVERSE:
+            put(out_idx[0], w, val(in_idx[0], w)[:, ::-1])
+        elif op == Op.SORT_LOCAL:
+            km = mask(imm[2])
+            desc = bool(imm[3]) if len(imm) > 3 else False
+            v = val(in_idx[0], w)
+            order = np.argsort(v & km, axis=1, kind="stable")
+            if desc:
+                order = order[:, ::-1]
+            put(out_idx[0], w, np.take_along_axis(v, order, axis=1))
+        else:  # pragma: no cover - engine checks batch_ops first
+            raise NotImplementedError(f"batched plaintext: {op}")

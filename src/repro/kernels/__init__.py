@@ -10,8 +10,44 @@
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public API + layout adapters), ref.py (pure-jnp oracle).  Validated in
 interpret mode on CPU; TPU is the lowering target.
+
+Interpret-mode selection: compiled ``pallas_call`` cannot lower on the CPU
+backend, so every ops.py entry point defaults ``interpret=None`` and
+resolves it through :func:`resolve_interpret` — compiled when a real XLA
+accelerator backend is present, interpret otherwise.  Setting
+``REPRO_PALLAS_INTERPRET=1`` forces interpret mode everywhere (the escape
+hatch for debugging kernels on accelerator hosts).
 """
 
-from . import garble, ntt, paged_attn
+from __future__ import annotations
 
-__all__ = ["garble", "ntt", "paged_attn"]
+import functools
+import os
+
+
+@functools.lru_cache(maxsize=1)
+def _default_backend() -> str:
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax import/init failure
+        return "cpu"
+
+
+def use_pallas() -> bool:
+    """True when compiled ``pallas_call`` can actually lower here: a
+    non-CPU XLA backend is present and the escape hatch is not set."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET") == "1":
+        return False
+    return _default_backend() != "cpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` -> auto (compiled iff a real backend is present); an
+    explicit bool is honored as-is."""
+    return (not use_pallas()) if interpret is None else interpret
+
+
+from . import garble, ntt, paged_attn  # noqa: E402
+
+__all__ = ["garble", "ntt", "paged_attn", "resolve_interpret", "use_pallas"]

@@ -1,8 +1,8 @@
 """Jit'd public API for the garbling kernels + uint64<->uint32 adapters.
 
 The protocol driver stores labels as (m, 2) uint64; the TPU kernel wants
-(m, 4) uint32 lanes.  On CPU the kernels run in interpret mode (the default
-here); on TPU pass interpret=False.
+(m, 4) uint32 lanes.  ``interpret=None`` auto-selects: compiled on a real
+XLA backend, interpret mode on CPU (see ``kernels.resolve_interpret``).
 """
 
 from __future__ import annotations
@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from .. import resolve_interpret
 from . import kernel, ref
 
 
@@ -32,11 +33,16 @@ def _pad(x: np.ndarray, block: int) -> tuple[np.ndarray, int]:
 
 def garble_and(a0_u64: np.ndarray, b0_u64: np.ndarray, r_u64: np.ndarray,
                gid0: int, *, use_kernel: bool = True,
-               interpret: bool = True,
+               interpret: bool | None = None,
                block_m: int = 64) -> tuple[np.ndarray, np.ndarray]:
     """Batch half-gates garble; uint64-pair API matching the driver.
 
     Returns (c0 (m,2) uint64, tables (m,4) uint64)."""
+    if len(a0_u64) == 0:
+        # empty batch: the grid would be 0 blocks, which pallas rejects
+        return (np.zeros((0, 2), dtype=np.uint64),
+                np.zeros((0, 4), dtype=np.uint64))
+    interpret = resolve_interpret(interpret)
     a = u64_to_u32(a0_u64)
     b = u64_to_u32(b0_u64)
     r = u64_to_u32(r_u64.reshape(1, 2))[0]
@@ -54,8 +60,12 @@ def garble_and(a0_u64: np.ndarray, b0_u64: np.ndarray, r_u64: np.ndarray,
 
 
 def eval_and(wa_u64: np.ndarray, wb_u64: np.ndarray, tables_u64: np.ndarray,
-             gid0: int, *, use_kernel: bool = True, interpret: bool = True,
+             gid0: int, *, use_kernel: bool = True,
+             interpret: bool | None = None,
              block_m: int = 64) -> np.ndarray:
+    if len(wa_u64) == 0:
+        return np.zeros((0, 2), dtype=np.uint64)
+    interpret = resolve_interpret(interpret)
     wa = u64_to_u32(wa_u64)
     wb = u64_to_u32(wb_u64)
     tab = np.ascontiguousarray(tables_u64).astype("<u8").view("<u4") \

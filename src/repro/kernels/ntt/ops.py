@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from ...protocols.ckks.ntt import ntt_tables
+from .. import resolve_interpret
 from . import kernel
+from ...protocols.ckks.ntt import ntt_tables
 
 
 def _pad(a: np.ndarray, block: int) -> tuple[np.ndarray, int]:
@@ -22,9 +23,10 @@ def _pad(a: np.ndarray, block: int) -> tuple[np.ndarray, int]:
     return a, b
 
 
-def ntt_forward(a_u64: np.ndarray, q: int, *, interpret: bool = True,
+def ntt_forward(a_u64: np.ndarray, q: int, *, interpret: bool | None = None,
                 block_b: int = 8) -> np.ndarray:
     """(B, N) uint64 coefficients -> bit-reversed NTT domain, via Pallas."""
+    interpret = resolve_interpret(interpret)
     psis, _, _ = ntt_tables(q, a_u64.shape[-1])
     a32, b = _pad(a_u64.astype(np.uint32), block_b)
     out = kernel.ntt_pallas(a32, psis.astype(np.uint32), q=q,
@@ -32,8 +34,9 @@ def ntt_forward(a_u64: np.ndarray, q: int, *, interpret: bool = True,
     return np.asarray(out)[:b].astype(np.uint64)
 
 
-def ntt_inverse(a_u64: np.ndarray, q: int, *, interpret: bool = True,
+def ntt_inverse(a_u64: np.ndarray, q: int, *, interpret: bool | None = None,
                 block_b: int = 8) -> np.ndarray:
+    interpret = resolve_interpret(interpret)
     n = a_u64.shape[-1]
     _, psis_inv, n_inv = ntt_tables(q, n)
     a32, b = _pad(a_u64.astype(np.uint32), block_b)
@@ -44,8 +47,10 @@ def ntt_inverse(a_u64: np.ndarray, q: int, *, interpret: bool = True,
 
 
 def negacyclic_mul(a_u64: np.ndarray, b_u64: np.ndarray, q: int, *,
-                   interpret: bool = True, block_b: int = 8) -> np.ndarray:
+                   interpret: bool | None = None,
+                   block_b: int = 8) -> np.ndarray:
     """Full polynomial multiply through the kernel path."""
+    interpret = resolve_interpret(interpret)
     fa = ntt_forward(a_u64, q, interpret=interpret, block_b=block_b)
     fb = ntt_forward(b_u64, q, interpret=interpret, block_b=block_b)
     fa32, bb = _pad(fa.astype(np.uint32), block_b)

@@ -4,12 +4,15 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .. import resolve_interpret
 from . import kernel, ref
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_table, seq_lens, *,
-                           use_kernel: bool = True, interpret: bool = True):
+                           use_kernel: bool = True,
+                           interpret: bool | None = None):
     """q: (batch, q_heads, head_dim) -> (batch, q_heads, head_dim) f32."""
+    interpret = resolve_interpret(interpret)
     batch, q_heads, head_dim = q.shape
     kv_heads = k_pages.shape[2]
     group = q_heads // kv_heads

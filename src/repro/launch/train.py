@@ -71,14 +71,16 @@ def train_loop(cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
                 report.rollbacks += 1
                 if ckpt_dir is None or rollbacks > fcfg.max_rollbacks:
                     raise RuntimeError("unrecoverable divergence")
-                last = ckpt.latest_step(ckpt_dir) or 0
+                if pending_save is not None:
+                    pending_save.join()  # roll back to the newest checkpoint
+                    pending_save = None
+                last = ckpt.latest_step(ckpt_dir)
                 params, opt_state = make_train_state(rng, cfg)
-                if ckpt.latest_step(ckpt_dir) is not None:
+                if last is not None:
                     params, opt_state, _ = ckpt.restore(ckpt_dir, last,
                                                         params, opt_state)
                 pf.close()
-                step = last if ckpt.latest_step(ckpt_dir) is not None else 0
-                step += 1  # deterministic skip past the bad batch
+                step = (last or 0) + 1  # deterministic skip past the bad batch
                 pf = Prefetcher(dcfg, step)
                 print(f"rollback -> step {step}")
                 continue

@@ -10,6 +10,8 @@ sessions, processes and daemon restarts.  Layout under one cache root::
                               worker0.ann           next-use sidecar
     <root>/plan/<plan_hash>/manifest.json
                             worker0.memory.bc       planned memory program
+    <root>/batch/<plan_hash>/manifest.json
+                             worker0.batch.npz      exec/ batch schedule
 
 Every entry's manifest records the sha256 + byte size of each artifact
 file, the spec that produced it, and (for plans) the resolved per-worker
@@ -63,6 +65,8 @@ class CacheStats:
     trace_misses: int = 0
     plan_hits: int = 0
     plan_misses: int = 0
+    batch_hits: int = 0
+    batch_misses: int = 0
     invalid: int = 0          # tampered/truncated entries rejected + deleted
     evictions: int = 0
     bytes_read: int = 0       # validated artifact bytes served from cache
@@ -107,13 +111,14 @@ class ArtifactCache:
         self._lock = threading.Lock()
         os.makedirs(os.path.join(self.root, "trace"), exist_ok=True)
         os.makedirs(os.path.join(self.root, "plan"), exist_ok=True)
+        os.makedirs(os.path.join(self.root, "batch"), exist_ok=True)
 
     # -- bookkeeping ---------------------------------------------------------
 
     def _entries(self) -> list[tuple[float, int, str]]:
         """(mtime, bytes, dir) per complete entry, oldest first."""
         out = []
-        for kind in ("trace", "plan"):
+        for kind in ("trace", "plan", "batch"):
             base = os.path.join(self.root, kind)
             for name in os.listdir(base):
                 d = os.path.join(base, name)
@@ -322,6 +327,53 @@ class ArtifactCache:
         cfgs = [PlanConfig(**d) for d in manifest["plan_configs"]]
         reports = [_report_from_dict(d) for d in manifest["reports"]]
         return progs, cfgs, reports
+
+    # -- batch schedules (exec/ backend sidecars) ----------------------------
+
+    def get_batch(self, spec, workload=None):
+        """Cached per-worker :class:`~repro.exec.batching.BatchSchedule`
+        sidecars for the spec's plan shape, or None.  Keyed by
+        ``plan_hash``: the schedule is a deterministic function of the
+        planned memory program, which is itself keyed the same way."""
+        from ..exec.batching import BatchSchedule
+        key = spec.plan_hash(workload)
+        got = self._load("batch", key)
+        with self._lock:
+            if got is None:
+                self.stats.batch_misses += 1
+            else:
+                self.stats.batch_hits += 1
+        if got is None:
+            return None
+        entry_dir, manifest = got
+        try:
+            return [BatchSchedule.load(os.path.join(entry_dir, n))
+                    for n in manifest["schedules"]]
+        except (OSError, ValueError, KeyError):
+            self._drop(entry_dir)
+            return None
+
+    def put_batch(self, spec, workload, schedules) -> None:
+        """Cache freshly built batch schedules (one npz per worker)."""
+        key = spec.plan_hash(workload)
+        entry_dir = os.path.join(self.root, "batch", key)
+        tmp = self._tmpdir("batch")
+        try:
+            names = []
+            for i, sched in enumerate(schedules):
+                name = f"worker{i}.batch.npz"
+                sched.save(os.path.join(tmp, name))
+                names.append(name)
+            # "programs" is always present (entry validation iterates it);
+            # batch entries carry sidecars, not bytecode
+            self._write_manifest(tmp, {
+                "kind": "batch", "key": key,
+                "spec": spec.normalized(workload).to_dict(),
+                "programs": [], "schedules": names})
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._publish(tmp, entry_dir)
 
     def put_plan(self, spec, workload, planned, cfgs, reports) -> None:
         """Cache planned memory programs (files are copied, the session

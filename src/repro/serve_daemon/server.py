@@ -236,6 +236,11 @@ class ServeDaemon:
                         resp["timings"]["execute_s"] = \
                             time.perf_counter() - t_exec
                         resp["outputs_digest"] = _outputs_digest(outputs)
+                        if sess.spec.exec_backend == "batched":
+                            # batch-schedule sidecar cache outcome; only
+                            # batched executes consult that cache kind
+                            resp["cache"]["batch"] = \
+                                sess.cache_events.get("batch", "skipped")
                         if req.get("return_outputs", False):
                             resp["outputs"] = {
                                 str(t): v.tolist()

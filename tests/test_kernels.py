@@ -130,6 +130,58 @@ def test_paged_attention_sweep(batch, qh, kvh, hd, psz, mp):
     np.testing.assert_allclose(out_k, out_ref, rtol=1e-4, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# odd shapes: the batched exec drivers hand the ops whatever group sizes
+# the schedule produced — singletons, empty tails, non-block multiples
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m", [0, 1, 37])
+def test_garble_ops_odd_batch(m):
+    rng = np.random.default_rng(m)
+    a = rng.integers(0, 2**63, (m, 2), dtype=np.uint64)
+    b = rng.integers(0, 2**63, (m, 2), dtype=np.uint64)
+    r = rng.integers(0, 2**63, 2, dtype=np.uint64)
+    r[0] |= 1
+    c0, tab = gops.garble_and(a, b, r, 5, block_m=16)
+    assert c0.shape == (m, 2) and tab.shape == (m, 4)
+    # evaluate all four truth-table rows against the garbler's c0
+    for bit_a in (0, 1):
+        for bit_b in (0, 1):
+            wa = a ^ (r[None] * np.uint64(bit_a))
+            wb = b ^ (r[None] * np.uint64(bit_b))
+            wc = gops.eval_and(wa, wb, tab, 5, block_m=16)
+            assert np.array_equal(
+                wc, c0 ^ (r[None] * np.uint64(bit_a & bit_b)))
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_ntt_odd_batch(k):
+    q = gen_primes(64, [29])[0]
+    rng = np.random.default_rng(k)
+    a = rng.integers(0, q, (k, 64), dtype=np.uint64)
+    b = rng.integers(0, q, (k, 64), dtype=np.uint64)
+    f = nops.ntt_forward(a, q)
+    assert np.array_equal(nops.ntt_inverse(f, q), a)
+    c = nops.negacyclic_mul(a, b, q)
+    c_np = np.stack([npntt.negacyclic_mul(a[i], b[i], q) for i in range(k)])
+    assert np.array_equal(c, c_np)
+
+
+def test_paged_attention_single_query():
+    rng = np.random.default_rng(7)
+    qh, kvh, hd, psz = 4, 2, 32, 8
+    q = rng.normal(0, 1, (1, qh, hd)).astype(np.float32)
+    kp = rng.normal(0, 1, (2, psz, kvh, hd)).astype(np.float32)
+    vp = rng.normal(0, 1, (2, psz, kvh, hd)).astype(np.float32)
+    bt = np.array([[0, 1]], dtype=np.int32)
+    sl = np.array([3], dtype=np.int32)   # ragged: mid-page sequence end
+    out_ref = np.asarray(pref.paged_decode_attention(q, kp, vp, bt, sl))
+    out_k = np.asarray(pops.paged_decode_attention(q, kp, vp, bt, sl,
+                                                   use_kernel=True))
+    np.testing.assert_allclose(out_k, out_ref, rtol=1e-4, atol=1e-5)
+
+
 def test_paged_attention_bf16():
     rng = np.random.default_rng(0)
     batch, qh, kvh, hd, psz, mp = 2, 4, 2, 64, 16, 3
