@@ -1,0 +1,188 @@
+"""Secure-aggregation scalability: clients/sec, latency, and the
+bounded-memory + zero-re-plan evidence.
+
+The number of parties is the scalability axis here (ROADMAP's
+"millions of users" item): thousands of input-only clients stream
+additive shares through a handful of gateway endpoints to a small
+compute fleet (docs/AGGREGATE.md).  Three measured rows:
+
+* ``inproc_fanin`` — the throughput row.  N clients/round on the inproc
+  fabric with a per-link in-flight byte bound; the claim (gated here and
+  by the CI ``aggregate`` job) is >= 1000 sustained clients/round-sec at
+  full size, with server memory *counter-verified* bounded: every
+  gateway→server reorder buffer's high-water mark must stay under the
+  configured knob plus one message.
+* ``shaped_wan`` — the latency row.  The same run over a ``shaped`` WAN
+  (configurable per-link latency/bandwidth) reporting per-client
+  p50/p90/p99 share-to-ingest latency and per-link byte accounting —
+  measured traffic, not a model.
+* ``plan_cache`` — the offline/online row.  Two runs against one
+  ``ArtifactCache``: the cold run pays exactly one round-plan build, the
+  hot run re-plans nothing (``agg_misses == 0``), asserted from the
+  cache counters.
+
+    PYTHONPATH=src python benchmarks/agg_bench.py [--tiny] [--json out]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+from repro.aggregate import AggSpec, run_aggregation, verify_aggregates
+from repro.api import SCHEMA_VERSION
+from repro.serve_daemon.cache import ArtifactCache
+
+#: full-size / CI-tiny shapes (clients, vec_len, rounds)
+FULL = {"clients": 2000, "vec_len": 64, "rounds": 3}
+TINY = {"clients": 300, "vec_len": 16, "rounds": 2}
+#: per-link in-flight byte bound for the fan-in row (the knob the
+#: reorder high-water marks are checked against)
+INFLIGHT_BYTES = 256 << 10
+#: sustained clients per round-second the fan-in row must hit
+GATE_CLIENTS_PER_S = 1000.0
+TINY_GATE_CLIENTS_PER_S = 200.0
+#: WAN shape for the latency row
+WAN_LATENCY_S = 0.002
+WAN_BANDWIDTH = 200e6
+
+
+def _reorder_bounded(res, spec: AggSpec) -> tuple[bool, int]:
+    """Did every gateway→server buffer stay under its knob (+1 msg)?"""
+    slack = spec.vec_len * 8       # one admitted-over-the-line message
+    worst = 0
+    ok = True
+    for (src, dst), st in res.reorder.items():
+        if dst < spec.servers and src >= spec.servers:
+            worst = max(worst, st.peak_bytes)
+            if st.max_bytes and st.peak_bytes > st.max_bytes + slack:
+                ok = False
+    return ok, worst
+
+
+def bench_fanin(shape: dict, check: bool) -> dict:
+    spec = AggSpec(**shape, max_inflight_bytes=INFLIGHT_BYTES)
+    res = run_aggregation(spec)
+    if check:
+        verify_aggregates(res)
+    bounded, peak = _reorder_bounded(res, spec)
+    return {
+        "case": "inproc_fanin", "transport": "inproc", **shape,
+        "seconds": res.seconds, "clients_per_s": res.clients_per_s,
+        "latency_ms": res.latency_ms,
+        "inflight_bytes_knob": INFLIGHT_BYTES,
+        "reorder_peak_bytes": peak, "reorder_bounded": bounded,
+        "admission_peak_frames": res.admission["peak_frames"],
+    }
+
+
+def bench_wan(shape: dict, check: bool) -> dict:
+    from repro.core.transport import FabricSpec
+    spec = AggSpec(**shape, max_inflight_bytes=INFLIGHT_BYTES)
+    res = run_aggregation(
+        spec, transport="shaped",
+        fabric_spec=FabricSpec(latency_s=WAN_LATENCY_S,
+                               bandwidth=WAN_BANDWIDTH))
+    if check:
+        verify_aggregates(res)
+    link_bytes = {f"{s}->{d}": st.bytes
+                  for (s, d), st in sorted(res.link_totals.items())}
+    return {
+        "case": "shaped_wan", "transport": "shaped", **shape,
+        "latency_s": WAN_LATENCY_S, "bandwidth": WAN_BANDWIDTH,
+        "seconds": res.seconds, "clients_per_s": res.clients_per_s,
+        "latency_ms": res.latency_ms, "link_bytes": link_bytes,
+        "total_bytes": sum(link_bytes.values()),
+    }
+
+
+def bench_plan_cache(shape: dict, check: bool) -> dict:
+    spec = AggSpec(**shape)
+    with tempfile.TemporaryDirectory(prefix="agg_cache_") as d:
+        cold_cache = ArtifactCache(d)
+        cold = run_aggregation(spec, cache=cold_cache)
+        hot_cache = ArtifactCache(d)     # fresh counters, same artifacts
+        hot = run_aggregation(spec, cache=hot_cache)
+        if check:
+            verify_aggregates(cold)
+            verify_aggregates(hot)
+        row = {
+            "case": "plan_cache", "transport": "inproc", **shape,
+            "cold_events": cold.plan_events, "hot_events": hot.plan_events,
+            "cold_misses": cold_cache.stats.agg_misses,
+            "cold_hits": cold_cache.stats.agg_hits,
+            "hot_misses": hot_cache.stats.agg_misses,
+            "hot_hits": hot_cache.stats.agg_hits,
+        }
+    return row
+
+
+def run(check: bool = True, tiny: bool = False) -> list[dict]:
+    shape = TINY if tiny else FULL
+    gate = TINY_GATE_CLIENTS_PER_S if tiny else GATE_CLIENTS_PER_S
+    rows = []
+
+    r = bench_fanin(shape, check)
+    rows.append(r)
+    print(f"inproc_fanin: {r['clients']} clients x {r['rounds']} rounds -> "
+          f"{r['clients_per_s']:.0f} clients/s, reorder peak "
+          f"{r['reorder_peak_bytes']} B (knob {INFLIGHT_BYTES} B, "
+          f"bounded={r['reorder_bounded']})", flush=True)
+    if check:
+        assert r["reorder_bounded"], \
+            "reorder high-water mark exceeded the in-flight byte knob"
+        assert r["clients_per_s"] >= gate, \
+            f"sustained {r['clients_per_s']:.0f} clients/s < gate {gate:.0f}"
+
+    r = bench_wan(shape, check)
+    rows.append(r)
+    lat = r["latency_ms"]
+    print(f"shaped_wan:  {WAN_LATENCY_S*1e3:.0f} ms / "
+          f"{WAN_BANDWIDTH/1e6:.0f} MB/s links -> "
+          f"{r['clients_per_s']:.0f} clients/s, per-client latency "
+          f"p50={lat.get('p50', 0):.1f} p90={lat.get('p90', 0):.1f} "
+          f"p99={lat.get('p99', 0):.1f} ms, {r['total_bytes']} B on the "
+          f"wire", flush=True)
+    if check:
+        assert lat, "shaped WAN row produced no latency samples"
+
+    r = bench_plan_cache(shape, check)
+    rows.append(r)
+    print(f"plan_cache:  cold {r['cold_misses']} miss / {r['cold_hits']} "
+          f"hit, hot {r['hot_misses']} miss / {r['hot_hits']} hit",
+          flush=True)
+    if check:
+        assert r["cold_misses"] == 1 and r["hot_misses"] == 0, \
+            "hot rounds must reuse the cached round plan (zero re-plans)"
+        assert r["hot_hits"] == shape["rounds"], \
+            "every hot round should hit the plan cache"
+
+    print(f"agg CLAIM: {rows[0]['clients_per_s']:.0f} clients/s sustained "
+          f"fan-in under a {INFLIGHT_BYTES >> 10} KiB in-flight bound, "
+          f"zero hot re-plans")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke sizes (seconds, not minutes)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as a schema-stamped JSON envelope")
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+    rows = run(check=not args.no_check, tiny=args.tiny)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "benchmark": "agg", "tiny": args.tiny,
+                       "gate_clients_per_s": (TINY_GATE_CLIENTS_PER_S
+                                              if args.tiny
+                                              else GATE_CLIENTS_PER_S),
+                       "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

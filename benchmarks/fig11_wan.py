@@ -21,9 +21,12 @@ Claims: pipelining OTs improves time monotonically to a bandwidth floor
 
 from __future__ import annotations
 
+import argparse
+import json
+
 import numpy as np
 
-from repro.api import FabricSpec
+from repro.api import SCHEMA_VERSION, FabricSpec
 from repro.protocols.garbled.gates import PartyChannel
 from repro.scenarios import measure_traffic
 
@@ -61,7 +64,8 @@ def wan_time(total_bytes: int, n_msgs: int, compute_s: float, rtt: float,
     return setup + max(slowest, compute_s)
 
 
-def run(check: bool = True):
+def run(check: bool = True, rows_out: list | None = None):
+    rows = [] if rows_out is None else rows_out
     local, wan = measured_runs()
     ge_link = next(iter(local.links))    # the garbler→evaluator link
     total_bytes = local.total_bytes
@@ -82,6 +86,12 @@ def run(check: bool = True):
         assert wan.total_bytes == total_bytes, \
             "shaping must not change what crosses the link"
         assert wan_penalty_measured < 6.5
+    rows.append({"kind": "measured", "n": MEASURE_N,
+                 "total_bytes": total_bytes,
+                 "total_messages": local.total_messages,
+                 "ot_batches": ot_msgs, "local_s": local.seconds,
+                 "wan_s": wan.seconds,
+                 "wan_penalty_measured": wan_penalty_measured})
 
     # extrapolate the measured counts to the paper's size (traffic ~ n log n)
     scale = (16384 / MEASURE_N) ** 1.1
@@ -97,6 +107,7 @@ def run(check: bool = True):
         tt = wan_time(big_bytes, big_ots, compute_s, RTT_OREGON,
                       FLOW_BW_OREGON, flows=1, concurrent_ots=c)
         times_a.append(tt)
+        rows.append({"kind": "fig11a", "concurrent_ots": c, "seconds": tt})
         print(f"  concurrent={c:3d}: {tt:7.2f}s")
         assert tt <= prev + 1e-9
         prev = tt
@@ -108,6 +119,8 @@ def run(check: bool = True):
             tt = wan_time(big_bytes, big_ots, compute_s, rtt, bw,
                           flows=flows, concurrent_ots=32)
             times.append(tt)
+            rows.append({"kind": "fig11b", "setup": setup, "flows": flows,
+                         "seconds": tt, "local_s": local_time})
             print(f"  {setup:7s} flows={flows}: {tt:7.2f}s "
                   f"(local={local_time:.2f}s)")
         if setup == "oregon" and check:
@@ -118,8 +131,25 @@ def run(check: bool = True):
           f"< OS-swap penalty (~6.5x from fig8 merge)")
     if check:
         assert wan_penalty < 6.5
+    rows.append({"kind": "claim", "wan_penalty_extrapolated": wan_penalty,
+                 "swap_penalty_reference": 6.5})
     return times_a
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", metavar="PATH",
+                    help="write rows as a schema-stamped JSON envelope")
+    ap.add_argument("--no-check", action="store_true")
+    args = ap.parse_args()
+    rows: list = []
+    run(check=not args.no_check, rows_out=rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": SCHEMA_VERSION,
+                       "benchmark": "fig11_wan", "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

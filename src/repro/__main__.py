@@ -148,12 +148,12 @@ def cmd_plan(args) -> int:
 def cmd_run(args) -> int:
     transport = args.transport
     fabric = None
-    if transport == "shaped":
+    if transport in ("shaped", "shaped+tcp"):
         fabric = FabricSpec(latency_s=args.latency,
                             bandwidth=args.bandwidth)
     elif args.latency or args.bandwidth:
         raise SystemExit("error: --latency/--bandwidth need "
-                         "--transport shaped")
+                         "--transport shaped or shaped+tcp")
     if args.worker is not None:
         if not args.peers:
             raise SystemExit("error: --worker needs --peers host:port,... "
@@ -164,7 +164,9 @@ def cmd_run(args) -> int:
                              "`python -m repro fabric` instead)")
         transport = transport or "tcp"
         fabric = FabricSpec(rank=args.worker,
-                            peers=tuple(args.peers.split(",")))
+                            peers=tuple(args.peers.split(",")),
+                            latency_s=args.latency,
+                            bandwidth=args.bandwidth)
     sess = Session.from_plan(args.jobdir, storage=args.storage,
                              driver=args.driver, transport=transport,
                              fabric=fabric)
@@ -309,6 +311,77 @@ def cmd_bench(args) -> int:
     return 0
 
 
+def _parse_drop(items) -> list[tuple[int, int]]:
+    """``--drop R:c1,c2`` → [(R, c1), (R, c2)] straggler pairs."""
+    out: list[tuple[int, int]] = []
+    for item in items or ():
+        rnd, sep, rest = item.partition(":")
+        if not sep or not rnd.isdigit():
+            raise SystemExit(f"error: bad --drop entry {item!r} "
+                             f"(want ROUND:client,client,...)")
+        for c in rest.split(","):
+            if not c.isdigit():
+                raise SystemExit(f"error: bad --drop client {c!r} in "
+                                 f"{item!r}")
+            out.append((int(rnd), int(c)))
+    return out
+
+
+def cmd_agg(args) -> int:
+    """Secure aggregation: N input-only clients → a small compute fleet
+    (docs/AGGREGATE.md)."""
+    from .aggregate import AggSpec, run_aggregation, verify_aggregates
+    spec = AggSpec(clients=args.clients, vec_len=args.vec_len,
+                   rounds=args.rounds, servers=args.servers,
+                   gateways=args.gateways, seed=args.seed,
+                   max_inflight_msgs=args.max_inflight_msgs,
+                   max_inflight_bytes=args.max_inflight_bytes,
+                   round_timeout_s=args.round_timeout)
+    transport = args.transport
+    if args.rank is not None:
+        if not args.peers:
+            raise SystemExit("error: --rank needs --peers host:port,... "
+                             "(one address per fabric rank: servers then "
+                             "gateways)")
+        transport = transport or "tcp"
+        fabric = FabricSpec(rank=args.rank,
+                            peers=tuple(args.peers.split(",")),
+                            latency_s=args.latency,
+                            bandwidth=args.bandwidth)
+    else:
+        transport = transport or "inproc"
+        fabric = FabricSpec(latency_s=args.latency,
+                            bandwidth=args.bandwidth)
+    cache = None
+    if args.cache:
+        from .serve_daemon.cache import ArtifactCache
+        cache = ArtifactCache(args.cache)
+    res = run_aggregation(spec, transport=transport, fabric_spec=fabric,
+                          cache=cache, drop=_parse_drop(args.drop))
+    for r in res.rounds:
+        head = ", ".join(str(int(v)) for v in r.total[:4])
+        note = (f" DEGRADED ({spec.clients - len(r.survivors)} dropped)"
+                if r.degraded else "")
+        print(f"round {r.rnd}: {len(r.survivors)}/{spec.clients} clients, "
+              f"aggregate [{head}{', ...' if len(r.total) > 4 else ''}]"
+              f"{note}")
+    if res.rounds:
+        print(f"{res.clients_per_s:.0f} clients/s over {res.seconds:.3f}s; "
+              f"plan events: {res.plan_events}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": SCHEMA_VERSION, **res.to_doc()}, f)
+        print(f"wrote {args.json}")
+    if args.check and res.rounds:
+        try:
+            verify_aggregates(res)
+        except AssertionError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        print("aggregate check OK")
+    return 0
+
+
 def cmd_serve(args) -> int:
     from .serve_daemon.server import ServeDaemon
     d = ServeDaemon(args.cache, socket_path=args.socket,
@@ -380,7 +453,7 @@ def main(argv=None) -> int:
     p.add_argument("--peers", default=None,
                    help="comma list of host:port, one per global rank")
     p.add_argument("--transport", default=None,
-                   choices=("inproc", "tcp", "shaped"),
+                   choices=("inproc", "tcp", "shaped", "shaped+tcp"),
                    help="transport backend (default: inproc; "
                         "--worker defaults to tcp)")
     p.add_argument("--latency", type=float, default=0.0,
@@ -432,6 +505,50 @@ def main(argv=None) -> int:
     p.add_argument("--json", metavar="PATH",
                    help="write rows as JSON (CI artifact)")
     p.set_defaults(fn=cmd_bench)
+
+    p = sub.add_parser("agg", help="secure aggregation: many input-only "
+                                   "clients stream additive shares to a "
+                                   "compute fleet (docs/AGGREGATE.md)")
+    p.add_argument("--clients", type=int, required=True,
+                   help="number of simulated input-only clients")
+    p.add_argument("--rounds", type=int, default=1)
+    p.add_argument("--vec-len", type=int, default=64,
+                   help="per-client uint64 vector length")
+    p.add_argument("--servers", type=int, default=2,
+                   help="compute-fleet size (fabric ranks [0, S))")
+    p.add_argument("--gateways", type=int, default=2,
+                   help="client-side fabric endpoints (ranks [S, S+G))")
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--transport", default=None,
+                   choices=("inproc", "tcp", "shaped", "shaped+tcp"),
+                   help="transport backend (default: inproc; "
+                        "--rank defaults to tcp)")
+    p.add_argument("--rank", type=int, default=None, metavar="K",
+                   help="distributed mode: host ONLY fabric rank K "
+                        "against --peers")
+    p.add_argument("--peers", default=None,
+                   help="comma list of host:port, one per fabric rank")
+    p.add_argument("--latency", type=float, default=0.0,
+                   help="shaped: per-link one-way latency (s)")
+    p.add_argument("--bandwidth", type=float, default=None,
+                   help="shaped: per-link bandwidth (bytes/s)")
+    p.add_argument("--max-inflight-msgs", type=int, default=0,
+                   help="per-link reorder-buffer message bound (0 = off)")
+    p.add_argument("--max-inflight-bytes", type=int, default=1 << 20,
+                   help="per-link reorder-buffer byte bound (backpressure)")
+    p.add_argument("--round-timeout", type=float, default=30.0,
+                   help="straggler timeout per round (s); late clients "
+                        "degrade the round to the surviving subset")
+    p.add_argument("--drop", action="append", metavar="R:c1,c2",
+                   help="simulate stragglers: these clients never send in "
+                        "round R (repeatable)")
+    _add_cache_arg(p)
+    p.add_argument("--check", action="store_true",
+                   help="verify every revealed aggregate against the "
+                        "oracle over its surviving subset")
+    p.add_argument("--json", metavar="PATH",
+                   help="write the full result envelope as JSON")
+    p.set_defaults(fn=cmd_agg)
 
     p = sub.add_parser("serve", help="run the multi-tenant plan-cache "
                                      "daemon (docs/SERVE.md)")

@@ -1,0 +1,18 @@
+"""Many-client secure aggregation over the transport fabric.
+
+Input-only clients (thousands, multiplexed over a few gateway
+endpoints) stream additive shares to a small compute fleet; the
+per-round schedule is derived offline and cached.  See
+docs/AGGREGATE.md for the architecture and ``python -m repro agg``
+for the CLI.
+"""
+
+from .offline import (AggSpec, RoundPlan, build_round_plan, client_shares,
+                      client_vector, expected_sum, load_round_plan)
+from .run import AggResult, run_aggregation, verify_aggregates
+
+__all__ = [
+    "AggSpec", "RoundPlan", "AggResult", "build_round_plan",
+    "load_round_plan", "client_vector", "client_shares", "expected_sum",
+    "run_aggregation", "verify_aggregates",
+]

@@ -1,0 +1,143 @@
+"""Secure-aggregation online phase, compute side: one fleet server.
+
+Per round, a server:
+
+1. loads the round plan (rank 0 through the artifact cache — hot rounds
+   are zero re-plans, counter-verified; other ranks reuse the plan they
+   were handed offline),
+2. reserves the round's O(clients) footprint with the
+   :class:`AdmissionController` (``plan.frames`` frames, the gathered
+   share matrix in bytes) — the same admission path serve jobs use,
+3. **batch-ingests**: receives every announced client share directly
+   into one pre-allocated ``[clients, vec_len]`` uint64 matrix (the
+   transport's ``out=`` fast path), then reduces it with ONE vectorized
+   NumPy sum — per-message Python work is a dict lookup and a memcpy,
+   the arithmetic is a single ``np.add.reduce``,
+4. agrees on survivors: servers exchange received-client bitmaps and
+   intersect, so every server reduces exactly the same subset even if a
+   straggler's share reached only some of the fleet,
+5. reveals: non-zero ranks ship their partial sum to rank 0, which adds
+   them — additive shares make the reveal a plain uint64 sum.
+
+Straggler handling is *reported, never silently wrong*: a gateway whose
+manifest misses the round timeout drops all its clients for that round;
+a client missing from the intersected bitmap drops from the reduction;
+the round result names its surviving subset and is bitwise equal to a
+straggler-free run over the same survivors (shares are pure functions
+of (client, server, round) — see ``offline.py``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.transport import TransportError
+from .client import LatencyBook
+from .offline import (AggSpec, RoundPlan, data_tag, manifest_tag,
+                      partial_tag, survivor_tag)
+
+__all__ = ["RoundResult", "run_server"]
+
+
+class RoundResult:
+    """One round as seen by rank 0: the revealed aggregate, who made it
+    in, and whether the round degraded below the announced population."""
+
+    def __init__(self, rnd: int, total: np.ndarray | None,
+                 survivors: list[int], expected_clients: int,
+                 plan_event: str):
+        self.rnd = rnd
+        self.total = total
+        self.survivors = survivors
+        self.expected_clients = expected_clients
+        self.plan_event = plan_event
+
+    @property
+    def degraded(self) -> bool:
+        return len(self.survivors) < self.expected_clients
+
+
+def _ingest_round(transport, spec: AggSpec, plan: RoundPlan, k: int,
+                  rnd: int, buf: np.ndarray, latency: LatencyBook | None
+                  ) -> np.ndarray:
+    """Receive the round's manifests + shares into ``buf``; return the
+    received-client boolean mask.  A gateway that misses the round
+    timeout loses its whole client block for this round."""
+    got = np.zeros(spec.clients, dtype=bool)
+    for g in range(spec.gateways):
+        gw = spec.gateway_rank(g)
+        try:
+            man = transport.recv(gw, k, manifest_tag(rnd),
+                                 timeout=spec.round_timeout_s)
+        except TransportError:
+            continue                      # dead/late gateway: block dropped
+        for c in map(int, man):
+            try:
+                transport.recv(gw, k, data_tag(spec, rnd, c), out=buf[c],
+                               timeout=spec.round_timeout_s)
+            except TransportError:
+                continue                  # announced but never arrived
+            got[c] = True
+            if latency is not None and k == 0:
+                latency.ingested(rnd, c)
+    return got
+
+
+def _agree_survivors(transport, spec: AggSpec, k: int, rnd: int,
+                     got: np.ndarray) -> np.ndarray:
+    """All-to-all bitmap exchange; the fleet reduces the intersection,
+    so a share that reached only part of the fleet is dropped everywhere
+    (otherwise the shares would not cancel)."""
+    agreed = got
+    if spec.servers > 1:
+        mine = np.packbits(got)
+        for j in range(spec.servers):
+            if j != k:
+                transport.send(k, j, survivor_tag(rnd), mine)
+        for j in range(spec.servers):
+            if j != k:
+                theirs = transport.recv(j, k, survivor_tag(rnd),
+                                        timeout=spec.round_timeout_s)
+                agreed = agreed & np.unpackbits(
+                    theirs, count=spec.clients).astype(bool)
+    return agreed
+
+
+def run_server(transport, spec: AggSpec, k: int, admission,
+               plan_loader, latency: LatencyBook | None = None) -> dict:
+    """Run server rank ``k`` for all rounds.
+
+    ``plan_loader()`` is called once per round and returns
+    ``(RoundPlan, event)`` — rank 0 wires it to the artifact cache,
+    peers to the offline-distributed plan.  Returns the per-rank report;
+    rank 0's includes the revealed aggregates."""
+    rounds: list[RoundResult] = []
+    plan_events: list[str] = []
+    for rnd in range(spec.rounds):
+        plan, event = plan_loader()
+        plan_events.append(event)
+        with admission.admit(plan.frames, plan.mem_bytes,
+                             timeout=spec.round_timeout_s):
+            buf = np.zeros((spec.clients, spec.vec_len), dtype=np.uint64)
+            got = _ingest_round(transport, spec, plan, k, rnd, buf, latency)
+            agreed = _agree_survivors(transport, spec, k, rnd, got)
+            # the round's entire arithmetic: one vectorized reduction
+            partial = np.add.reduce(buf[agreed], axis=0,
+                                    dtype=np.uint64, initial=np.uint64(0))
+        survivors = [int(c) for c in np.flatnonzero(agreed)]
+        if k != 0:
+            transport.send(k, 0, partial_tag(rnd), partial, copy=False)
+            rounds.append(RoundResult(rnd, None, survivors, spec.clients,
+                                      event))
+            continue
+        total = partial.copy()
+        for j in range(1, spec.servers):
+            total += transport.recv(j, 0, partial_tag(rnd),
+                                    timeout=spec.round_timeout_s)
+        rounds.append(RoundResult(rnd, total, survivors, spec.clients,
+                                  event))
+    return {
+        "rank": k,
+        "rounds": rounds,
+        "plan_events": plan_events,
+    }

@@ -64,9 +64,10 @@ import numpy as np
 
 __all__ = [
     "Transport", "InprocTransport", "TcpTransport", "ShapedTransport",
-    "Fabric", "FabricSpec", "PartyView", "LinkStats", "TransportError",
-    "TransportClosed", "build_fabric", "register_transport",
-    "aggregate_links", "pick_free_ports", "TRANSPORTS",
+    "Fabric", "FabricSpec", "PartyView", "LinkStats", "ReorderStats",
+    "TransportError", "TransportClosed", "build_fabric",
+    "register_transport", "aggregate_links", "pick_free_ports",
+    "TRANSPORTS",
 ]
 
 
@@ -82,6 +83,30 @@ class TransportClosed(TransportError):
 class LinkStats:
     messages: int = 0
     bytes: int = 0
+
+
+@dataclasses.dataclass
+class ReorderStats:
+    """One link's reorder-buffer occupancy snapshot (receive side)."""
+    pending_msgs: int = 0
+    pending_bytes: int = 0
+    peak_msgs: int = 0
+    peak_bytes: int = 0
+    max_msgs: int = 0             # configured bound (0 = unbounded)
+    max_bytes: int = 0
+
+
+def _links_reorder_stats(links: dict, lock: threading.Lock
+                         ) -> dict[tuple[int, int], ReorderStats]:
+    with lock:
+        items = list(links.items())
+    out = {}
+    for key, ln in items:
+        with ln._cond:
+            out[key] = ReorderStats(ln._pending_msgs, ln._pending_bytes,
+                                    ln.peak_msgs, ln.peak_bytes,
+                                    ln.max_msgs, ln.max_bytes)
+    return out
 
 
 #: reserved tag ranges (ordinary tags are small non-negative ints: the DSL's
@@ -137,6 +162,8 @@ class _Link:
         self._by_tag: dict[int, deque] = {}
         self._pending_msgs = 0
         self._pending_bytes = 0
+        self.peak_msgs = 0            # high-water marks: the counters that
+        self.peak_bytes = 0           # *verify* the depth knobs bounded memory
         self.max_msgs = max_msgs
         self.max_bytes = max_bytes
         self.closed = False
@@ -154,6 +181,8 @@ class _Link:
             self._by_tag.setdefault(tag, deque()).append(data)
             self._pending_msgs += 1
             self._pending_bytes += data.nbytes
+            self.peak_msgs = max(self.peak_msgs, self._pending_msgs)
+            self.peak_bytes = max(self.peak_bytes, self._pending_bytes)
             self._cond.notify_all()
 
     def get(self, tag: int, timeout: float | None = None) -> np.ndarray:
@@ -244,6 +273,13 @@ class Transport:
     def link_totals(self) -> dict[tuple[int, int], LinkStats]:
         return aggregate_links(self.stats())
 
+    def reorder_stats(self) -> dict[tuple[int, int], "ReorderStats"]:
+        """Receive-side reorder-buffer occupancy per (src, dst) link:
+        current pending and the HIGH-WATER marks since creation, plus the
+        configured bounds.  This is how a consumer *verifies* (not just
+        assumes) that the depth knobs kept in-flight memory bounded."""
+        return {}
+
     # shared plumbing used by barrier()/stats() implementations
     def _init_common(self) -> None:
         self._book = _StatsBook()
@@ -289,6 +325,9 @@ class InprocTransport(Transport):
         link = self._link(src, dst)
         link.max_msgs = max_msgs
         link.max_bytes = max_bytes
+
+    def reorder_stats(self):
+        return _links_reorder_stats(self._links, self._links_lock)
 
     def send(self, src, dst, tag, data, copy=True):
         self._check(src, dst)
@@ -565,6 +604,9 @@ class TcpTransport(Transport):
             out[...] = data.reshape(out.shape)
         return data
 
+    def reorder_stats(self):
+        return _links_reorder_stats(self._links, self._links_lock)
+
     def close(self):
         self._closed = True
         for sock in self._out.values():
@@ -604,16 +646,24 @@ class ShapedTransport(Transport):
     uses), and ``recv`` sleeps until that time.  Wall-clock through a
     shaped fabric therefore *measures* traffic under the configured WAN
     instead of modeling it.  Sender and receiver must share the process
-    (delivery stamps ride in a side table, not on the wire); shape
-    cross-process links with OS tooling instead."""
+    (delivery stamps ride in a side table, not on the wire); to shape a
+    *cross-process* link (the ``shaped+tcp`` backend), pass
+    ``paced_send=True``: the SENDER then sleeps until the message's
+    virtual delivery time before handing it to the inner transport, so no
+    side table must cross the process boundary.  Sender pacing charges
+    the full latency serially at the sender instead of overlapping it
+    with receiver compute — a conservative (upper-bound) approximation,
+    exact for the bandwidth term and for ping-pong exchanges."""
 
     name = "shaped"
 
     def __init__(self, inner: Transport, default: LinkShape | None = None,
-                 links: dict[tuple[int, int], LinkShape] | None = None):
+                 links: dict[tuple[int, int], LinkShape] | None = None,
+                 paced_send: bool = False):
         self.inner = inner
         self.default = default or LinkShape()
         self.links = dict(links or {})
+        self.paced_send = paced_send
         self._busy: dict[tuple[int, int], float] = {}
         self._deliver: dict[tuple[int, int, int], deque] = {}
         self._lock = threading.Lock()
@@ -623,9 +673,6 @@ class ShapedTransport(Transport):
     def shape_for(self, src: int, dst: int) -> LinkShape:
         return self.links.get((src, dst), self.default)
 
-    def connect(self):
-        self.inner.connect()
-
     def send(self, src, dst, tag, data, copy=True):
         sh = self.shape_for(src, dst)
         now = time.monotonic()
@@ -634,18 +681,24 @@ class ShapedTransport(Transport):
             xfer = (np.asarray(data).nbytes / sh.bandwidth
                     if sh.bandwidth else 0.0)
             self._busy[(src, dst)] = start + xfer
-            self._deliver.setdefault((src, dst, tag), deque()).append(
-                start + xfer + sh.latency_s)
+            due = start + xfer + sh.latency_s
+            if not self.paced_send:
+                self._deliver.setdefault((src, dst, tag), deque()).append(due)
+        if self.paced_send:
+            wait = due - time.monotonic()
+            if wait > 0:
+                time.sleep(wait)
         self.inner.send(src, dst, tag, data, copy=copy)
 
     def recv(self, src, dst, tag, out=None, timeout=None):
         data = self.inner.recv(src, dst, tag, out=None, timeout=timeout)
-        with self._lock:
-            q = self._deliver.get((src, dst, tag))
-            due = q.popleft() if q else 0.0
-        wait = due - time.monotonic()
-        if wait > 0:
-            time.sleep(wait)
+        if not self.paced_send:
+            with self._lock:
+                q = self._deliver.get((src, dst, tag))
+                due = q.popleft() if q else 0.0
+            wait = due - time.monotonic()
+            if wait > 0:
+                time.sleep(wait)
         if out is not None:
             out[...] = data.reshape(out.shape)
         return data
@@ -654,11 +707,21 @@ class ShapedTransport(Transport):
         if hasattr(self.inner, "set_depth"):
             self.inner.set_depth(src, dst, max_msgs, max_bytes)
 
+    def listen(self):
+        if hasattr(self.inner, "listen"):
+            self.inner.listen()
+
+    def connect(self):
+        self.inner.connect()
+
     def close(self):
         self.inner.close()
 
     def stats(self):
         return self.inner.stats()
+
+    def reorder_stats(self):
+        return self.inner.reorder_stats()
 
 
 # ---------------------------------------------------------------------------
@@ -805,6 +868,15 @@ class Fabric:
     def link_totals(self) -> dict[tuple[int, int], LinkStats]:
         return aggregate_links(self.stats())
 
+    def reorder_stats(self) -> dict[tuple[int, int], ReorderStats]:
+        """Receive-side reorder occupancy merged across hosted endpoints
+        (each link's buffer lives at its receiving endpoint, so hosted
+        transports never disagree about a key)."""
+        out: dict[tuple[int, int], ReorderStats] = {}
+        for t in self._unique():
+            out.update(t.reorder_stats())
+        return out
+
     def barrier(self) -> None:
         """Full-fabric barrier across every endpoint (each hosted rank
         exchanges tokens with all ranks) — used to hold distributed
@@ -867,9 +939,22 @@ def _make_shaped(n: int, spec: FabricSpec, hosted) -> dict[int, Transport]:
     return {r: t for r in hosted}
 
 
+def _make_shaped_tcp(n: int, spec: FabricSpec, hosted
+                     ) -> dict[int, Transport]:
+    """``shaped`` wrapping the tcp backend — cross-process WAN
+    experiments.  Every hosted rank gets its own sender-paced decorator
+    (no shared side table is needed: pacing happens entirely on the
+    sending endpoint), so it composes with single-rank placement."""
+    inner = _make_tcp(n, spec, hosted)
+    shape = LinkShape(latency_s=spec.latency_s, bandwidth=spec.bandwidth)
+    return {r: ShapedTransport(t, default=shape, paced_send=True)
+            for r, t in inner.items()}
+
+
 register_transport("inproc", _make_inproc)
 register_transport("tcp", _make_tcp)
 register_transport("shaped", _make_shaped)
+register_transport("shaped+tcp", _make_shaped_tcp)
 
 
 def build_fabric(name: str, num_endpoints: int,

@@ -67,6 +67,8 @@ class CacheStats:
     plan_misses: int = 0
     batch_hits: int = 0
     batch_misses: int = 0
+    agg_hits: int = 0
+    agg_misses: int = 0
     invalid: int = 0          # tampered/truncated entries rejected + deleted
     evictions: int = 0
     bytes_read: int = 0       # validated artifact bytes served from cache
@@ -112,13 +114,14 @@ class ArtifactCache:
         os.makedirs(os.path.join(self.root, "trace"), exist_ok=True)
         os.makedirs(os.path.join(self.root, "plan"), exist_ok=True)
         os.makedirs(os.path.join(self.root, "batch"), exist_ok=True)
+        os.makedirs(os.path.join(self.root, "agg"), exist_ok=True)
 
     # -- bookkeeping ---------------------------------------------------------
 
     def _entries(self) -> list[tuple[float, int, str]]:
         """(mtime, bytes, dir) per complete entry, oldest first."""
         out = []
-        for kind in ("trace", "plan", "batch"):
+        for kind in ("trace", "plan", "batch", "agg"):
             base = os.path.join(self.root, kind)
             for name in os.listdir(base):
                 d = os.path.join(base, name)
@@ -196,10 +199,14 @@ class ArtifactCache:
             if manifest.get("format") != CACHE_FORMAT or \
                     manifest.get("kind") != kind:
                 raise CacheEntryError("wrong manifest format")
-            from ..api import JobSpec
-            spec = JobSpec.from_dict(manifest["spec"])
-            expect = spec.trace_hash() if kind == "trace" \
-                else spec.plan_hash()
+            if kind == "agg":
+                from ..aggregate.offline import AggSpec
+                expect = AggSpec.from_dict(manifest["spec"]).plan_key()
+            else:
+                from ..api import JobSpec
+                spec = JobSpec.from_dict(manifest["spec"])
+                expect = spec.trace_hash() if kind == "trace" \
+                    else spec.plan_hash()
             if manifest.get("key") != key or expect != key:
                 raise CacheEntryError(
                     f"manifest spec hashes to {expect}, entry claims "
@@ -370,6 +377,47 @@ class ArtifactCache:
                 "kind": "batch", "key": key,
                 "spec": spec.normalized(workload).to_dict(),
                 "programs": [], "schedules": names})
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._publish(tmp, entry_dir)
+
+    # -- secure-aggregation round plans (docs/AGGREGATE.md) ------------------
+
+    def get_agg(self, spec) -> dict | None:
+        """Cached round-plan document for an ``AggSpec``, or None.  Keyed
+        by ``AggSpec.plan_key()``: the plan is a pure function of the
+        plan-relevant spec fields (the aggregation schedule is oblivious,
+        so it is derived entirely ahead of time)."""
+        key = spec.plan_key()
+        got = self._load("agg", key)
+        with self._lock:
+            if got is None:
+                self.stats.agg_misses += 1
+            else:
+                self.stats.agg_hits += 1
+        if got is None:
+            return None
+        entry_dir, manifest = got
+        try:
+            with open(os.path.join(entry_dir, "roundplan.json")) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            self._drop(entry_dir)
+            return None
+
+    def put_agg(self, spec, plan_doc: dict) -> None:
+        """Cache a freshly derived round plan (one JSON sidecar)."""
+        key = spec.plan_key()
+        entry_dir = os.path.join(self.root, "agg", key)
+        tmp = self._tmpdir("agg")
+        try:
+            with open(os.path.join(tmp, "roundplan.json"), "w") as f:
+                json.dump(plan_doc, f, indent=2)
+            # "programs" is always present (entry validation iterates it)
+            self._write_manifest(tmp, {
+                "kind": "agg", "key": key, "spec": spec.to_dict(),
+                "programs": [], "artifacts": ["roundplan.json"]})
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise

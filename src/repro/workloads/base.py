@@ -57,6 +57,7 @@ def get(name: str) -> Workload:
     import repro.workloads.gc_workloads  # noqa: F401
     import repro.workloads.ckks_workloads  # noqa: F401
     import repro.workloads.apps  # noqa: F401
+    import repro.workloads.agg_workload  # noqa: F401
     return REGISTRY[name]
 
 

@@ -1,0 +1,265 @@
+"""Secure aggregation: share algebra, the offline/online split through
+the artifact cache, backpressure/admission evidence, straggler
+degradation semantics, the CLI, and the acceptance criteria — the
+revealed aggregate bitwise-identical across single-process, 2-process
+TCP, and straggler-free vs straggler-degraded runs over the same
+surviving subset.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.__main__ import main
+from repro.aggregate import (AggSpec, build_round_plan, client_shares,
+                             client_vector, expected_sum, load_round_plan,
+                             run_aggregation, verify_aggregates)
+from repro.aggregate.offline import data_tag
+from repro.core.transport import FabricSpec, pick_free_ports
+from repro.serve_daemon.cache import ArtifactCache
+
+
+# ---------------------------------------------------------------------------
+# offline phase: share algebra, plan identity, cache sidecar
+# ---------------------------------------------------------------------------
+
+
+def test_shares_sum_to_vector_mod_2_64():
+    spec = AggSpec(clients=5, vec_len=32, servers=3)
+    for c in range(spec.clients):
+        shares = client_shares(spec, c, rnd=0)
+        assert len(shares) == 3
+        total = np.zeros(32, dtype=np.uint64)
+        for s in shares:
+            assert s.dtype == np.uint64
+            total += s
+        assert np.array_equal(total, client_vector(spec.seed, c, 0, 32))
+
+
+def test_shares_are_pure_functions_of_client_server_round():
+    spec = AggSpec(clients=4, vec_len=16)
+    a = client_shares(spec, 2, rnd=1)
+    b = client_shares(spec, 2, rnd=1)
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    c = client_shares(spec, 2, rnd=2)
+    assert not np.array_equal(a[0], c[0])
+
+
+def test_expected_sum_over_subset():
+    spec = AggSpec(clients=6, vec_len=8)
+    full = expected_sum(spec, 0)
+    sub = expected_sum(spec, 0, survivors=[0, 2, 4])
+    rest = expected_sum(spec, 0, survivors=[1, 3, 5])
+    assert np.array_equal(sub + rest, full)
+
+
+def test_plan_key_ignores_online_knobs():
+    a = AggSpec(clients=10, round_timeout_s=5.0, max_inflight_bytes=1)
+    b = AggSpec(clients=10, round_timeout_s=99.0, max_inflight_bytes=2)
+    assert a.plan_key() == b.plan_key()
+    assert a.plan_key() != AggSpec(clients=11).plan_key()
+
+
+def test_round_plan_partitions_clients_and_estimates():
+    spec = AggSpec(clients=10, vec_len=64, gateways=3)
+    plan = build_round_plan(spec)
+    assert sorted(c for block in plan.gateway_clients for c in block) == \
+        list(range(10))
+    assert plan.share_bytes == 64 * 8
+    assert plan.mem_bytes == 10 * 64 * 8
+    assert plan.frames >= 1
+
+
+def test_data_tags_unique_across_rounds_and_clients():
+    spec = AggSpec(clients=7, rounds=3)
+    tags = {data_tag(spec, r, c)
+            for r in range(3) for c in range(7)}
+    assert len(tags) == 21
+
+
+def test_round_plan_cache_sidecar_roundtrip(tmp_path):
+    cache = ArtifactCache(tmp_path)
+    spec = AggSpec(clients=12, gateways=3)
+    plan, ev = load_round_plan(cache, spec)
+    assert ev == "miss" and cache.stats.agg_misses == 1
+    again, ev = load_round_plan(cache, spec)
+    assert ev == "hit" and cache.stats.agg_hits == 1
+    assert again.to_dict() == plan.to_dict()
+    # survives a daemon restart (fresh cache object, same root)
+    plan2, ev = load_round_plan(ArtifactCache(tmp_path), spec)
+    assert ev == "hit" and plan2.key == spec.plan_key()
+    assert load_round_plan(None, spec)[1] == "none"
+
+
+# ---------------------------------------------------------------------------
+# online phase, in-process
+# ---------------------------------------------------------------------------
+
+
+def test_aggregation_matches_oracle_multi_round():
+    spec = AggSpec(clients=40, vec_len=16, rounds=3, servers=2, gateways=3)
+    res = run_aggregation(spec)
+    verify_aggregates(res)
+    assert len(res.rounds) == 3
+    for r in res.rounds:
+        assert not r.degraded and len(r.survivors) == 40
+        assert np.array_equal(np.asarray(r.total, dtype=np.uint64),
+                              expected_sum(spec, r.rnd))
+    assert res.clients_per_s > 0
+    assert res.latency_ms.keys() == {"p50", "p90", "p99"}
+
+
+def test_aggregation_single_server_and_gateway():
+    spec = AggSpec(clients=9, vec_len=4, servers=1, gateways=1)
+    res = run_aggregation(spec)
+    verify_aggregates(res)
+
+
+def test_straggler_round_degrades_and_matches_survivor_oracle():
+    spec = AggSpec(clients=20, vec_len=8, rounds=2)
+    res = run_aggregation(spec, drop=[(0, 3), (0, 17)])
+    verify_aggregates(res)
+    r0, r1 = res.rounds
+    assert r0.degraded and sorted(r0.survivors) == \
+        [c for c in range(20) if c not in (3, 17)]
+    assert not r1.degraded
+    # the acceptance identity: a degraded round equals a straggler-free
+    # aggregation over the same surviving subset, bitwise
+    sub = AggSpec(clients=20, vec_len=8, rounds=1)
+    ref = expected_sum(sub, 0, survivors=r0.survivors)
+    assert np.array_equal(np.asarray(r0.total, dtype=np.uint64), ref)
+
+
+def test_backpressure_bounds_inflight_bytes_counter_verified():
+    spec = AggSpec(clients=150, vec_len=64, max_inflight_bytes=4096)
+    res = run_aggregation(spec)
+    verify_aggregates(res)
+    checked = 0
+    for (src, dst), st in res.reorder.items():
+        if dst < spec.servers and src >= spec.servers:
+            checked += 1
+            assert st.max_bytes == 4096
+            assert st.peak_bytes <= 4096 + spec.vec_len * 8, (src, dst, st)
+    assert checked == spec.gateways * spec.servers
+
+
+def test_admission_reserves_round_footprint():
+    spec = AggSpec(clients=30, vec_len=16, rounds=2)
+    res = run_aggregation(spec)
+    adm = res.admission
+    plan = build_round_plan(spec)
+    assert adm["admitted"] == spec.servers * spec.rounds
+    assert adm["peak_frames"] >= plan.frames
+    assert adm["active"] == 0 and adm["frames_in_use"] == 0
+
+
+def test_hot_rounds_reuse_cached_plan_zero_replans(tmp_path):
+    spec = AggSpec(clients=25, vec_len=8, rounds=3)
+    cold = ArtifactCache(tmp_path)
+    res = run_aggregation(spec, cache=cold)
+    assert res.plan_events == ["miss", "hit", "hit"]
+    assert cold.stats.agg_misses == 1 and cold.stats.agg_hits == 2
+    hot = ArtifactCache(tmp_path)
+    res2 = run_aggregation(spec, cache=hot)
+    assert res2.plan_events == ["hit"] * 3
+    assert hot.stats.agg_misses == 0, "hot run must never re-plan"
+    for a, b in zip(res.rounds, res2.rounds):
+        assert np.array_equal(a.total, b.total)
+
+
+def test_shaped_wan_reports_latency_percentiles():
+    spec = AggSpec(clients=20, vec_len=8)
+    res = run_aggregation(
+        spec, transport="shaped",
+        fabric_spec=FabricSpec(latency_s=0.005, bandwidth=1e9))
+    verify_aggregates(res)
+    assert res.latency_ms["p50"] >= 5.0, \
+        "per-client latency must include the shaped link latency"
+
+
+def test_bad_specs_rejected():
+    with pytest.raises(ValueError):
+        AggSpec(clients=0)
+    with pytest.raises(ValueError):
+        AggSpec(clients=4, servers=0)
+    with pytest.raises(ValueError):
+        AggSpec(clients=4, rounds=0)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_agg_check_and_json_envelope(tmp_path):
+    out = tmp_path / "agg.json"
+    assert main(["agg", "--clients", "30", "--rounds", "2", "--vec-len", "8",
+                 "--check", "--json", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["schema_version"] >= 1
+    assert len(doc["rounds"]) == 2
+    assert doc["rounds"][0]["survivors"] == list(range(30))
+    assert doc["spec"]["clients"] == 30
+    assert doc["admission"]["active"] == 0
+    assert any(k in doc["reorder"] for k in ("2->0", "3->0"))
+
+
+def test_cli_agg_drop_reports_degraded(tmp_path, capsys):
+    out = tmp_path / "agg.json"
+    assert main(["agg", "--clients", "10", "--rounds", "2", "--vec-len", "4",
+                 "--drop", "1:2,5", "--check", "--json", str(out)]) == 0
+    assert "DEGRADED (2 dropped)" in capsys.readouterr().out
+    doc = json.loads(out.read_text())
+    assert doc["rounds"][0]["degraded"] is False
+    assert doc["rounds"][1]["degraded"] is True
+    assert 2 not in doc["rounds"][1]["survivors"]
+
+
+def test_cli_agg_bad_drop_and_missing_peers():
+    with pytest.raises(SystemExit, match="--drop"):
+        main(["agg", "--clients", "4", "--drop", "nope"])
+    with pytest.raises(SystemExit, match="--peers"):
+        main(["agg", "--clients", "4", "--rank", "0"])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 2-process TCP bitwise-identical to single-process
+# ---------------------------------------------------------------------------
+
+
+def _repro_env():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+@pytest.mark.slow
+def test_two_process_tcp_aggregation_matches_single_process(tmp_path):
+    args = ["--clients", "30", "--rounds", "2", "--vec-len", "8",
+            "--servers", "1", "--gateways", "1"]
+    single = tmp_path / "single.json"
+    assert main(["agg", *args, "--check", "--json", str(single)]) == 0
+
+    peers = ",".join(f"127.0.0.1:{p}" for p in pick_free_ports(2))
+    env = _repro_env()
+    out0 = tmp_path / "rank0.json"
+    procs = [subprocess.Popen(
+        [sys.executable, "-m", "repro", "agg", *args, "--peers", peers,
+         "--rank", "0", "--check", "--json", str(out0)], env=env),
+        subprocess.Popen(
+        [sys.executable, "-m", "repro", "agg", *args, "--peers", peers,
+         "--rank", "1"], env=env)]
+    for p in procs:
+        assert p.wait(timeout=120) == 0
+    a = json.loads(single.read_text())["rounds"]
+    b = json.loads(out0.read_text())["rounds"]
+    assert [r["aggregate"] for r in a] == [r["aggregate"] for r in b]
+    assert [r["survivors"] for r in a] == [r["survivors"] for r in b]

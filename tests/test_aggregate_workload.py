@@ -1,0 +1,88 @@
+"""The ``aggsum`` workload and its vectorized trace builder: the NumPy
+record emitter must be digest-identical to the DSL tracing path, the
+streamed program file must decode to the same instructions, and the
+workload must execute correctly through the standard pipeline."""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.api import JobSpec, run_job
+from repro.core.bytecode import Op, encode_chunk, strip_frees
+from repro.workloads import get
+from repro.workloads.agg_workload import (AGG_VEC, build_aggsum_records,
+                                          write_aggsum_program)
+from repro.workloads.gc_workloads import OUT_TAGS
+
+
+def _dsl_records(n: int) -> np.ndarray:
+    prog = get("aggsum").trace(n)[0]
+    return encode_chunk(strip_frees(prog.instrs))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 17, 64])
+def test_vectorized_builder_digest_identical_to_dsl(n):
+    dsl = _dsl_records(n)
+    fast = build_aggsum_records(n)
+    assert dsl.shape == fast.shape == (2 * n, dsl.shape[1])
+    assert np.array_equal(dsl, fast), \
+        f"n={n}: vectorized records diverge from the DSL trace"
+    assert hashlib.sha256(dsl.tobytes()).digest() == \
+        hashlib.sha256(fast.tobytes()).digest()
+
+
+def test_streamed_program_file_matches_dsl(tmp_path):
+    n = 12
+    pf = write_aggsum_program(tmp_path / "aggsum.bc", n)
+    got = list(pf.iter_instrs())
+    want = strip_frees(get("aggsum").trace(n)[0].instrs)
+    assert got == want
+    assert pf.vspace_slots == get("aggsum").trace(n)[0].vspace_slots
+    assert pf.meta["workload"] == "aggsum"
+
+
+def test_builder_rejects_empty():
+    with pytest.raises(ValueError):
+        build_aggsum_records(0)
+
+
+def test_trace_shape_and_ops():
+    prog = get("aggsum").trace(8)[0]
+    counts = prog.op_counts()
+    assert counts["INPUT"] == 8
+    assert counts["ADD"] == 7
+    assert counts["OUTPUT"] == 1
+
+
+def test_aggsum_executes_and_matches_oracle():
+    outs = run_job(JobSpec(workload="aggsum", n=16, plan_mode="unbounded"),
+                   check=True)
+    oracle = get("aggsum").oracle(16)
+    assert np.array_equal(outs[OUT_TAGS], oracle[OUT_TAGS])
+    assert outs[OUT_TAGS].shape == (AGG_VEC,)
+
+
+def test_aggsum_executes_under_memory_budget():
+    # the ADD chain touches 3 pages per step: a small budget forces swaps
+    run_job(JobSpec(workload="aggsum", n=16, memory_budget=4,
+                    plan_mode="memory"), check=True)
+
+
+def test_aggsum_matches_aggregation_subsystem_sum():
+    """The MAGE-program reduction computes the SAME aggregate the online
+    secure-aggregation fleet reveals (same PRG inputs, same mod-2^64
+    sum) — the two halves of the subsystem agree."""
+    from repro.aggregate import AggSpec, expected_sum
+    n = 16
+    outs = run_job(JobSpec(workload="aggsum", n=n, plan_mode="unbounded"))
+    spec = AggSpec(clients=n, vec_len=AGG_VEC)
+    assert np.array_equal(outs[OUT_TAGS], expected_sum(spec, 0))
+
+
+def test_records_use_input_add_output_only():
+    rec = build_aggsum_records(5)
+    ops = set((rec[:, 0] & 0xFFFF).tolist())
+    assert ops == {int(Op.INPUT), int(Op.ADD), int(Op.OUTPUT)}

@@ -28,7 +28,8 @@ def _doc_files():
 
 def test_required_docs_exist():
     for name in ("README.md", "docs/SIMULATOR.md", "docs/PLANNER.md",
-                 "docs/API.md", "docs/DISTRIBUTED.md", "docs/ENGINE.md"):
+                 "docs/API.md", "docs/DISTRIBUTED.md", "docs/ENGINE.md",
+                 "docs/AGGREGATE.md"):
         assert os.path.exists(os.path.join(REPO, name)), f"{name} missing"
 
 

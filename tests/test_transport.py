@@ -377,6 +377,127 @@ def test_cli_fabric_fleet(tmp_path, capsys):
     assert merged.exists()
 
 
+# ---------------------------------------------------------------------------
+# shaped+tcp: the shaped decorator over the tcp backend (cross-process WAN)
+# ---------------------------------------------------------------------------
+
+
+def test_shaped_tcp_registered():
+    from repro.core.transport import TRANSPORTS
+    assert "shaped+tcp" in TRANSPORTS
+
+
+def test_shaped_tcp_roundtrip_paces_sender_and_preserves_traffic():
+    ports = pick_free_ports(2)
+    fabric = build_fabric("shaped+tcp", 2, FabricSpec(
+        peers=tuple(f"127.0.0.1:{p}" for p in ports),
+        latency_s=0.15, bandwidth=None))
+    fabric.connect()
+    try:
+        a = fabric.transport_for(0)
+        b = fabric.transport_for(1)
+        assert a.paced_send and a.inner.name == "tcp"
+        t0 = time.monotonic()
+        a.send(0, 1, tag=4, data=_arr(1, 2, 3))
+        # pacing happens at the SENDER (no side table crosses processes)
+        assert time.monotonic() - t0 >= 0.10
+        got = b.recv(0, 1, tag=4, timeout=10)
+        assert list(got) == [1, 2, 3]
+        b.send(1, 0, tag=9, data=np.array([2.5]))
+        assert a.recv(1, 0, tag=9, timeout=10)[0] == 2.5
+        # stats and reorder surfaces delegate through the decorator
+        assert fabric.link_totals()[(0, 1)].messages == 1
+        assert (0, 1) in fabric.reorder_stats()
+    finally:
+        fabric.close()
+
+
+def test_shaped_tcp_single_rank_placement():
+    """Every hosted rank gets its own paced decorator, so ``--rank K``
+    placement (impossible for plain ``shaped``) builds fine."""
+    fx = build_fabric("shaped+tcp", 2,
+                      FabricSpec(rank=1, peers=("h:1", "h:2"),
+                                 latency_s=0.01))
+    assert fx.distributed and fx.hosted == [1]
+    assert fx.transport_for(1).paced_send
+
+
+# ---------------------------------------------------------------------------
+# fan-in stress: hundreds of concurrent senders into one endpoint
+# ---------------------------------------------------------------------------
+
+
+def test_inproc_fan_in_stress_accounting_depth_and_barrier():
+    """4 source ranks x 50 threads -> rank 0, depth-bounded links: the
+    accounting must sum exactly, every reorder buffer must respect its
+    configured bound, and a full-fabric barrier must still complete."""
+    n_src, threads_per, msgs_per, depth = 4, 50, 10, 8
+    t = InprocTransport(n_src + 1)
+    for src in range(1, n_src + 1):
+        t.set_depth(src, 0, max_msgs=depth)
+    payload = _arr(*range(5))
+
+    def sender(src, tid):
+        for i in range(msgs_per):
+            t.send(src, 0, tag=tid * 1000 + i, data=payload)
+
+    def receiver(src, tid):
+        for i in range(msgs_per):
+            got = t.recv(src, 0, tag=tid * 1000 + i, timeout=30)
+            assert np.array_equal(got, payload)
+
+    workers = []
+    for src in range(1, n_src + 1):
+        for tid in range(threads_per):
+            workers.append(threading.Thread(target=sender, args=(src, tid)))
+            workers.append(threading.Thread(target=receiver, args=(src, tid)))
+    for th in workers:
+        th.start()
+    for th in workers:
+        th.join(60)
+        assert not th.is_alive(), "fan-in stress deadlocked"
+
+    totals = t.link_totals()
+    for src in range(1, n_src + 1):
+        assert totals[(src, 0)].messages == threads_per * msgs_per
+        assert totals[(src, 0)].bytes == \
+            threads_per * msgs_per * payload.nbytes
+    for (src, dst), st in t.reorder_stats().items():
+        if dst == 0:
+            assert st.max_msgs == depth
+            assert st.peak_msgs <= depth, \
+                f"link {src}->{dst} exceeded its depth bound: {st}"
+            assert st.pending_msgs == 0 and st.pending_bytes == 0
+
+    # the fabric still barriers after the storm
+    done = []
+
+    def barrier(rank):
+        t.barrier(rank, range(n_src + 1))
+        done.append(rank)
+
+    bthreads = [threading.Thread(target=barrier, args=(r,))
+                for r in range(n_src + 1)]
+    for th in bthreads:
+        th.start()
+    for th in bthreads:
+        th.join(30)
+    assert sorted(done) == list(range(n_src + 1))
+
+
+def test_reorder_stats_track_pending_and_peak():
+    t = InprocTransport(2)
+    t.send(0, 1, 1, _arr(1, 2))
+    t.send(0, 1, 2, _arr(3, 4))
+    st = t.reorder_stats()[(0, 1)]
+    assert st.pending_msgs == 2 and st.peak_msgs == 2
+    assert st.pending_bytes == st.peak_bytes == 32
+    t.recv(0, 1, 1)
+    st = t.reorder_stats()[(0, 1)]
+    assert st.pending_msgs == 1
+    assert st.peak_msgs == 2, "peaks are high-water marks, not gauges"
+
+
 def test_run_worker_requires_peers(tmp_path):
     job = tmp_path / "job"
     assert main(["plan", "--workload", "merge", "-n", "64",
