@@ -110,9 +110,10 @@ def _add_spec_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--ckks-ring", type=int, default=None)
     ap.add_argument("--ckks-levels", type=int, default=None)
     ap.add_argument("--exec-backend", dest="exec_backend", default="scalar",
-                    choices=("scalar", "batched"),
-                    help="engine backend: per-instruction reference loop or "
-                         "plan-derived batched dispatch (docs/ENGINE.md); "
+                    choices=("scalar", "batched", "overlap"),
+                    help="engine backend: per-instruction reference loop, "
+                         "plan-derived batched dispatch (docs/ENGINE.md), or "
+                         "planned out-of-order NET overlap (docs/OVERLAP.md); "
                          "outputs are identical")
 
 
@@ -283,8 +284,9 @@ def cmd_exec(args) -> int:
 
 
 def cmd_bench(args) -> int:
-    from .scenarios import (BENCH_CASES, STREAMING_CASE, TINY_BENCH_CASES,
-                            TINY_STREAMING_CASE, run_bench)
+    from .scenarios import (BENCH_CASES, STREAMING_CASE, SWEEP_BUDGETS,
+                            SWEEP_LOOKAHEADS, TINY_BENCH_CASES,
+                            TINY_STREAMING_CASE, run_bench, run_sweep)
     if args.cases:
         cases = []
         for item in args.cases.split(","):
@@ -296,6 +298,23 @@ def cmd_bench(args) -> int:
             cases.append((name, int(n)))
     else:
         cases = TINY_BENCH_CASES if args.tiny else BENCH_CASES
+    if args.sweep:
+        budgets = tuple(float(b) for b in args.budgets.split(",")) \
+            if args.budgets else SWEEP_BUDGETS
+        lookaheads = tuple(int(x) for x in args.lookaheads.split(",")) \
+            if args.lookaheads else SWEEP_LOOKAHEADS
+        rows = run_sweep(cases=cases, budgets=budgets,
+                         lookaheads=lookaheads, sim_core=args.sim_core,
+                         plan_core=args.plan_core, cache_dir=args.cache)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"schema_version": SCHEMA_VERSION,
+                           "benchmark": "bench_sweep",
+                           "sweep": {"budgets": list(budgets),
+                                     "lookaheads": list(lookaheads)},
+                           "rows": rows}, f, indent=2)
+            print(f"wrote {args.json}")
+        return 0
     streaming_case = None
     if args.streaming or args.tiny:
         streaming_case = TINY_STREAMING_CASE if args.tiny else STREAMING_CASE
@@ -463,9 +482,10 @@ def main(argv=None) -> int:
     p.add_argument("--json", metavar="PATH",
                    help="write this process's outputs as JSON")
     p.add_argument("--exec-backend", dest="exec_backend", default=None,
-                   choices=("scalar", "batched"),
+                   choices=("scalar", "batched", "overlap"),
                    help="override the engine backend for this run "
-                        "(docs/ENGINE.md); outputs are identical")
+                        "(docs/ENGINE.md, docs/OVERLAP.md); outputs are "
+                        "identical")
     _add_core_args(p, default=None)
     p.set_defaults(fn=cmd_run)
 
@@ -499,6 +519,13 @@ def main(argv=None) -> int:
                    help="small sizes + no claim assertions (CI smoke)")
     p.add_argument("--streaming", action="store_true",
                    help="add a past-planner-cap case via the file pipeline")
+    p.add_argument("--sweep", action="store_true",
+                   help="budget x lookahead grid instead of the fixed "
+                        "scenario run (rows carry both knob values)")
+    p.add_argument("--budgets", default=None,
+                   help="comma list of budget fractions for --sweep")
+    p.add_argument("--lookaheads", default=None,
+                   help="comma list of planner lookaheads for --sweep")
     _add_core_args(p)
     _add_cache_arg(p)
     p.add_argument("--no-check", action="store_true")

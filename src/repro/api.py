@@ -63,9 +63,13 @@ PLAN_MODES = ("memory", "streaming", "unbounded")
 #: Engine execution backends: "scalar" is the per-instruction reference
 #: loop; "batched" precomputes a batch schedule from the plan's oblivious
 #: instruction stream and executes uniform independent groups through
-#: ``driver.execute_batch`` (see repro.exec and docs/ENGINE.md).  Like
-#: plan_core/sim_core, the two are output-identical by construction.
-EXEC_BACKENDS = ("scalar", "batched")
+#: ``driver.execute_batch`` (see repro.exec and docs/ENGINE.md).
+#: "overlap" additionally precomputes an out-of-order issue schedule that
+#: hoists NET_SENDs, defers NET_RECV completions and fills the WAN
+#: latency gap with independent local work (see repro.exec.overlap and
+#: docs/OVERLAP.md).  Like plan_core/sim_core, all three are
+#: output-identical by construction.
+EXEC_BACKENDS = ("scalar", "batched", "overlap")
 
 #: Version stamped into every machine-readable output (CLI ``--json``
 #: files and the serving daemon's protocol responses) so consumers can
@@ -639,6 +643,8 @@ class Session:
                              "`python -m repro fabric` for a checked fleet)")
         scheds = self._batch_schedules(planned) \
             if spec.exec_backend == "batched" else None
+        oscheds = self._overlap_schedules(planned) \
+            if spec.exec_backend == "overlap" else None
         outputs: dict[int, np.ndarray] = {}
         try:
             fx.connect()
@@ -647,7 +653,9 @@ class Session:
             for r in sorted(drivers):
                 party, wk = divmod(r, p)
                 drv = drivers[r]
-                if scheds is not None:
+                if scheds is not None or oscheds is not None:
+                    # overlap reuses the batched drivers for its K_LOCAL
+                    # groups, so both backends wrap the scalar driver
                     from .exec import make_batched
                     drv = make_batched(drv)
                 prog = planned[wk]
@@ -658,6 +666,9 @@ class Session:
                                       storage=storage,
                                       batch_schedule=(scheds[wk] if scheds
                                                       else None),
+                                      overlap_schedule=(oscheds[wk]
+                                                        if oscheds
+                                                        else None),
                                       tag=f"party{party}/worker{wk}"))
             self.engine_stats = run_engines(jobs)
             if fx.distributed:
@@ -695,6 +706,26 @@ class Session:
             cache.put_batch(spec, self.workload, scheds)
             return scheds
         return [build_batch_schedule(p, spec.chunk_instrs) for p in planned]
+
+    def _overlap_schedules(self, planned) -> list:
+        """One exec/ overlap schedule per worker memory program, served
+        from the artifact cache when possible (docs/OVERLAP.md).  Same
+        keying and unbounded-mode caveat as ``_batch_schedules``."""
+        from .exec.overlap import build_overlap_schedule
+        spec = self.spec
+        cache = self._usable_cache()
+        if cache is not None and spec.plan_mode != "unbounded":
+            got = cache.get_overlap(spec, self.workload)
+            if got is not None and len(got) == len(planned):
+                self.cache_events["overlap"] = "hit"
+                return got
+            self.cache_events["overlap"] = "miss"
+            scheds = [build_overlap_schedule(p, spec.chunk_instrs)
+                      for p in planned]
+            cache.put_overlap(spec, self.workload, scheds)
+            return scheds
+        return [build_overlap_schedule(p, spec.chunk_instrs)
+                for p in planned]
 
     # -- stage 3b: simulate ----------------------------------------------------
 

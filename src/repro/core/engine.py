@@ -70,6 +70,10 @@ class EngineStats:
     batched_instructions: int = 0
     #: number of execute_batch calls those instructions collapsed into
     batches: int = 0
+    #: NET_RECVs posted as deferred completion handles (overlap backend)
+    posted_recvs: int = 0
+    #: peak simultaneously outstanding recv handles (overlap backend)
+    max_inflight_recvs: int = 0
     #: per-link totals, (src_worker, dst_worker) -> [messages, bytes]; a key
     #: with src == this worker is outgoing traffic, dst == this worker
     #: incoming.  Counted by the engine thread itself (thread-confined, so
@@ -94,10 +98,12 @@ class Engine:
                  net: PartyView | None = None,
                  io_threads: int = 2,
                  use_memmap: bool = False,
-                 batch_schedule: Any = None):
+                 batch_schedule: Any = None,
+                 overlap_schedule: Any = None):
         self.prog = program
         self.driver = driver
         self.batch_schedule = batch_schedule
+        self.overlap_schedule = overlap_schedule
         psize = program.page_slots
         page_shape = (psize, driver.lane)
         if program.phase == "virtual":
@@ -148,7 +154,9 @@ class Engine:
         # try/finally: a mid-run driver/storage exception must not leak the
         # AsyncIO thread pool or an open (possibly temp-file) backend.
         try:
-            if self.batch_schedule is not None \
+            if self.overlap_schedule is not None:
+                self._run_loop_overlap(on_output)
+            elif self.batch_schedule is not None \
                     and hasattr(self.driver, "execute_batch"):
                 self._run_loop_batched(on_output)
             else:
@@ -195,6 +203,89 @@ class Engine:
                 else:
                     for ins in decode_chunk(rec[rows]):
                         self._exec_one(ins, on_output)
+            ci += 1
+        drv.finalize()
+
+    def _net_row(self, rec, instrs, r: int, is_send: bool):
+        """(peer, tag, span-view) for a NET_SEND/NET_RECV row, straight
+        from the record columns when no decoded Instr list is around."""
+        if instrs is not None:
+            ins = instrs[r]
+            span = ins.ins[0] if is_send else ins.outs[0]
+            return int(ins.imm[0]), int(ins.imm[1]), self._view(span)
+        row = rec[r]
+        off = _IN_OFF if is_send else _OUT_OFF
+        return (int(row[_IMM_OFF]), int(row[_IMM_OFF + 1]),
+                self._view((int(row[off]), int(row[off + 1]))))
+
+    def _run_loop_overlap(self, on_output) -> None:
+        """The planned out-of-order issue path (exec/overlap.py): walk the
+        OverlapSchedule's groups — NET_SENDs issued at their hoisted
+        position, NET_RECVs posted as deferred completion handles
+        (``recv_async``) and completed only at their K_RECV_WAIT group,
+        with independent local work (batched where the driver allows)
+        filling the latency gap.  Dataflow order is schedule-enforced, so
+        results are bitwise-identical to the scalar reference."""
+        from ..exec.overlap import K_LOCAL, K_RECV_WAIT, K_SEND
+        drv = self.driver
+        sched = self.overlap_schedule
+        sched.validate_for(self.prog)
+        batch_ops = (getattr(drv, "batch_ops", frozenset())
+                     if hasattr(drv, "execute_batch") else frozenset())
+        order, bounds = sched.order, sched.bounds
+        group_kind, group_op = sched.group_kind, sched.group_op
+        chunk_groups = sched.chunk_groups
+        stats = self.stats
+        w = self.prog.worker
+        ci = 0
+        for start, rec, instrs in iter_record_chunks(self.prog,
+                                                     sched.chunk_instrs,
+                                                     cache=True):
+            handles: dict[int, tuple] = {}
+            for g in range(chunk_groups[ci], chunk_groups[ci + 1]):
+                rows = order[bounds[g]:bounds[g + 1]]
+                kind = int(group_kind[g])
+                if kind == K_LOCAL:
+                    gop = int(group_op[g])
+                    if gop >= 0 and len(rows) >= 2 and rec is not None \
+                            and Op(gop) in batch_ops:
+                        self._exec_batch(Op(gop), rec, rows)
+                    elif instrs is not None:
+                        for r in rows:
+                            self._exec_one(instrs[r], on_output)
+                    else:
+                        for ins in decode_chunk(rec[rows]):
+                            self._exec_one(ins, on_output)
+                elif kind == K_SEND:
+                    net = self._net()
+                    for r in rows:
+                        dst, tag, view = self._net_row(rec, instrs, r, True)
+                        net.send_async(w, dst, tag, view)
+                        stats.directives += 1
+                        stats.net_messages += 1
+                        stats.net_sent_bytes += view.nbytes
+                        stats._net_count(w, dst, view.nbytes)
+                elif kind == K_RECV_WAIT:
+                    for r in rows:
+                        h, src, nbytes = handles.pop(int(r))
+                        h.wait()
+                        stats.directives += 1
+                        stats.net_messages += 1
+                        stats.net_recv_bytes += nbytes
+                        stats._net_count(src, w, nbytes)
+                else:  # K_RECV_POST
+                    net = self._net()
+                    for r in rows:
+                        src, tag, view = self._net_row(rec, instrs, r, False)
+                        handles[int(r)] = (
+                            net.recv_async(src, w, tag, out=view),
+                            src, view.nbytes)
+                        stats.posted_recvs += 1
+                    if len(handles) > stats.max_inflight_recvs:
+                        stats.max_inflight_recvs = len(handles)
+            if handles:  # pragma: no cover - builder waits inside the chunk
+                raise AssertionError(
+                    f"{len(handles)} recv handles leaked past chunk {ci}")
             ci += 1
         drv.finalize()
 

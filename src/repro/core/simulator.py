@@ -77,6 +77,7 @@ class SimResult:
     write_bytes: int = 0
     net_msgs: int = 0          # NET_SEND directives replayed
     net_bytes: int = 0         # bytes those sends would move on the fabric
+    net_stall: float = 0.0     # seconds the clock waited on the network
 
     @property
     def overhead(self) -> float:
@@ -180,13 +181,27 @@ class _MemoryReplay:
     at the end), so both cores add the same floats in the same order."""
 
     def __init__(self, model: DeviceModel, page_bytes: int, slot_bytes: int,
-                 r: SimResult):
+                 r: SimResult, net_latency_s: float = 0.0,
+                 net_bandwidth: float | None = None,
+                 net_mode: str = "inorder"):
         self.dev = _Device(model, page_bytes)
         self.page_bytes = page_bytes
         self.slot_bytes = slot_bytes
         self.r = r
         self.t = 0.0
         self.slot_done: dict[int, float] = {}
+        self.net_lat = net_latency_s
+        self.net_bw = net_bandwidth
+        self.net_overlap = net_mode == "overlap"
+        # overlap mode: the one-deep latency window of the last message
+        # still in flight; local compute between sends hides it
+        self.net_due = 0.0
+
+    def settle_net(self) -> None:
+        """Charge any still-hidden latency residue (the trailing recv)."""
+        if self.net_due > self.t:
+            self.r.net_stall += self.net_due - self.t
+            self.t = self.net_due
 
     def flush(self, sub: float) -> None:
         self.t += sub
@@ -196,6 +211,14 @@ class _MemoryReplay:
         """One directive: ``a``/``b`` are imm[0]/imm[1], ``n0`` is
         ins[0]'s slot count (NET_SEND accounting)."""
         r, dev, t = self.r, self.dev, self.t
+        if self.net_overlap and self.net_due > 0.0 and op != _E_NET_SEND:
+            # swap directives are reorder barriers for NET (the planned
+            # scheduler never moves a send/recv across one — residency):
+            # every posted recv window must settle before the swap
+            if self.net_due > t:
+                r.net_stall += self.net_due - t
+                t = self.net_due
+            self.net_due = 0.0
         if op == _E_SWAP_IN or op == _E_SWAP_OUT:
             done = dev.submit(t)
             r.stall += done - t
@@ -227,8 +250,25 @@ class _MemoryReplay:
         elif op == _E_NET_SEND:
             # accounted like the transport fabric does (send side): the
             # span's slots at the protocol's slot width
+            nbytes = n0 * self.slot_bytes
             r.net_msgs += 1
-            r.net_bytes += n0 * self.slot_bytes
+            r.net_bytes += nbytes
+            if self.net_lat or self.net_bw:
+                xfer = nbytes / self.net_bw if self.net_bw else 0.0
+                if self.net_overlap:
+                    # sends are hoisted and recv waits deferred, so the
+                    # latency windows of every exchange in the barrier
+                    # window run concurrently; only the residue of the
+                    # latest one past the local work stalls (at the next
+                    # barrier or at the end of the program)
+                    t += xfer
+                    due = t + self.net_lat
+                    if due > self.net_due:
+                        self.net_due = due
+                else:
+                    # in-order issue: every exchange is a blocking round
+                    r.net_stall += self.net_lat
+                    t += xfer + self.net_lat
         self.t = t
 
 
@@ -255,14 +295,34 @@ def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
                             page_bytes: int,
                             model: DeviceModel | None = None,
                             core: str = "array",
-                            chunk_instrs: int = DEFAULT_CHUNK_INSTRS
-                            ) -> SimResult:
-    """Replay a 'physical' or 'memory' phase program."""
+                            chunk_instrs: int = DEFAULT_CHUNK_INSTRS,
+                            net_latency_s: float = 0.0,
+                            net_bandwidth: float | None = None,
+                            net_mode: str = "inorder") -> SimResult:
+    """Replay a 'physical' or 'memory' phase program.
+
+    ``net_latency_s``/``net_bandwidth`` price NET_SEND exchanges on a
+    modelled link (both default off — NET then costs nothing, as before).
+    ``net_mode`` selects the issue discipline being predicted:
+
+    * ``"inorder"`` — every exchange is a blocking round:
+      ``t += xfer + latency`` at each NET_SEND.
+    * ``"overlap"`` — the planned out-of-order engine (docs/OVERLAP.md):
+      sends are hoisted and recv waits deferred, so the latency windows
+      of every exchange between two swap barriers run concurrently and
+      hide behind local compute; only the residue of the latest window
+      still open at the next barrier (or program end) stalls.
+    """
     _check_core(core)
+    if net_mode not in ("inorder", "overlap"):
+        raise ValueError(f"net_mode must be 'inorder' or 'overlap', "
+                         f"got {net_mode!r}")
     model = model or DeviceModel()
     r = SimResult()
     slot_bytes = max(page_bytes // max(prog.page_slots, 1), 1)
-    rp = _MemoryReplay(model, page_bytes, slot_bytes, r)
+    rp = _MemoryReplay(model, page_bytes, slot_bytes, r,
+                       net_latency_s=net_latency_s,
+                       net_bandwidth=net_bandwidth, net_mode=net_mode)
     if core == "scalar":
         rp.flush(_mem_walk(iter_instructions(prog), cost, rp, 0.0))
     else:
@@ -283,6 +343,7 @@ def simulate_memory_program(prog: Program | ProgramFile, cost: CostFn,
                 prev = e + 1
             sub = sum(costs[prev:], sub)
         rp.flush(sub)
+    rp.settle_net()
     r.total = rp.t
     return r
 
@@ -343,6 +404,62 @@ class _OsReplay:
             blocked = lag - self.m.os_writeback_throttle_s
             r.stall += blocked
             self.t = now + blocked
+
+    def fault_run(self, flushes: list, majors: list, wbs: list) -> None:
+        """Replay one fault run's per-touch (flush?, major_fault?,
+        writeback?) event sequence in a single loop with all clock/device
+        state hoisted to locals — arithmetic, operation order and float
+        associativity identical to calling ``flush``/``major_fault``/
+        ``writeback`` one by one, minus three attribute-dispatched calls
+        per faulting touch.  This is the array core's batched thrash
+        path; the per-call methods stay the reference (and the scalar
+        core's only) entry points."""
+        m, dev, r = self.m, self.dev, self.r
+        t = self.t
+        free_at = dev.free_at
+        compute, stall = r.compute, r.stall
+        reads, writes = r.reads, r.writes
+        read_b, write_b = r.read_bytes, r.write_bytes
+        ov = m.fault_overhead * self.os_pages_per
+        lat = m.latency
+        bw = m.bandwidth
+        cb = self.cluster_bytes
+        xc = cb / bw
+        clusters = self.clusters
+        pb = self.page_bytes
+        xp = pb / bw
+        thr = m.os_writeback_throttle_s
+        for j in range(len(majors)):
+            f = flushes[j]
+            if f is not None:
+                t += f
+                compute += f
+            if majors[j]:
+                tt = t + ov
+                for _ in range(clusters):
+                    start = tt if tt > free_at else free_at
+                    free_at = start + xc
+                    done = free_at + lat
+                    stall += done - tt
+                    tt = done
+                    read_b += cb
+                reads += 1
+                t = tt
+            if wbs[j]:
+                start = t if t > free_at else free_at
+                free_at = start + xp
+                writes += 1
+                write_b += pb
+                lag = free_at - t
+                if lag > thr:
+                    blocked = lag - thr
+                    stall += blocked
+                    t = t + blocked
+        self.t = t
+        dev.free_at = free_at
+        r.compute, r.stall = compute, stall
+        r.reads, r.writes = reads, writes
+        r.read_bytes, r.write_bytes = read_b, write_b
 
 
 def _os_scalar(prog, cost: CostFn, num_frames: int, rp: _OsReplay,
@@ -445,6 +562,102 @@ class _OsArrayCore:
             if not self._cand:
                 raise RuntimeError("no frame to evict (num_frames == 0)")
 
+    def _take_victims(self, want: int) -> list[int]:
+        """Up to ``want`` LRU victim frames from the candidate snapshot,
+        in eviction order, WITHOUT booking the evictions — the batched
+        fault-run path books them in one vectorized sweep.  Exactly the
+        frames ``_evict_frame`` would return: candidate validity is
+        static during a run (evicted frames go to ``INF``, and only
+        already-consumed or free — ``INF``-keyed, hence invalid —
+        candidates are ever reassigned), so the stale-check can run as
+        one vectorized pass over the remaining snapshot.  May return
+        fewer than ``want`` (snapshot exhausted): the caller shrinks the
+        run and the scalar path re-snapshots."""
+        out: list[int] = []
+        lt = self.last_touch
+        while len(out) < want and self._ci < len(self._cand):
+            # bounded block scan: short runs must not pay a rescan of the
+            # whole (possibly stale) remainder on every call
+            blk = max(2 * (want - len(out)), 64)
+            rem = self._cand[self._ci:self._ci + blk]
+            keys = np.fromiter((c[0] for c in rem), np.int64, count=len(rem))
+            frs = np.fromiter((c[1] for c in rem), np.int64, count=len(rem))
+            vpos = np.flatnonzero((keys < INF) & (lt[frs] == keys))
+            vpos = vpos[:want - len(out)]
+            if vpos.size:
+                out.extend(frs[vpos].tolist())
+                self._ci += int(vpos[-1]) + 1
+            else:
+                self._ci += len(rem)
+        return out
+
+    def _fault_run(self, m0: int, stop: int, pg: np.ndarray, wm: np.ndarray,
+                   rows_l: list, costs: list, ci: int, sub: float) -> int:
+        """Batch one run of consecutive all-miss touches on pairwise-
+        distinct pages (the thrash pattern: every touch faults, one page
+        per touch).  Replay events — compute flushes at instruction
+        boundaries, major faults, victim write-backs — fire one by one in
+        exactly the scalar order (the device model is order-sensitive),
+        but all residency bookkeeping (LRU stamps, slot/frame/dirty/
+        stored vectors, victim selection) runs as vectorized sweeps.
+        Returns the first unprocessed touch (== ``m0`` when the victim
+        snapshot is empty and the caller should take the scalar path).
+
+        Exactness: probe misses stay misses (evictions never make a page
+        resident, and distinct pages rule out an earlier fault of the
+        run resupplying a later touch), victim pages are resident and so
+        disjoint from the run's pages (their ``stored`` promotion cannot
+        retag a run page), and the touch→frame pairing replays the
+        scalar free-list pops and candidate consumption in order."""
+        rp = self.rp
+        n = stop - m0
+        pages = pg[m0:stop]
+        stored_f = self.stored[pages]
+        nf0 = min(n, self.nf - self.used)
+        vf_list = self._take_victims(n - nf0) if n > nf0 else []
+        if nf0 + len(vf_list) < n:
+            n = nf0 + len(vf_list)
+            if n < _OS_RUN_MIN:
+                return m0
+            stop = m0 + n
+            pages = pages[:n]
+            stored_f = stored_f[:n]
+        nev = len(vf_list)
+        vf = np.asarray(vf_list, dtype=np.int64)
+        vdirty = self.dirty_of[vf] if nev else np.zeros(0, dtype=bool)
+        # replay events in exact scalar order: per missing touch, flush
+        # the compute accrued since the last fault, then the major fault,
+        # then its eviction's write-back — one hoisted-locals loop
+        st_l = stored_f.tolist()
+        wb_l = [False] * nf0 + vdirty.tolist()
+        flushes: list = [None] * n
+        cur = ci
+        for j in range(n):
+            r = rows_l[m0 + j]
+            if j == 0 or r > cur:
+                flushes[j] = sum(costs[cur:r], sub)
+                sub = 0.0
+                cur = r
+        rp.fault_run(flushes, st_l, wb_l)
+        # vectorized bookkeeping: release victims, then assign frames in
+        # scalar pairing order (free-list tail pops first, then victims)
+        if nev:
+            vq = self.page_of[vf]
+            self.stored[vq[vdirty]] = True
+            self.slot_of[vq] = -1
+        if nf0:
+            frames = self.free[-nf0:][::-1] + vf_list
+            del self.free[-nf0:]
+        else:
+            frames = vf_list
+        fr = np.asarray(frames, dtype=np.int64)
+        self.slot_of[pages] = fr
+        self.page_of[fr] = pages
+        self.dirty_of[fr] = wm[m0:stop]
+        self.last_touch[fr] = self.base + np.arange(m0, stop, dtype=np.int64)
+        self.used += n - nev
+        return stop
+
     def _touch(self, k: int, pg_l: list, fl_l: list) -> None:
         """One scalar touch: exactly ``_os_scalar``'s per-touch body."""
         p = pg_l[k]
@@ -505,6 +718,29 @@ class _OsArrayCore:
                     k, m0, dtype=np.int64)
                 self.dirty_of[ssl[wm[seg]]] = True
             if m0 < end:
+                # maximal run of consecutive probe-miss touches with
+                # pairwise-distinct pages: thrash traces fault on every
+                # touch, and handling those runs one by one in Python is
+                # what degenerated the array core to ~2-5x scalar — batch
+                # them through _fault_run instead
+                mrel = sl[m0 - k:]
+                res = np.flatnonzero(mrel >= 0)
+                stop = m0 + (int(res[0]) if res.size else len(mrel))
+                if stop - m0 >= _OS_RUN_MIN:
+                    stop = _unique_prefix(pg, m0, stop)
+                done = m0
+                if stop - m0 >= _OS_RUN_MIN:
+                    done = self._fault_run(m0, stop, pg, wm, rows_l,
+                                           costs, ci, sub)
+                if done > m0:
+                    ci = rows_l[done - 1]
+                    sub = 0.0
+                    if done == end:   # all-miss probe: thrash, widen
+                        win = min(win * 2, _OS_PROBE_MAX)
+                    else:
+                        win = max(_OS_PROBE_MIN, min(win, 2 * (m0 - k + 8)))
+                    k = done
+                    continue
                 i = rows_l[m0]
                 self.rp.flush(sum(costs[ci:i], sub))
                 sub = 0.0
@@ -524,6 +760,23 @@ class _OsArrayCore:
 
 _OS_PROBE_MAX = 8192
 _OS_PROBE_MIN = 32
+#: below this, a fault run is not worth the vectorized setup
+_OS_RUN_MIN = 8
+
+
+def _unique_prefix(pg: np.ndarray, m0: int, stop: int) -> int:
+    """Largest ``stop' <= stop`` such that ``pg[m0:stop']`` has pairwise
+    distinct pages (the fault-run batcher's precondition: a duplicate
+    would be a hit after its first occurrence faults the page in)."""
+    run = pg[m0:stop]
+    srt = np.argsort(run, kind="stable")
+    v = run[srt]
+    dup = v[1:] == v[:-1]
+    if not dup.any():
+        return stop
+    # stable sort keeps equal pages in touch order, so srt[1:][dup] are
+    # second-and-later occurrences; the earliest one ends the prefix
+    return m0 + int(srt[1:][dup].min())
 
 
 def simulate_os_paging(virtual_prog: Program | ProgramFile, cost: CostFn,

@@ -65,7 +65,7 @@ import numpy as np
 __all__ = [
     "Transport", "InprocTransport", "TcpTransport", "ShapedTransport",
     "Fabric", "FabricSpec", "PartyView", "LinkStats", "ReorderStats",
-    "TransportError", "TransportClosed", "build_fabric",
+    "Completion", "TransportError", "TransportClosed", "build_fabric",
     "register_transport", "aggregate_links", "pick_free_ports",
     "TRANSPORTS",
 ]
@@ -216,6 +216,58 @@ class _Link:
             self._cond.notify_all()
 
 
+class Completion:
+    """Handle for an asynchronous transport operation.
+
+    ``send_async`` returns an already-completed handle (sends hand their
+    bytes to the fabric eagerly); ``recv_async`` returns a *deferred*
+    receive: the message stays in the link's reorder buffer — and, on a
+    shaped link, its virtual delivery-time sleep stays unpaid — until
+    :meth:`wait` runs the underlying blocking ``recv``.  Deferring the
+    completion to the instruction that actually needs the data is what
+    lets the overlap engine hide WAN latency behind local compute.
+
+    Ordering contract: handles for the same ``(src, dst, tag)`` channel
+    must be waited in the order they were created (per-tag FIFO is
+    resolved at wait time).  The planned overlap pass enforces this with
+    channel-order edges; ad-hoc users must do the same.
+
+    ``wait`` is idempotent (the payload is cached) but not safe to call
+    from two threads at once — a handle belongs to its issuing engine."""
+
+    __slots__ = ("_thunk", "_result", "_err_prefix")
+
+    def __init__(self, thunk: Callable[[], "np.ndarray | None"] | None,
+                 err_prefix: str = ""):
+        self._thunk = thunk
+        self._result: np.ndarray | None = None
+        self._err_prefix = err_prefix
+
+    @classmethod
+    def completed(cls, result: "np.ndarray | None" = None) -> "Completion":
+        c = cls(None)
+        c._result = result
+        return c
+
+    def done(self) -> bool:
+        """True once :meth:`wait` has completed (never before for a
+        deferred receive — the payload is not consumed early)."""
+        return self._thunk is None
+
+    def wait(self) -> "np.ndarray | None":
+        """Complete the operation; blocks (and, on shaped links, sleeps
+        out the virtual delivery time) until the payload is available."""
+        if self._thunk is not None:
+            thunk, self._thunk = self._thunk, None
+            try:
+                self._result = thunk()
+            except TransportError as e:
+                if self._err_prefix:
+                    raise TransportError(f"{self._err_prefix}{e}") from e
+                raise
+        return self._result
+
+
 class Transport:
     """Abstract fabric: tagged point-to-point array transfer between
     integer-ranked endpoints."""
@@ -240,6 +292,28 @@ class Transport:
         ``out``, the payload is written into it (reshaped) as well as
         returned."""
         raise NotImplementedError
+
+    def send_async(self, src: int, dst: int, tag: int, data: np.ndarray,
+                   copy: bool = True) -> Completion:
+        """Issue a send and return a completion handle.  The base
+        implementation hands the bytes to the fabric eagerly (sends only
+        block on reorder-buffer depth bounds — backpressure the caller
+        must feel anyway) and returns an already-done handle."""
+        self.send(src, dst, tag, data, copy=copy)
+        return Completion.completed()
+
+    def recv_async(self, src: int, dst: int, tag: int,
+                   out: np.ndarray | None = None,
+                   timeout: float | None = None) -> Completion:
+        """Post a deferred receive over the existing reorder buffers.
+
+        Nothing is consumed until ``wait()``: the message (delivered by
+        the sender, a TCP reader thread, or a shaped side table) keeps
+        buffering in the per-tag deque, and ``wait()`` runs the blocking
+        ``recv`` — including any shaped delivery-time sleep — writing
+        into ``out`` at that point."""
+        return Completion(
+            lambda: self.recv(src, dst, tag, out=out, timeout=timeout))
 
     def barrier(self, rank: int, group: Sequence[int],
                 _base: int = _ENGINE_BARRIER_BASE) -> None:
@@ -783,6 +857,19 @@ class PartyView:
         except TransportError as e:
             raise TransportError(
                 f"NET_RECV worker{src}->worker{dst} tag={tag}: {e}") from e
+
+    def send_async(self, src: int, dst: int, tag: int,
+                   data: np.ndarray) -> Completion:
+        return self.transport.send_async(self.base + src, self.base + dst,
+                                         tag, data)
+
+    def recv_async(self, src: int, dst: int, tag: int,
+                   out: np.ndarray | None = None) -> Completion:
+        c = self.transport.recv_async(self.base + src, self.base + dst,
+                                      tag, out=out,
+                                      timeout=self.recv_timeout)
+        c._err_prefix = f"NET_RECV worker{src}->worker{dst} tag={tag}: "
+        return c
 
     def barrier(self, rank: int) -> None:
         group = range(self.base, self.base + self.num_workers)

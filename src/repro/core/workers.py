@@ -173,6 +173,10 @@ class EngineJob:
     #: the batched fast path when both this and a batch-capable driver are
     #: present, the scalar reference loop otherwise
     batch_schedule: Any = None
+    #: optional exec/ overlap schedule (see repro.exec.overlap); takes
+    #: precedence over batch_schedule — the overlap loop batches local
+    #: groups itself when the driver is batch-capable
+    overlap_schedule: Any = None
 
 
 def run_engines(jobs: Sequence[EngineJob],
@@ -187,7 +191,8 @@ def run_engines(jobs: Sequence[EngineJob],
             eng = Engine(job.program, job.driver, storage=job.storage,
                          net=job.net, io_threads=io_threads,
                          use_memmap=job.use_memmap,
-                         batch_schedule=job.batch_schedule)
+                         batch_schedule=job.batch_schedule,
+                         overlap_schedule=job.overlap_schedule)
             results[k] = eng.run(on_output=job.on_output)
         except Exception as e:  # surfaced below
             errors.append((job.tag if job.tag is not None else k, e))

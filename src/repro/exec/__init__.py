@@ -4,6 +4,9 @@ Three layers:
 
 * :mod:`repro.exec.batching`    — plan-derived batch schedules (the
   sidecar artifact; built once per plan, cached by ``plan_hash``);
+* :mod:`repro.exec.overlap`     — planned out-of-order issue schedules
+  that hoist ``NET_SEND``s, defer ``NET_RECV`` completions and fill the
+  WAN latency gap with independent local work (docs/OVERLAP.md);
 * :mod:`repro.exec.base`        — the ``BatchedProtocolDriver`` contract
   and gather/scatter helpers;
 * :mod:`repro.exec.batched_gc` / :mod:`repro.exec.batched_ckks` — the
@@ -19,9 +22,12 @@ from .base import BatchedProtocolDriver, make_batched
 from .batched_ckks import BatchedCkksDriver
 from .batched_gc import BatchedGCDriver, BatchedPlaintextDriver
 from .batching import BatchSchedule, build_batch_schedule
+from .overlap import OverlapSchedule, build_overlap_schedule
 
 __all__ = [
     "BatchSchedule",
+    "OverlapSchedule",
+    "build_overlap_schedule",
     "BatchedCkksDriver",
     "BatchedGCDriver",
     "BatchedPlaintextDriver",

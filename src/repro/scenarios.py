@@ -279,14 +279,23 @@ class TrafficReport:
 def measure_traffic(name: str, n: int, num_workers: int = 1,
                     driver: str = "auto", transport: str = "inproc",
                     fabric: FabricSpec | None = None,
-                    check: bool = False) -> TrafficReport:
+                    check: bool = False, exec_backend: str = "scalar",
+                    warmup: bool = False) -> TrafficReport:
     """Run a workload for REAL (unbounded plan) and report what actually
     crossed the fabric — the measured replacement for fig10/fig11's
     modeled byte counts.  ``transport="shaped"`` with a fabric carrying
-    ``latency_s``/``bandwidth`` makes ``seconds`` a WAN measurement."""
+    ``latency_s``/``bandwidth`` makes ``seconds`` a WAN measurement.
+
+    ``exec_backend="overlap"`` runs the planned out-of-order engine
+    (docs/OVERLAP.md); ``warmup=True`` executes once untimed first so
+    the timed run does not pay one-time import/compile costs."""
     spec = JobSpec(workload=name, n=n, num_workers=num_workers,
                    plan_mode="unbounded", driver=driver,
-                   transport=transport, fabric=fabric)
+                   transport=transport, fabric=fabric,
+                   exec_backend=exec_backend)
+    if warmup:
+        with Session(spec) as w:
+            w.execute(check=False)
     with Session(spec) as s:
         s.plan()                      # keep trace/plan out of the timing
         t0 = time.perf_counter()
@@ -339,4 +348,38 @@ def run_bench(cases=None, budget_frac: float = 0.4, check: bool = True,
         beats = sum(r["os_s"] > r["mage_s"] for r in rows)
         assert beats == len(rows), \
             f"MAGE must beat OS on all cases, got {beats}/{len(rows)}"
+    return rows
+
+
+#: the `bench --sweep` grid: how the planner's two main knobs trade off
+SWEEP_BUDGETS = (0.15, 0.25, 0.4, 0.6)
+SWEEP_LOOKAHEADS = (100, 1_000, 10_000)
+
+
+def run_sweep(cases=None, budgets=SWEEP_BUDGETS,
+              lookaheads=SWEEP_LOOKAHEADS, sim_core: str = "array",
+              plan_core: str = "array", cache_dir=None) -> list[dict]:
+    """Budget x lookahead grid over the §8.2 scenarios: one row per
+    (case, budget_frac, lookahead) cell, replayed on the vectorized
+    simulator cores.  With ``cache_dir`` the trace is built once per
+    case and every grid cell replans from the cached artifact."""
+    cases = cases if cases is not None else TINY_BENCH_CASES
+    rows = []
+    for name, n in cases:
+        for b in budgets:
+            for la in lookaheads:
+                r = run_workload(name, n, budget_frac=float(b),
+                                 plan_overrides={"lookahead": int(la)},
+                                 sim_core=sim_core, plan_core=plan_core,
+                                 cache_dir=cache_dir)
+                print(f"sweep: {name:12s} n={n} budget={b:<5} "
+                      f"lookahead={la:<6} | mage={r.mage_s:8.3f}s "
+                      f"os={r.os_s:8.3f}s speedup={r.speedup_vs_os:5.2f}x "
+                      f"overhead={100 * r.pct_of_unbounded:6.1f}%",
+                      flush=True)
+                rows.append({"workload": name, "n": n,
+                             "budget_frac": float(b), "lookahead": int(la),
+                             "speedup_vs_os": r.speedup_vs_os,
+                             "pct_of_unbounded": r.pct_of_unbounded,
+                             **dataclasses.asdict(r)})
     return rows

@@ -12,6 +12,8 @@ sessions, processes and daemon restarts.  Layout under one cache root::
                             worker0.memory.bc       planned memory program
     <root>/batch/<plan_hash>/manifest.json
                              worker0.batch.npz      exec/ batch schedule
+    <root>/overlap/<plan_hash>/manifest.json
+                               worker0.overlap.npz  exec/ overlap schedule
 
 Every entry's manifest records the sha256 + byte size of each artifact
 file, the spec that produced it, and (for plans) the resolved per-worker
@@ -67,6 +69,8 @@ class CacheStats:
     plan_misses: int = 0
     batch_hits: int = 0
     batch_misses: int = 0
+    overlap_hits: int = 0
+    overlap_misses: int = 0
     agg_hits: int = 0
     agg_misses: int = 0
     invalid: int = 0          # tampered/truncated entries rejected + deleted
@@ -114,6 +118,7 @@ class ArtifactCache:
         os.makedirs(os.path.join(self.root, "trace"), exist_ok=True)
         os.makedirs(os.path.join(self.root, "plan"), exist_ok=True)
         os.makedirs(os.path.join(self.root, "batch"), exist_ok=True)
+        os.makedirs(os.path.join(self.root, "overlap"), exist_ok=True)
         os.makedirs(os.path.join(self.root, "agg"), exist_ok=True)
 
     # -- bookkeeping ---------------------------------------------------------
@@ -121,7 +126,7 @@ class ArtifactCache:
     def _entries(self) -> list[tuple[float, int, str]]:
         """(mtime, bytes, dir) per complete entry, oldest first."""
         out = []
-        for kind in ("trace", "plan", "batch", "agg"):
+        for kind in ("trace", "plan", "batch", "overlap", "agg"):
             base = os.path.join(self.root, kind)
             for name in os.listdir(base):
                 d = os.path.join(base, name)
@@ -375,6 +380,52 @@ class ArtifactCache:
             # batch entries carry sidecars, not bytecode
             self._write_manifest(tmp, {
                 "kind": "batch", "key": key,
+                "spec": spec.normalized(workload).to_dict(),
+                "programs": [], "schedules": names})
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._publish(tmp, entry_dir)
+
+    # -- overlap schedules (exec/ overlap backend sidecars) ------------------
+
+    def get_overlap(self, spec, workload=None):
+        """Cached per-worker :class:`~repro.exec.overlap.OverlapSchedule`
+        sidecars for the spec's plan shape, or None.  Keyed by
+        ``plan_hash`` like the batch sidecars: the schedule is a
+        deterministic function of the planned memory program."""
+        from ..exec.overlap import OverlapSchedule
+        key = spec.plan_hash(workload)
+        got = self._load("overlap", key)
+        with self._lock:
+            if got is None:
+                self.stats.overlap_misses += 1
+            else:
+                self.stats.overlap_hits += 1
+        if got is None:
+            return None
+        entry_dir, manifest = got
+        try:
+            return [OverlapSchedule.load(os.path.join(entry_dir, n))
+                    for n in manifest["schedules"]]
+        except (OSError, ValueError, KeyError):
+            self._drop(entry_dir)
+            return None
+
+    def put_overlap(self, spec, workload, schedules) -> None:
+        """Cache freshly built overlap schedules (one npz per worker)."""
+        key = spec.plan_hash(workload)
+        entry_dir = os.path.join(self.root, "overlap", key)
+        tmp = self._tmpdir("overlap")
+        try:
+            names = []
+            for i, sched in enumerate(schedules):
+                name = f"worker{i}.overlap.npz"
+                sched.save(os.path.join(tmp, name))
+                names.append(name)
+            # "programs" is always present (entry validation iterates it)
+            self._write_manifest(tmp, {
+                "kind": "overlap", "key": key,
                 "spec": spec.normalized(workload).to_dict(),
                 "programs": [], "schedules": names})
         except BaseException:

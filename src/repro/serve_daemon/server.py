@@ -241,6 +241,9 @@ class ServeDaemon:
                             # batched executes consult that cache kind
                             resp["cache"]["batch"] = \
                                 sess.cache_events.get("batch", "skipped")
+                        if sess.spec.exec_backend == "overlap":
+                            resp["cache"]["overlap"] = \
+                                sess.cache_events.get("overlap", "skipped")
                         if req.get("return_outputs", False):
                             resp["outputs"] = {
                                 str(t): v.tolist()

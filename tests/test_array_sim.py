@@ -277,3 +277,123 @@ def test_scenario_cost_is_chunkable():
     rec = encode_chunk([Instr(Op.ADD, outs=((0, 8),), ins=((8, 8), (16, 8)),
                               imm=(1, 32))])
     assert c.cost_chunk(rec).shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# OS-paging fault-run batching (thrash regime) == scalar, exactly
+# ---------------------------------------------------------------------------
+
+
+def _thrash(pages=96, reps=6, page_shift=6, self_read=False):
+    """Cyclic sweep over more pages than frames: every touch is a miss,
+    so the array core's batched fault-run path carries the whole replay.
+    ``self_read=True`` makes each instruction touch its page twice,
+    exercising the distinct-page run cutoff."""
+    psize = 1 << page_shift
+    instrs = [Instr(Op.INPUT, outs=((p * psize, psize),), imm=(p,))
+              for p in range(pages)]
+    for _ in range(reps):
+        for p in range(pages):
+            ins = ((p * psize, psize),) if self_read else ()
+            instrs.append(Instr(Op.ADD, outs=((p * psize, psize),),
+                                ins=ins, imm=(1, 32)))
+    return Program(instrs=instrs, page_shift=page_shift, protocol="gc",
+                   vspace_slots=pages << page_shift)
+
+
+@pytest.mark.parametrize("self_read", (False, True))
+@pytest.mark.parametrize("frames", (16, 48, 90))
+def test_os_paging_fault_runs_identical_on_thrash(frames, self_read):
+    prog = _thrash(self_read=self_read)
+    cost = lambda ins: 1e-7  # noqa: E731
+    rs = simulate_os_paging(prog, cost, frames, 1024, core="scalar")
+    ra = simulate_os_paging(prog, cost, frames, 1024, core="array",
+                            chunk_instrs=256)
+    assert ra == rs
+    assert rs.reads > 0 and rs.writes > 0   # dirty evictions write back
+
+
+def test_os_paging_fault_runs_identical_with_compute_between_faults():
+    # flush costs accumulated between faults must fold into the batched
+    # event loop in the same float order as the scalar reference
+    prog = _thrash(pages=48, reps=4)
+    rng = np.random.default_rng(11)
+    costs = rng.uniform(1e-8, 1e-5, len(prog.instrs))
+    seen = {"i": -1}
+
+    def cost(ins):
+        seen["i"] += 1
+        return float(costs[seen["i"] % len(costs)])
+
+    rs = simulate_os_paging(prog, cost, 20, 1024, core="scalar")
+    seen["i"] = -1
+    ra = simulate_os_paging(prog, cost, 20, 1024, core="array",
+                            chunk_instrs=512)
+    assert ra == rs
+
+
+# ---------------------------------------------------------------------------
+# memory-program NET cost modes (in-order vs planned overlap)
+# ---------------------------------------------------------------------------
+
+
+def _two_worker_merge_plan(plan_mode="unbounded", **kw):
+    spec = JobSpec(workload="merge", n=256, num_workers=2,
+                   plan_mode=plan_mode, driver="gc-plaintext", **kw)
+    with Session(spec) as sess:
+        return sess.plan()[0]
+
+
+def test_net_cost_modes_price_the_latency_windows():
+    prog = _two_worker_merge_plan()
+    lat = 0.025
+    zero = lambda ins: 0.0  # noqa: E731
+    ino = simulate_memory_program(prog, zero, 4096, net_latency_s=lat)
+    ovl = simulate_memory_program(prog, zero, 4096, net_latency_s=lat,
+                                  net_mode="overlap")
+    assert ino.net_msgs == ovl.net_msgs > 1
+    # in-order: every exchange is a blocking round; overlap with no swap
+    # barriers: all windows run concurrently -> exactly one latency
+    assert ino.total == ino.net_stall == pytest.approx(ino.net_msgs * lat)
+    assert ovl.total == ovl.net_stall == pytest.approx(lat)
+
+
+def test_net_cost_modes_settle_at_swap_barriers():
+    prog = _two_worker_merge_plan(plan_mode="memory", memory_budget=0.5)
+    lat = 0.025
+    cost = lambda ins: 1e-7  # noqa: E731
+    base = simulate_memory_program(prog, cost, 4096)
+    ino = simulate_memory_program(prog, cost, 4096, net_latency_s=lat,
+                                  net_bandwidth=1e9)
+    ovl = simulate_memory_program(prog, cost, 4096, net_latency_s=lat,
+                                  net_bandwidth=1e9, net_mode="overlap")
+    assert base.net_stall == 0.0 and base.total < ovl.total <= ino.total
+    # swap barriers bound the exchange window, so overlap hides less
+    # than the unbounded single-residue ideal but never less than one
+    assert lat <= ovl.net_stall < ino.net_stall
+
+
+def test_net_cost_modes_identical_across_cores():
+    for mode in ("inorder", "overlap"):
+        for prog in (_two_worker_merge_plan(),
+                     _two_worker_merge_plan(plan_mode="memory",
+                                            memory_budget=0.5)):
+            cost = lambda ins: 1e-7  # noqa: E731
+            rs = simulate_memory_program(prog, cost, 4096, core="scalar",
+                                         net_latency_s=0.01,
+                                         net_bandwidth=1e9, net_mode=mode)
+            ra = simulate_memory_program(prog, cost, 4096, core="array",
+                                         net_latency_s=0.01,
+                                         net_bandwidth=1e9, net_mode=mode)
+            assert ra == rs
+
+
+def test_net_cost_mode_validation_and_default_off():
+    prog = _two_worker_merge_plan()
+    cost = lambda ins: 1e-7  # noqa: E731
+    with pytest.raises(ValueError, match="net_mode"):
+        simulate_memory_program(prog, cost, 4096, net_mode="banana")
+    off = simulate_memory_program(prog, cost, 4096)
+    explicit = simulate_memory_program(prog, cost, 4096, net_latency_s=0.0,
+                                       net_bandwidth=None)
+    assert off == explicit and off.net_stall == 0.0

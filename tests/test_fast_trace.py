@@ -1,0 +1,67 @@
+"""Vectorized GC trace builders (src/repro/workloads/fast_trace.py):
+the NumPy record emitters for merge / sort / mvmul must be digest-
+identical to the FREE-stripped DSL trace, and the streamed program
+files must decode to the same instructions with the same vspace."""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.core.bytecode import encode_chunk, strip_frees
+from repro.workloads import get
+from repro.workloads.fast_trace import (build_merge_records,
+                                        build_mvmul_records,
+                                        build_sort_records,
+                                        write_merge_program,
+                                        write_mvmul_program,
+                                        write_sort_program)
+
+BUILDERS = {"merge": build_merge_records, "sort": build_sort_records,
+            "mvmul": build_mvmul_records}
+WRITERS = {"merge": write_merge_program, "sort": write_sort_program,
+           "mvmul": write_mvmul_program}
+
+
+def _dsl_records(name: str, n: int) -> np.ndarray:
+    prog = get(name).trace(n)[0]
+    return encode_chunk(strip_frees(prog.instrs))
+
+
+@pytest.mark.parametrize("name,n", [
+    ("merge", 32), ("merge", 64), ("merge", 256), ("merge", 1024),
+    ("sort", 32), ("sort", 128), ("sort", 512),
+    ("mvmul", 16), ("mvmul", 64), ("mvmul", 128),
+])
+def test_vectorized_builder_digest_identical_to_dsl(name, n):
+    dsl = _dsl_records(name, n)
+    fast = BUILDERS[name](n)
+    assert dsl.shape == fast.shape
+    assert np.array_equal(dsl, fast), \
+        f"{name} n={n}: vectorized records diverge from the DSL trace"
+    assert hashlib.sha256(dsl.tobytes()).digest() == \
+        hashlib.sha256(fast.tobytes()).digest()
+
+
+@pytest.mark.parametrize("name,n", [("merge", 128), ("sort", 64),
+                                    ("mvmul", 32)])
+def test_streamed_program_file_matches_dsl(tmp_path, name, n):
+    pf = WRITERS[name](tmp_path / f"{name}.bc", n)
+    prog = get(name).trace(n)[0]
+    assert list(pf.iter_instrs()) == strip_frees(prog.instrs)
+    assert pf.vspace_slots == prog.vspace_slots
+    assert pf.meta["workload"] == name
+
+
+@pytest.mark.parametrize("name,n", [
+    ("merge", 48),     # 2n/C not a power of two
+    ("merge", 33),     # not a chunk multiple
+    ("sort", 96),      # n/C not a power of two
+    ("sort", 0),
+    ("mvmul", 24),     # not a block multiple
+])
+def test_builders_reject_bad_sizes(name, n):
+    with pytest.raises(ValueError):
+        BUILDERS[name](n)

@@ -1,0 +1,205 @@
+"""Planned overlap engine (docs/OVERLAP.md): schedule structure (sends
+hoisted ahead of program order, recv completion deferred to the wait,
+recv rows scheduled twice), bitwise identity with the scalar engine
+across drivers / transports / worker counts, the sidecar cache (hot
+submits reuse the stored schedule with zero re-passes), and the serve
+daemon's per-submit cache reporting."""
+
+import hashlib
+from unittest import mock
+
+import numpy as np
+import pytest
+
+from repro.api import FabricSpec, JobSpec, Session
+from repro.core.bytecode import Op, iter_record_chunks, unpack_heads
+from repro.core.transport import pick_free_ports
+from repro.exec import OverlapSchedule, build_overlap_schedule
+from repro.exec.overlap import K_LOCAL, K_RECV_POST, K_RECV_WAIT, K_SEND
+from repro.serve_daemon.client import serve_client
+from repro.serve_daemon.server import ServeDaemon
+
+
+def _digest(outputs) -> str:
+    h = hashlib.sha256()
+    for tag in sorted(outputs):
+        h.update(str(tag).encode())
+        h.update(np.ascontiguousarray(outputs[tag]).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _outputs(spec: JobSpec):
+    with Session(spec) as sess:
+        outs = sess.execute(check=True)
+        stats = sess.engine_stats
+    return _digest(outs), stats
+
+
+def _plan_one(**kw):
+    sess = Session(JobSpec(**kw))
+    prog = sess.plan()[0]
+    return prog, build_overlap_schedule(prog, sess.spec.chunk_instrs)
+
+
+# ---------------------------------------------------------------------------
+# schedule structure
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    dict(workload="merge", n=256, num_workers=2, memory_budget=0.5),
+    dict(workload="merge", n=256, num_workers=2, plan_mode="unbounded"),
+])
+def test_overlap_schedule_hoists_sends_and_defers_recvs(kw):
+    prog, sched = _plan_one(**kw)
+    sched.validate_for(prog)
+    st = sched.stats()
+    assert st["hoisted_sends"] > 0
+    assert st["deferred_recvs"] > 0
+    ci = 0
+    for start, rec, _instrs in iter_record_chunks(prog, sched.chunk_instrs):
+        m = rec.shape[0]
+        ops = unpack_heads(rec[:, 0])[0]
+        seen = np.zeros(m, dtype=np.int64)      # schedule visits per row
+        posted: dict[int, int] = {}             # recv row -> post position
+        pos = 0
+        for g in range(sched.chunk_groups[ci], sched.chunk_groups[ci + 1]):
+            rows = sched.order[sched.bounds[g]:sched.bounds[g + 1]]
+            kind = int(sched.group_kind[g])
+            for r in rows.tolist():
+                if kind == K_SEND:
+                    assert ops[r] == int(Op.NET_SEND)
+                elif kind in (K_RECV_POST, K_RECV_WAIT):
+                    assert ops[r] == int(Op.NET_RECV)
+                    if kind == K_RECV_POST:
+                        posted[r] = pos
+                    else:
+                        assert r in posted, "wait before its post"
+                else:
+                    assert kind == K_LOCAL
+                seen[r] += 1
+                pos += 1
+        # every recv row scheduled exactly twice (post + wait), the
+        # rest exactly once
+        recv = ops == int(Op.NET_RECV)
+        assert np.all(seen[recv] == 2)
+        assert np.all(seen[~recv] == 1)
+        assert len(posted) == int(recv.sum())
+        ci += 1
+
+
+def test_overlap_schedule_roundtrip_and_stale(tmp_path):
+    prog, sched = _plan_one(workload="merge", n=256, num_workers=2,
+                            memory_budget=0.5)
+    p = tmp_path / "w0.overlap.npz"
+    sched.save(p)
+    got = OverlapSchedule.load(p)
+    assert got.chunk_instrs == sched.chunk_instrs
+    assert got.n_records == sched.n_records
+    for f in ("order", "bounds", "group_kind", "group_op", "chunk_groups"):
+        assert np.array_equal(getattr(got, f), getattr(sched, f))
+    got.n_records += 1
+    with pytest.raises(ValueError, match="stale sidecar"):
+        got.validate_for(prog)
+
+
+# ---------------------------------------------------------------------------
+# overlap == scalar, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _check_equal(**kw):
+    d_scalar, _ = _outputs(JobSpec(exec_backend="scalar", **kw))
+    d_overlap, stats = _outputs(JobSpec(exec_backend="overlap", **kw))
+    assert d_scalar == d_overlap
+    return stats
+
+
+def test_overlap_matches_scalar_gc_plaintext_two_workers():
+    stats = _check_equal(workload="merge", n=256, num_workers=2,
+                         memory_budget=0.5)
+    assert sum(s.posted_recvs for s in stats) > 0
+
+
+def test_overlap_matches_scalar_two_workers_net_interleaved():
+    # NET exchanges interleave the two workers' programs mid-computation;
+    # the engines must drain them in channel-FIFO order either way
+    for wl, n in (("rsum", 64), ("merge", 512)):
+        _check_equal(workload=wl, n=n, memory_budget=32, num_workers=2)
+
+
+def test_overlap_unbounded_posts_whole_exchange_window():
+    d_s, _ = _outputs(JobSpec(workload="merge", n=256, num_workers=2,
+                              plan_mode="unbounded", exec_backend="scalar"))
+    d_o, stats = _outputs(JobSpec(workload="merge", n=256, num_workers=2,
+                                  plan_mode="unbounded",
+                                  exec_backend="overlap"))
+    assert d_s == d_o
+    # with no swap barriers every recv in the pass is posted before any
+    # wait, so the in-flight window covers the whole exchange
+    assert max(s.max_inflight_recvs for s in stats) >= 4
+
+
+def test_overlap_matches_scalar_gc_two_party_tcp():
+    ports = pick_free_ports(2)
+    fab = FabricSpec(peers=tuple(f"127.0.0.1:{p}" for p in ports))
+    kw = dict(workload="merge", n=64, plan_mode="unbounded",
+              driver="gc-2party", transport="tcp", fabric=fab)
+    d_scalar, _ = _outputs(JobSpec(exec_backend="scalar", **kw))
+    ports = pick_free_ports(2)
+    kw["fabric"] = FabricSpec(peers=tuple(f"127.0.0.1:{p}" for p in ports))
+    d_overlap, _ = _outputs(JobSpec(exec_backend="overlap", **kw))
+    assert d_scalar == d_overlap
+
+
+def test_overlap_matches_scalar_on_shaped_wan():
+    fab = FabricSpec(latency_s=0.002, bandwidth=1e9)
+    stats = _check_equal(workload="merge", n=256, num_workers=2,
+                         plan_mode="unbounded", transport="shaped",
+                         fabric=fab)
+    assert sum(s.posted_recvs for s in stats) > 0
+
+
+def test_overlap_matches_scalar_ckks():
+    _check_equal(workload="rmvmul", n=32, memory_budget=32)
+
+
+# ---------------------------------------------------------------------------
+# sidecar cache: hot submits reuse the stored schedule, zero re-passes
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_cache_hot_submit_zero_repasses(tmp_path):
+    spec = JobSpec(workload="merge", n=256, num_workers=2,
+                   memory_budget=0.5, exec_backend="overlap")
+    cache = tmp_path / "cache"
+    with Session(spec, cache=cache) as s:
+        d1 = _digest(s.execute(check=True))
+        assert s.cache_events["overlap"] == "miss"
+    with Session(spec, cache=cache) as s:
+        with mock.patch("repro.exec.overlap.build_overlap_schedule",
+                        side_effect=AssertionError("hot submit re-ran the "
+                                                   "overlap pass")) as m:
+            d2 = _digest(s.execute(check=True))
+        assert s.cache_events["overlap"] == "hit"
+        assert m.call_count == 0
+    assert d1 == d2
+
+
+def test_daemon_reports_overlap_cache(tmp_path):
+    spec = JobSpec(workload="merge", n=256, num_workers=2,
+                   memory_budget=0.5, exec_backend="overlap")
+    d = ServeDaemon(tmp_path / "cache",
+                    socket_path=str(tmp_path / "mage.sock"),
+                    frame_pool=4096)
+    d.start()
+    try:
+        with serve_client(d.address) as c:
+            r1 = c.submit(spec, execute=True)
+            assert r1["cache"]["overlap"] == "miss"
+            r2 = c.submit(spec, execute=True)
+            assert r2["cache"]["overlap"] == "hit"
+            assert r2["outputs_digest"] == r1["outputs_digest"]
+            assert d.cache.status()["overlap_hits"] == 1
+    finally:
+        d.shutdown()

@@ -508,3 +508,96 @@ def test_run_worker_requires_peers(tmp_path):
     with pytest.raises(SystemExit, match="full outputs|fabric"):
         main(["run", str(job), "--worker", "0", "--peers", "a:1,b:2",
               "--check"])
+
+
+# ---------------------------------------------------------------------------
+# async completion handles (the overlap engine's primitives)
+# ---------------------------------------------------------------------------
+
+
+def test_send_async_is_eager_recv_async_is_deferred():
+    t = InprocTransport(2)
+    c = t.send_async(0, 1, tag=1, data=_arr(5))
+    assert c.done()                      # the send already happened
+    c.wait()
+    out = np.zeros(1, dtype=np.uint64)
+    h = t.recv_async(0, 1, tag=1, out=out)
+    assert not h.done()                  # completion deferred to wait()
+    assert out[0] == 0
+    got = h.wait()
+    assert out[0] == 5 and got[0] == 5
+    assert h.done()
+    assert h.wait()[0] == 5              # idempotent
+
+
+def test_recv_async_channel_order_is_wait_order():
+    # the handle is LAZY: data binds at wait() time, so per-channel FIFO
+    # follows the order of the wait() calls — the overlap scheduler's
+    # contract is "waits in post order per (src, dst, tag)", and waits
+    # across different channels may interleave freely
+    t = InprocTransport(2)
+    for tag in (1, 2, 3):
+        for v in (10 * tag, 10 * tag + 1):
+            t.send_async(0, 1, tag=tag, data=_arr(v))
+    outs = {tag: (np.zeros(1, dtype=np.uint64), np.zeros(1, dtype=np.uint64))
+            for tag in (1, 2, 3)}
+    handles = {(tag, i): t.recv_async(0, 1, tag, out=outs[tag][i])
+               for tag in (1, 2, 3) for i in (0, 1)}
+    # reverse TAG order (cross-channel reorder), post order within a tag
+    for tag in (3, 2, 1):
+        for i in (0, 1):
+            handles[(tag, i)].wait()
+    for tag in (1, 2, 3):
+        assert outs[tag][0][0] == 10 * tag
+        assert outs[tag][1][0] == 10 * tag + 1
+
+
+def test_recv_async_posting_does_not_consume_under_depth_bound():
+    # a posted-but-unwaited recv must NOT drain the link: the reorder
+    # buffer's depth bound only releases at wait() time, which is what
+    # keeps the overlap engine's in-flight window honest
+    t = InprocTransport(2)
+    t.set_depth(0, 1, max_msgs=2)
+    t.send(0, 1, 1, _arr(1))
+    t.send(0, 1, 2, _arr(2))
+    outs = [np.zeros(1, dtype=np.uint64) for _ in range(3)]
+    handles = [t.recv_async(0, 1, tag, out=outs[tag - 1])
+               for tag in (1, 2, 3)]
+    blocked = threading.Event()
+
+    def third():
+        t.send(0, 1, 3, _arr(3))
+        blocked.set()
+
+    th = threading.Thread(target=third, daemon=True)
+    th.start()
+    assert not blocked.wait(0.1), "posting recvs must not free the link"
+    handles[0].wait()                    # completing one drains one slot
+    assert blocked.wait(2.0)
+    handles[1].wait()
+    handles[2].wait()
+    assert [int(o[0]) for o in outs] == [1, 2, 3]
+
+
+def test_recv_async_wait_raises_transport_error():
+    t = InprocTransport(2)
+    h = t.recv_async(0, 1, tag=9, out=np.zeros(1, dtype=np.uint64),
+                     timeout=0.05)
+    with pytest.raises(TransportError):
+        h.wait()
+
+
+def test_shaped_async_pays_latency_at_wait_not_post():
+    lat = 0.05
+    t = ShapedTransport(InprocTransport(2),
+                        LinkShape(latency_s=lat, bandwidth=None))
+    t.send_async(0, 1, tag=1, data=_arr(7))
+    out = np.zeros(1, dtype=np.uint64)
+    t0 = time.perf_counter()
+    h = t.recv_async(0, 1, tag=1, out=out)
+    posted = time.perf_counter() - t0
+    assert posted < lat / 2, "posting must not sleep the latency"
+    h.wait()
+    waited = time.perf_counter() - t0
+    assert waited >= lat * 0.8
+    assert out[0] == 7
