@@ -16,7 +16,7 @@ import traceback
 sys.path.insert(0, os.path.dirname(__file__))
 
 ALL = ["fig8", "fig9", "table1", "fig10", "fig11", "fig67", "fig1213",
-       "roofline"]
+       "nparty", "roofline"]
 
 
 def main() -> None:
@@ -29,10 +29,12 @@ def main() -> None:
 
     import fig8_swap, fig9_swap_large, table1_planning, fig10_parallel  # noqa
     import fig11_wan, fig67_frameworks, fig1213_apps, roofline  # noqa
+    import fig_nparty  # noqa
     mods = {"fig8": fig8_swap, "fig9": fig9_swap_large,
             "table1": table1_planning, "fig10": fig10_parallel,
             "fig11": fig11_wan, "fig67": fig67_frameworks,
-            "fig1213": fig1213_apps, "roofline": roofline}
+            "fig1213": fig1213_apps, "nparty": fig_nparty,
+            "roofline": roofline}
 
     rows = []
     failed = []

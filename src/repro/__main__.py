@@ -203,7 +203,7 @@ def _dump_outputs(path: str, outputs: dict) -> None:
 
 
 def _load_outputs(path: str, protocol: str) -> dict:
-    dtype = np.uint64 if protocol == "gc" else np.float64
+    dtype = np.uint64 if protocol in ("gc", "shamir") else np.float64
     with open(path) as f:
         doc = json.load(f)
     if "schema_version" in doc:          # v1 envelope

@@ -57,6 +57,7 @@ from .protocols.ckks import CkksDriver, CkksParams
 from .protocols.garbled.driver import (EvaluatorDriver, GarblerDriver,
                                        PlaintextDriver)
 from .protocols.garbled.gates import PartyChannel
+from .protocols.shamir.driver import ShamirDriver
 from .workloads import Workload, get
 
 PLAN_MODES = ("memory", "streaming", "unbounded")
@@ -77,9 +78,9 @@ EXEC_BACKENDS = ("scalar", "batched", "overlap")
 SCHEMA_VERSION = 1
 
 #: bytes per address-space slot, per protocol — a GC slot is one 128-bit
-#: wire label, a CKKS slot one 8-byte word (what the timing simulator and
-#: the OS-paging baseline charge per page).
-SLOT_BYTES = {"gc": 16, "ckks": 8}
+#: wire label, a CKKS or Shamir slot one 8-byte word (what the timing
+#: simulator and the OS-paging baseline charge per page).
+SLOT_BYTES = {"gc": 16, "ckks": 8, "shamir": 8}
 
 #: JobSpec fields that determine the planned memory program.  Execution
 #: details (driver, exec_backend, storage, workdir, parallelism, chunking)
@@ -187,9 +188,31 @@ def _ckks_drivers(s: "Session", fx: Fabric) -> dict[int, ProtocolDriver]:
             for r in fx.hosted}
 
 
+def _shamir_drivers(s: "Session", fx: Fabric) -> dict[int, ProtocolDriver]:
+    # the n Shamir parties ARE the n workers of one registry party: worker
+    # rank == party index, MUL resharing rounds ride the all-to-all worker
+    # links as ordinary NET_* directives (see docs/SHAMIR.md)
+    w, n, p = s.workload, s.spec.n, s.spec.num_workers
+    return {r: ShamirDriver(p, r % p, w.inputs(n, r % p, p))
+            for r in fx.hosted}
+
+
+def _shamir_fixed(n_parties: int) -> DriverFactory:
+    def factory(s: "Session", fx: Fabric) -> dict[int, ProtocolDriver]:
+        if s.spec.num_workers != n_parties:
+            raise ValueError(
+                f"driver shamir-{n_parties}party needs num_workers="
+                f"{n_parties}, got {s.spec.num_workers}")
+        return _shamir_drivers(s, fx)
+    return factory
+
+
 register_driver("gc-plaintext", _gc_plaintext_drivers)
 register_driver("gc-2party", _gc_two_party_drivers, parties=2)
 register_driver("ckks", _ckks_drivers)
+register_driver("shamir", _shamir_drivers)
+register_driver("shamir-3party", _shamir_fixed(3))
+register_driver("shamir-5party", _shamir_fixed(5))
 register_storage("ram", lambda shape, dtype: RamStorage(shape, dtype))
 register_storage("memmap", lambda shape, dtype: MemmapStorage(shape, dtype))
 
@@ -298,8 +321,8 @@ class JobSpec:
         if self.n is None:
             changes["n"] = w.default_n
         if self.driver == "auto":
-            changes["driver"] = "ckks" if w.protocol == "ckks" \
-                else "gc-plaintext"
+            changes["driver"] = {"ckks": "ckks", "shamir": "shamir"}.get(
+                w.protocol, "gc-plaintext")
         return dataclasses.replace(self, **changes) if changes else self
 
     def plan_hash(self, workload: "Workload | None" = None) -> str:
@@ -887,7 +910,7 @@ def check_outputs(w: Workload, n: int, outputs: dict[int, np.ndarray],
     assert not missing, f"{w.name}: missing outputs {sorted(missing)[:5]}..."
     for tag, e in exp.items():
         got = outputs[tag]
-        if w.protocol == "gc":
+        if w.protocol in ("gc", "shamir"):
             assert np.array_equal(got, e), \
                 f"{w.name} tag {tag}: {got[:4]} != {e[:4]}"
         else:

@@ -52,6 +52,23 @@ class Op(enum.IntEnum):
     REDUCE_ADD = 25    # outs[0](width lanes) = tree-sum of ins[0] vector
     REVERSE = 26       # outs[0] = ins[0] with element order reversed (free)
 
+    # ---- Shamir secret-sharing field ops (n-party engine) ------------------
+    # Shares live in GF(p), p = 2^61 - 1; one uint64 slot per element.
+    # Linear ops are share-local; degree reduction after F_MUL_LOCAL is
+    # expressed IN the trace as F_EVAL + NET_SEND/NET_RECV + an
+    # F_MULC/F_MULC_ADD recombine chain, so the planner and the overlap
+    # pass see every resharing round (see docs/SHAMIR.md).
+    F_ADD = 50         # outs[0] = (ins[0] + ins[1]) mod p;          imm=(count,)
+    F_SUB = 51         # outs[0] = (ins[0] - ins[1]) mod p;          imm=(count,)
+    F_MULC = 52        # outs[0] = (c * ins[0]) mod p;               imm=(count, c)
+    F_ADDC = 53        # outs[0] = (ins[0] + c) mod p;               imm=(count, c)
+    F_MUL_LOCAL = 54   # outs[0] = (ins[0] * ins[1]) mod p (share-wise product;
+                       # the share degree doubles);                  imm=(count,)
+    F_EVAL = 55        # outs[0] = q(alpha_{j+1}) where q is this party's
+                       # deterministic degree-t resharing polynomial of ins[0]
+                       # for round rid;                    imm=(count, j, t, rid)
+    F_MULC_ADD = 56    # outs[0] = (ins[0] + c * ins[1]) mod p;      imm=(count, c)
+
     # ---- CKKS style ops (Add-Multiply engine) ------------------------------
     CT_ADD = 40        # ciphertext + ciphertext
     CT_MUL = 41        # ciphertext * ciphertext (+ relinearize + rescale)

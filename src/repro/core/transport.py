@@ -521,6 +521,7 @@ class TcpTransport(Transport):
         self._out: dict[int, socket.socket] = {}
         self._out_locks: dict[int, threading.Lock] = {}
         self._listener: socket.socket | None = None
+        self._in: list[socket.socket] = []
         self._readers: list[threading.Thread] = []
         self._accept_thread: threading.Thread | None = None
         self._accepted = threading.Semaphore(0)
@@ -575,6 +576,7 @@ class TcpTransport(Transport):
                                          args=(conn, peer), daemon=True,
                                          name=f"tcp-read-{peer}->{self.rank}")
                     t.start()
+                    self._in.append(conn)
                     self._readers.append(t)
                     self._accepted.release()
             except Exception as e:  # surfaced by connect()
@@ -678,6 +680,17 @@ class TcpTransport(Transport):
             out[...] = data.reshape(out.shape)
         return data
 
+    def set_depth(self, src: int, dst: int, max_msgs: int = 0,
+                  max_bytes: int = 0) -> None:
+        """Bound one inbound link's reorder buffer (parity with
+        ``InprocTransport.set_depth``).  The reader thread blocks in
+        ``put`` when the bound is hit, which stops draining the socket and
+        pushes back to the sender through TCP flow control — the message
+        -granular version of the coarse ``max_link_bytes`` default."""
+        link = self._link(src, dst)
+        link.max_msgs = max_msgs
+        link.max_bytes = max_bytes
+
     def reorder_stats(self):
         return _links_reorder_stats(self._links, self._links_lock)
 
@@ -691,6 +704,17 @@ class TcpTransport(Transport):
             sock.close()
         if self._listener is not None:
             self._listener.close()
+        # unblock our readers immediately: by close() time every hosted
+        # engine has finished its program, so anything still in flight on
+        # an inbound socket is stray — without this, readers sit in recv()
+        # until the PEER closes its outbound side, and a fabric closing
+        # several co-hosted ranks sequentially eats one join timeout per
+        # reader thread
+        for conn in self._in:
+            try:
+                conn.shutdown(socket.SHUT_RD)
+            except OSError:
+                pass
         for t in self._readers:
             t.join(timeout=5.0)
         with self._links_lock:

@@ -98,12 +98,16 @@ def make_batched(driver: ProtocolDriver) -> Any:
     """
     from ..protocols.ckks.driver import CkksDriver
     from ..protocols.garbled.driver import _GCDriverBase, PlaintextDriver
+    from ..protocols.shamir.driver import ShamirDriver
     from .batched_ckks import BatchedCkksDriver
     from .batched_gc import BatchedGCDriver, BatchedPlaintextDriver
+    from .batched_shamir import BatchedShamirDriver
     if isinstance(driver, PlaintextDriver):
         return BatchedPlaintextDriver(driver)
     if isinstance(driver, _GCDriverBase):
         return BatchedGCDriver(driver)
     if isinstance(driver, CkksDriver):
         return BatchedCkksDriver(driver)
+    if isinstance(driver, ShamirDriver):
+        return BatchedShamirDriver(driver)
     return driver

@@ -1,0 +1,17 @@
+"""N-party Shamir secret sharing over GF(2^61 - 1): the third protocol
+family (after 2PC garbled circuits and CKKS), exercising the planner,
+the all-to-all transport links and the overlap engine on genuinely
+round-structured traces.  See docs/SHAMIR.md."""
+
+from .driver import SEED_INPUT, SEED_RESHARE, ShamirDriver
+from .dsl import (ROUND_TAG, REVEAL_TAG, Shared, mul, reveal,
+                  share_input)
+from .field import (P, addmod, inverse, lagrange_at_zero, mulmod,
+                    reconstruct, share, submod)
+
+__all__ = [
+    "P", "ROUND_TAG", "REVEAL_TAG", "SEED_INPUT", "SEED_RESHARE",
+    "ShamirDriver", "Shared", "addmod", "inverse", "lagrange_at_zero",
+    "mul", "mulmod", "reconstruct", "reveal", "share", "share_input",
+    "submod",
+]

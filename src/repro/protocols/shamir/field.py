@@ -1,0 +1,183 @@
+"""GF(p) arithmetic for the Shamir driver, p = 2^61 - 1 (Mersenne).
+
+The field choice is the standard MPC sweet spot for a NumPy engine: a
+61-bit prime keeps every share in one uint64 slot (``SLOT_BYTES`` of 8,
+like CKKS words), sums of a few residues stay below 2^64, and the
+Mersenne structure makes the 122-bit products of ``mulmod`` reducible
+with shifts and masks (2^61 = 1 mod p), so share-wise multiplication
+vectorizes without 128-bit intermediates.
+
+All array helpers are elementwise over uint64 NumPy arrays and keep
+results canonical in [0, p).  Scalar helpers (inverse, Lagrange weights)
+run on Python ints — they only produce *public* per-(n, t) constants
+baked into instruction immediates at trace time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+#: the field modulus, a Mersenne prime: one uint64 slot per element
+P = (1 << 61) - 1
+
+_P = np.uint64(P)
+_MASK30 = np.uint64((1 << 30) - 1)
+_MASK31 = np.uint64((1 << 31) - 1)
+_S30 = np.uint64(30)
+_S31 = np.uint64(31)
+_S61 = np.uint64(61)
+_ONE = np.uint64(1)
+
+
+def fold(x: np.ndarray) -> np.ndarray:
+    """Reduce any uint64 array mod p via Mersenne folding (2^61 = 1)."""
+    x = np.asarray(x, dtype=np.uint64)
+    x = (x >> _S61) + (x & _P)          # < 2^61 + 8
+    x = (x >> _S61) + (x & _P)          # <= p
+    return np.where(x >= _P, x - _P, x)
+
+
+def addmod(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return fold(np.asarray(a, np.uint64) + np.asarray(b, np.uint64))
+
+
+def submod(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    return fold(np.asarray(a, np.uint64) + (_P - np.asarray(b, np.uint64)))
+
+
+def mulmod(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """(a * b) mod p for canonical residues, without 128-bit temporaries.
+
+    Split both factors at bit 31: a*b = hh*2^62 + mid*2^31 + ll with
+    hh < 2^60, mid < 2^62, ll < 2^62 — every partial fits uint64, and
+    2^62 = 2, 2^61 = 1 mod p collapse the shifted terms.
+    """
+    a = np.asarray(a, dtype=np.uint64)
+    b = np.asarray(b, dtype=np.uint64)
+    ah, al = a >> _S31, a & _MASK31
+    bh, bl = b >> _S31, b & _MASK31
+    t1 = fold((ah * bh) << _ONE)        # hh * 2^62 = 2 * hh
+    mid = ah * bl + al * bh             # < 2^62
+    mh, ml = mid >> _S30, mid & _MASK30
+    t2 = fold(mh + (ml << _S31))        # mid * 2^31 = mh * 2^61 + ml * 2^31
+    t3 = fold(al * bl)
+    return fold(t1 + t2 + t3)
+
+
+def mulmod_scalar(a: np.ndarray, c: int) -> np.ndarray:
+    return mulmod(a, np.uint64(c % P))
+
+
+# ---------------------------------------------------------------------------
+# public scalar constants (Python ints)
+# ---------------------------------------------------------------------------
+
+
+def inverse(x: int) -> int:
+    """x^-1 mod p (Fermat); x must be nonzero mod p."""
+    x %= P
+    if x == 0:
+        raise ZeroDivisionError("0 has no inverse in GF(p)")
+    return pow(x, P - 2, P)
+
+
+def eval_point(party: int) -> int:
+    """The public evaluation point of one party: alpha_i = i + 1."""
+    return party + 1
+
+
+def lagrange_at_zero(n_parties: int) -> tuple[int, ...]:
+    """Reconstruction weights at x=0 over ALL n points alpha_1..alpha_n.
+
+    Valid for any sharing of degree <= n - 1, so one weight vector serves
+    both degree-t values and the degree-2t products of F_MUL_LOCAL
+    (n >= 2t + 1 by construction).
+    """
+    pts = [eval_point(i) for i in range(n_parties)]
+    out = []
+    for i, ai in enumerate(pts):
+        num = den = 1
+        for j, aj in enumerate(pts):
+            if j != i:
+                num = num * aj % P
+                den = den * ((aj - ai) % P) % P
+        out.append(num * inverse(den) % P)
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# deterministic coefficient PRF (order-independent across backends)
+# ---------------------------------------------------------------------------
+
+_GAMMA = np.uint64(0x9E3779B97F4A7C15)
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_MASK64 = (1 << 64) - 1
+
+
+def _mix64(x: int) -> int:
+    x &= _MASK64
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & _MASK64
+    return x ^ (x >> 31)
+
+
+def prf_coeffs(key: int, a: int, b: int, count: int) -> np.ndarray:
+    """(count,) residues derived from (key, a, b, lane) via splitmix64.
+
+    Keyed only by trace-time constants (never by execution order), so the
+    scalar, batched and overlap backends draw identical "randomness" —
+    the property the cross-backend identity tests rely on.
+    """
+    seed = _mix64(key * 0x8CB92BA72F3D8DD7 + a * 0xD6E8FEB86659FD93 + b + 1)
+    x = np.uint64(seed) + _GAMMA * np.arange(1, count + 1, dtype=np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * _M1
+    x = (x ^ (x >> np.uint64(27))) * _M2
+    x = x ^ (x >> np.uint64(31))
+    return fold(x)
+
+
+# ---------------------------------------------------------------------------
+# share / reconstruct (the offline dealer, also used by the tests)
+# ---------------------------------------------------------------------------
+
+
+def share(secrets: np.ndarray, n_parties: int, threshold: int,
+          rng: np.random.Generator) -> np.ndarray:
+    """Deal (n_parties, count) Shamir shares of a secret vector.
+
+    Each lane gets an independent uniform degree-``threshold`` polynomial
+    f with f(0) = secret; party i holds f(alpha_{i+1}).
+    """
+    secrets = np.asarray(secrets, dtype=np.uint64) % _P
+    count = secrets.shape[0]
+    coeffs = rng.integers(0, P, size=(threshold, count), dtype=np.uint64)
+    out = np.empty((n_parties, count), dtype=np.uint64)
+    for i in range(n_parties):
+        acc = np.zeros(count, dtype=np.uint64)
+        a = np.uint64(eval_point(i))
+        for k in range(threshold - 1, -1, -1):      # Horner, highest first
+            acc = addmod(mulmod(acc, a), coeffs[k])
+        out[i] = addmod(mulmod(acc, a), secrets)
+    return out
+
+
+def reconstruct(shares: np.ndarray, parties: list[int] | None = None
+                ) -> np.ndarray:
+    """Interpolate at 0 from (k, count) shares held by ``parties``."""
+    shares = np.asarray(shares, dtype=np.uint64)
+    k = shares.shape[0]
+    idx = list(range(k)) if parties is None else list(parties)
+    if len(idx) != k:
+        raise ValueError(f"{k} share rows for {len(idx)} party ids")
+    pts = [eval_point(i) for i in idx]
+    acc = np.zeros(shares.shape[1:], dtype=np.uint64)
+    for i, ai in enumerate(pts):
+        num = den = 1
+        for j, aj in enumerate(pts):
+            if j != i:
+                num = num * aj % P
+                den = den * ((aj - ai) % P) % P
+        lam = num * inverse(den) % P
+        acc = addmod(acc, mulmod_scalar(shares[i], lam))
+    return acc

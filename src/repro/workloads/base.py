@@ -58,6 +58,7 @@ def get(name: str) -> Workload:
     import repro.workloads.ckks_workloads  # noqa: F401
     import repro.workloads.apps  # noqa: F401
     import repro.workloads.agg_workload  # noqa: F401
+    import repro.workloads.shamir_workloads  # noqa: F401
     return REGISTRY[name]
 
 

@@ -29,7 +29,7 @@ def _doc_files():
 def test_required_docs_exist():
     for name in ("README.md", "docs/SIMULATOR.md", "docs/PLANNER.md",
                  "docs/API.md", "docs/DISTRIBUTED.md", "docs/ENGINE.md",
-                 "docs/AGGREGATE.md", "docs/OVERLAP.md"):
+                 "docs/AGGREGATE.md", "docs/OVERLAP.md", "docs/SHAMIR.md"):
         assert os.path.exists(os.path.join(REPO, name)), f"{name} missing"
 
 

@@ -1,0 +1,64 @@
+"""Cross-backend x cross-transport identity matrix.
+
+One planned (budgeted) workload per protocol family, executed under
+every exec backend and every transport: all 18 cells must produce
+bitwise-identical outputs to the scalar+inproc reference cell.  This is
+the single test that pins the repo's central invariant — planning,
+batching, overlap issue and fabric choice are *performance* knobs, never
+*semantics* knobs — across all three protocol drivers at once."""
+
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.api import EXEC_BACKENDS, FabricSpec, JobSpec, run_job
+from repro.core.transport import pick_free_ports
+
+#: (workload, n, num_workers, driver) — one row per protocol family
+CASES = [
+    ("merge", 256, 2, "gc-plaintext"),
+    ("rsum", 64, 1, "ckks"),
+    ("shamir_stats", 1024, 3, "shamir"),
+]
+TRANSPORTS = ("inproc", "tcp")
+
+
+def _digest(outputs) -> str:
+    h = hashlib.sha256()
+    for tag in sorted(outputs):
+        h.update(str(tag).encode())
+        h.update(np.ascontiguousarray(outputs[tag]).tobytes())
+    return h.hexdigest()[:16]
+
+
+def _spec(case, backend, transport):
+    name, n, workers, driver = case
+    fabric = None
+    if transport == "tcp":
+        ports = pick_free_ports(workers)
+        fabric = FabricSpec(peers=tuple(f"127.0.0.1:{p}" for p in ports))
+    return JobSpec(workload=name, n=n, num_workers=workers, driver=driver,
+                   plan_mode="memory", memory_budget=0.5,
+                   exec_backend=backend, transport=transport, fabric=fabric)
+
+
+_REFERENCE: dict[str, str] = {}
+
+
+def _reference(case) -> str:
+    name = case[0]
+    if name not in _REFERENCE:
+        out = run_job(_spec(case, "scalar", "inproc"), check=True)
+        _REFERENCE[name] = _digest(out)
+    return _REFERENCE[name]
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("backend", EXEC_BACKENDS)
+@pytest.mark.parametrize("case", CASES, ids=[c[0] for c in CASES])
+def test_identity_cell(case, backend, transport):
+    ref = _reference(case)
+    out = run_job(_spec(case, backend, transport), check=True)
+    assert _digest(out) == ref, \
+        f"{case[0]}: {backend}+{transport} diverged from scalar+inproc"

@@ -1,0 +1,96 @@
+"""Property-based planner/simulator differentials on random traces.
+
+Hypothesis (or the offline shim in ``_hypothesis_compat``) drives random
+oblivious traces — random page-touch patterns, frame budgets, policies —
+and asserts the repo's two core equivalences hold on every draw:
+
+ * the array planner core emits record-digest-identical memory programs
+   to the scalar reference, stage by stage and end to end;
+ * ``simulate_memory_program`` returns exactly equal SimResults across
+   cores and chunk sizes.
+
+The fixed-seed differentials in test_array_core/test_array_sim pin a few
+known-tricky traces; this file keeps sampling new ones."""
+
+import numpy as np
+from _hypothesis_compat import given, settings, strategies as st
+from test_core_planner import _Driver, _random_program, _run
+
+from repro.core import PlanConfig, plan
+from repro.core.bytecode import encode_chunk
+from repro.core.liveness import records_digest
+from repro.core.replacement import plan_replacement
+from repro.core.scheduling import plan_schedule
+from repro.core.simulator import simulate_memory_program
+
+POLICIES = ("min", "min_clean", "lru", "fifo")
+
+
+def _digest(instrs) -> int:
+    return records_digest(0, encode_chunk(instrs), 0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(4, 24), st.integers(0, 3))
+def test_replacement_core_digests_agree(seed, frames, policy_idx):
+    prog = _random_program(seed)
+    policy = POLICIES[policy_idx]
+    ps, ss = plan_replacement(prog, frames, policy=policy, core="scalar")
+    pa, sa = plan_replacement(prog, frames, policy=policy, core="array",
+                              chunk_instrs=17)
+    assert _digest(pa.instrs) == _digest(ps.instrs)
+    assert sa == ss
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(6, 20), st.integers(0, 4))
+def test_schedule_core_digests_agree(seed, frames, prefetch):
+    prog = _random_program(seed)
+    phys, _ = plan_replacement(prog, frames, core="scalar")
+    swap_bypass = bool(seed & 1)
+    ms, ss = plan_schedule(phys, frames + 5, prefetch,
+                           swap_bypass=swap_bypass, core="scalar")
+    ma, sa = plan_schedule(phys, frames + 5, prefetch,
+                           swap_bypass=swap_bypass, core="array",
+                           chunk_instrs=13)
+    assert _digest(ma.instrs) == _digest(ms.instrs)
+    assert sa == ss
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(5, 16))
+def test_end_to_end_plan_digests_and_outputs_agree(seed, frames):
+    prog = _random_program(seed)
+    policy = POLICIES[seed % len(POLICIES)]
+    cfgs = [PlanConfig(num_frames=frames, lookahead=11, prefetch_pages=2,
+                       policy=policy, core=c) for c in ("scalar", "array")]
+    mem_s, rep_s = plan(prog, cfgs[0])
+    mem_a, rep_a = plan(prog, cfgs[1])
+    assert _digest(mem_a.instrs) == _digest(mem_s.instrs)
+    # the report's stage-timing fields are wall clock; the *stats* must
+    # agree exactly
+    assert rep_a.replacement == rep_s.replacement
+    assert rep_a.schedule == rep_s.schedule
+    assert rep_a.peak_mem_bytes == rep_s.peak_mem_bytes
+    # and the planned program still computes what the trace computes
+    assert _run_outputs(mem_s) == _run_outputs(prog)
+
+
+def _run_outputs(program):
+    return {t: v.tolist() for t, v in _run(program).items()}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(5, 16))
+def test_simulator_exact_across_cores_and_chunks(seed, frames):
+    prog = _random_program(seed)
+    mem, _ = plan(prog, PlanConfig(num_frames=frames, lookahead=9,
+                                   prefetch_pages=1))
+    cost = _Driver().cost
+    ref = simulate_memory_program(mem, cost, 1024, core="scalar")
+    for core in ("scalar", "array"):
+        for chunk in (7, 64, 8192):
+            got = simulate_memory_program(mem, cost, 1024, core=core,
+                                          chunk_instrs=chunk)
+            assert got == ref, (core, chunk)
+    assert ref.reads == ref.writes or ref.total > 0

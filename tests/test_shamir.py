@@ -1,0 +1,298 @@
+"""N-party Shamir protocol: field arithmetic, share/reconstruct
+roundtrips, the degree-reduction MUL round, degradation (<= t shares
+carry no information), fast-trace digest identity, and cross-backend /
+cross-process execution of the round-structured workloads."""
+
+import hashlib
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.api import JobSpec, Session, run_job
+from repro.core.bytecode import Op, encode_chunk, strip_frees
+from repro.protocols.shamir import (P, ShamirDriver, lagrange_at_zero,
+                                    mulmod, reconstruct, share)
+from repro.protocols.shamir.field import (addmod, eval_point, fold, inverse,
+                                          mulmod_scalar, prf_coeffs, submod)
+from repro.workloads import get
+from repro.workloads.shamir_workloads import (build_shamir_cmp_records,
+                                              build_shamir_stats_records,
+                                              write_shamir_cmp_program,
+                                              write_shamir_stats_program)
+
+
+def _digest(outputs) -> str:
+    h = hashlib.sha256()
+    for tag in sorted(outputs):
+        h.update(str(tag).encode())
+        h.update(np.ascontiguousarray(outputs[tag]).tobytes())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# field arithmetic vs the Python-int reference
+# ---------------------------------------------------------------------------
+
+
+EDGES = [0, 1, 2, P - 2, P - 1, (1 << 31) - 1, 1 << 31, (1 << 31) + 1,
+         (1 << 60) + 12345, P // 2, P // 3]
+
+
+def test_mulmod_matches_python_ints_on_edges():
+    a = np.array([x for x in EDGES for _ in EDGES], dtype=np.uint64)
+    b = np.array(EDGES * len(EDGES), dtype=np.uint64)
+    got = mulmod(a, b)
+    exp = np.array([(int(x) * int(y)) % P for x, y in zip(a, b)],
+                   dtype=np.uint64)
+    assert np.array_equal(got, exp)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_field_ops_match_python_ints(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, P, 64, dtype=np.uint64)
+    b = rng.integers(0, P, 64, dtype=np.uint64)
+    ai, bi = a.astype(object), b.astype(object)
+    assert np.array_equal(mulmod(a, b),
+                          np.array([(int(x) * int(y)) % P
+                                    for x, y in zip(ai, bi)], np.uint64))
+    assert np.array_equal(addmod(a, b),
+                          np.array([(int(x) + int(y)) % P
+                                    for x, y in zip(ai, bi)], np.uint64))
+    assert np.array_equal(submod(a, b),
+                          np.array([(int(x) - int(y)) % P
+                                    for x, y in zip(ai, bi)], np.uint64))
+
+
+def test_fold_reduces_any_uint64():
+    x = np.array([0, P, P + 1, 2 * P, (1 << 64) - 1, (1 << 63) + 17],
+                 dtype=np.uint64)
+    got = fold(x)
+    exp = np.array([int(v) % P for v in x], dtype=np.uint64)
+    assert np.array_equal(got, exp)
+    assert got.max() < P
+
+
+def test_inverse_and_lagrange_weights():
+    for x in (1, 2, 3, P - 1, 123456789):
+        assert x * inverse(x) % P == 1
+    with pytest.raises(ZeroDivisionError):
+        inverse(0)
+    for n in (3, 4, 5, 7):
+        lam = lagrange_at_zero(n)
+        # interpolating any polynomial of degree <= n-1 at 0 recovers
+        # its constant term: check on f(x) = 5 + 3x + 2x^2
+        f = lambda x: (5 + 3 * x + 2 * x * x) % P  # noqa: E731
+        got = sum(l * f(eval_point(i)) for i, l in enumerate(lam)) % P
+        assert got == 5
+
+
+def test_prf_coeffs_deterministic_and_key_separated():
+    a = prf_coeffs(0x1234, 7, 3, 32)
+    assert np.array_equal(a, prf_coeffs(0x1234, 7, 3, 32))
+    assert a.max() < P
+    assert not np.array_equal(a, prf_coeffs(0x1235, 7, 3, 32))
+    assert not np.array_equal(a, prf_coeffs(0x1234, 8, 3, 32))
+    assert not np.array_equal(a, prf_coeffs(0x1234, 7, 4, 32))
+
+
+# ---------------------------------------------------------------------------
+# share / reconstruct roundtrip (property over random n, t < n)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 9), st.integers(0, 2**32 - 1))
+def test_share_reconstruct_roundtrip(n_parties, seed):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(1, n_parties))        # any t < n roundtrips
+    secrets = rng.integers(0, P, 40, dtype=np.uint64)
+    shares = share(secrets, n_parties, t, rng)
+    assert np.array_equal(reconstruct(shares), secrets)
+    # any t+1-subset suffices
+    idx = sorted(rng.choice(n_parties, size=t + 1, replace=False).tolist())
+    assert np.array_equal(reconstruct(shares[idx], idx), secrets)
+
+
+def test_reconstruct_validates_party_rows():
+    rng = np.random.default_rng(0)
+    shares = share(np.arange(10, dtype=np.uint64), 4, 1, rng)
+    with pytest.raises(ValueError, match="party ids"):
+        reconstruct(shares[:2], [0, 1, 2])
+
+
+# ---------------------------------------------------------------------------
+# the degree-reduction MUL round, directly on the driver's polynomials
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_parties", (3, 5, 7))
+def test_mul_round_algebra_matches_plaintext(n_parties):
+    """Replay one resharing round exactly as the engines do — PRF-dealt
+    input shares, per-party F_EVAL subshares, the public recombine — and
+    check the reshared product reconstructs to x*y mod p."""
+    rng = np.random.default_rng(42 + n_parties)
+    count, t = 64, (n_parties - 1) // 2
+    x = rng.integers(0, P, count, dtype=np.uint64)
+    y = rng.integers(0, P, count, dtype=np.uint64)
+    drivers = [ShamirDriver(n_parties, i, lambda tag: None)
+               for i in range(n_parties)]
+    xs = [d._poly_eval(x, d.seed_input, 11, t, d.party) for d in drivers]
+    ys = [d._poly_eval(y, d.seed_input, 12, t, d.party) for d in drivers]
+    # shares are consistent: any party derives every party's input share
+    assert np.array_equal(xs[0],
+                          drivers[1]._poly_eval(x, drivers[1].seed_input,
+                                                11, t, 0))
+    assert np.array_equal(reconstruct(np.stack(xs)), x)
+    lam = lagrange_at_zero(n_parties)
+    z = []
+    for j in range(n_parties):
+        sub = [d._poly_eval(mulmod(xs[d.party], ys[d.party]),
+                            d.seed_reshare, 0, t, j) for d in drivers]
+        acc = np.zeros(count, dtype=np.uint64)
+        for i in range(n_parties):
+            acc = addmod(acc, mulmod_scalar(sub[i], lam[i]))
+        z.append(acc)
+    assert np.array_equal(reconstruct(np.stack(z)), mulmod(x, y))
+    # the reshared product is again a degree-t sharing: t+1 rows suffice
+    assert np.array_equal(reconstruct(np.stack(z[:t + 1]),
+                                      list(range(t + 1))), mulmod(x, y))
+
+
+def test_driver_validates_parameters():
+    with pytest.raises(ValueError, match="n >= 3"):
+        ShamirDriver(2, 0, lambda tag: None)
+    with pytest.raises(ValueError, match="out of range"):
+        ShamirDriver(3, 3, lambda tag: None)
+    with pytest.raises(ValueError, match="2t\\+1"):
+        ShamirDriver(3, 0, lambda tag: None, threshold=2)
+
+
+# ---------------------------------------------------------------------------
+# degradation: <= t shares give no information about the secret
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_hiding_share_marginals():
+    """The joint view of any t parties is uniform regardless of the
+    secret: compare the empirical distribution of one party's shares for
+    two maximally different secrets (all-0 vs all-(p-1)) — quantiles must
+    agree within sampling noise, and both must look uniform on [0, p)."""
+    count, t, n = 20000, 2, 5
+    rng0 = np.random.default_rng(123)
+    rng1 = np.random.default_rng(123)   # same polynomial randomness
+    s0 = share(np.zeros(count, dtype=np.uint64), n, t, rng0)
+    s1 = share(np.full(count, P - 1, dtype=np.uint64), n, t, rng1)
+    for party in (0, 3):
+        a = np.sort(s0[party]).astype(np.float64) / P
+        b = np.sort(s1[party]).astype(np.float64) / P
+        # KS-style: max quantile gap ~ O(1/sqrt(count))
+        assert np.max(np.abs(a - b)) < 0.03
+        uniform = (np.arange(count) + 0.5) / count
+        assert np.max(np.abs(a - uniform)) < 0.03
+        assert abs(float(np.mean(a)) - 0.5) < 0.01
+    # and t shares do NOT reconstruct (degree-t poly needs t+1 points)
+    secrets = np.arange(100, dtype=np.uint64)
+    sh = share(secrets, n, t, np.random.default_rng(7))
+    wrong = reconstruct(sh[:t], list(range(t)))
+    assert not np.array_equal(wrong, secrets)
+
+
+# ---------------------------------------------------------------------------
+# fast-trace digest identity: vectorized builders == the DSL trace
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("num_workers", (3, 5))
+@pytest.mark.parametrize("name,n,builder", [
+    ("shamir_stats", 1024, build_shamir_stats_records),
+    ("shamir_cmp", 512, build_shamir_cmp_records),
+])
+def test_fast_builders_digest_identical(name, n, builder, num_workers):
+    progs = get(name).trace(n, num_workers=num_workers)
+    for worker in range(num_workers):
+        dsl = encode_chunk(strip_frees(progs[worker].instrs))
+        fast = builder(n, worker, num_workers)
+        assert dsl.shape == fast.shape, (worker, dsl.shape, fast.shape)
+        assert np.array_equal(dsl, fast), worker
+        assert hashlib.sha256(dsl.tobytes()).hexdigest() == \
+            hashlib.sha256(fast.tobytes()).hexdigest()
+
+
+def test_written_programs_match_dsl(tmp_path):
+    n, nw = 1024, 3
+    progs = get("shamir_stats").trace(n, num_workers=nw)
+    for worker, write in ((0, write_shamir_stats_program),
+                          (2, write_shamir_stats_program)):
+        pf = write(tmp_path / f"w{worker}.bc", n, worker, nw)
+        assert list(pf.iter_instrs()) == strip_frees(progs[worker].instrs)
+        assert pf.vspace_slots == progs[worker].vspace_slots
+        assert pf.meta["workload"] == "shamir_stats"
+    pf = write_shamir_cmp_program(tmp_path / "c.bc", 512, 1, 3)
+    cmp_progs = get("shamir_cmp").trace(512, num_workers=3)
+    assert list(pf.iter_instrs()) == strip_frees(cmp_progs[1].instrs)
+
+
+def test_traces_emit_visible_net_rounds():
+    """Every MUL round must surface as NET directives the planner and the
+    overlap pass can see: 2(n-1) messages per round per worker."""
+    n, nw = 1024, 3
+    b = n // 256
+    prog = get("shamir_stats").trace(n, num_workers=nw)[1]
+    sends = sum(1 for i in prog.instrs if i.op == Op.NET_SEND)
+    recvs = sum(1 for i in prog.instrs if i.op == Op.NET_RECV)
+    rounds = b + 1                       # b squares + mean^2
+    assert sends == rounds * (nw - 1) + 3   # + 3 reveal sends (worker != 0)
+    assert recvs == rounds * (nw - 1)
+    # workloads trace identically for any n >= 3 party count
+    prog5 = get("shamir_stats").trace(n, num_workers=5)[0]
+    assert sum(1 for i in prog5.instrs if i.op == Op.NET_RECV) == \
+        rounds * 4 + 3 * 4               # worker 0 also collects reveals
+
+
+def test_workload_validates_problem_size():
+    with pytest.raises(ValueError, match="multiple"):
+        get("shamir_stats").trace(1000, num_workers=3)
+    with pytest.raises(ValueError, match="num_workers >= 3"):
+        get("shamir_stats").trace(1024, num_workers=2)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: backends, budgets, registered drivers
+# ---------------------------------------------------------------------------
+
+
+def test_stats_identical_across_backends_under_budget():
+    kw = dict(workload="shamir_stats", n=1024, num_workers=3,
+              plan_mode="memory", memory_budget=0.5)
+    ref = run_job(JobSpec(exec_backend="scalar", **kw), check=True)
+    for backend in ("batched", "overlap"):
+        got = run_job(JobSpec(exec_backend=backend, **kw), check=True)
+        assert _digest(got) == _digest(ref), backend
+
+
+def test_cmp_reveals_exact_indicator():
+    out = run_job(JobSpec(workload="shamir_cmp", n=512, num_workers=3,
+                          plan_mode="unbounded"), check=True)
+    (v,) = out.values()
+    assert set(np.unique(v).tolist()) <= {0, 1}
+    assert v[:128].max() == 0 and v[128:].min() == 1
+
+
+def test_fixed_party_drivers_validate_worker_count():
+    spec = JobSpec(workload="shamir_stats", n=1024, num_workers=3,
+                   plan_mode="unbounded", driver="shamir-5party")
+    with pytest.raises(ValueError, match="num_workers=5"):
+        with Session(spec) as s:
+            s.execute()
+    ok = JobSpec(workload="shamir_stats", n=1024, num_workers=3,
+                 plan_mode="unbounded", driver="shamir-3party")
+    assert run_job(ok, check=True)
+
+
+def test_auto_driver_resolves_to_shamir():
+    spec = JobSpec(workload="shamir_stats", n=1024, num_workers=3,
+                   plan_mode="unbounded")
+    assert spec.normalized().driver == "shamir"

@@ -1,0 +1,202 @@
+"""Randomized n-party all-to-all transport fuzz.
+
+Property-based (via the ``_hypothesis_compat`` shim) schedules over 3-5
+ranks: every ordered pair of ranks exchanges a random message schedule
+(random tags from a small pool, random payload sizes), receivers consume
+each link in a random *bounded-displacement* permutation of the sender's
+order, and the link reorder buffers are depth-bounded to exactly that
+displacement bound — the largest buffer the permutation provably needs.
+Asserted invariants:
+
+ * no deadlock: every thread finishes and the closing all-to-all barrier
+   completes (joined with a hard timeout);
+ * exact byte/message accounting per (src, dst, tag) on the send side;
+ * FIFO per (src, dst, tag): same-tag messages arrive in send order even
+   when the cross-tag consumption order is scrambled;
+ * the reorder buffer's high-water mark never exceeds the configured
+   depth bound (``reorder_stats`` verifies, not assumes).
+"""
+
+import threading
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.transport import (InprocTransport, TcpTransport,
+                                  pick_free_ports)
+
+TAG_POOL = (100, 101, 102)
+JOIN_S = 30.0
+
+
+def _schedule(rng, n_ranks, n_msgs, depth):
+    """Per-link send orders + a displacement-<depth receive permutation.
+
+    Returns {(src, dst): (sends, recv_order)} where ``sends`` is a list
+    of (tag, payload) in send order and ``recv_order`` a permutation of
+    its indices with |perm_pos - send_pos| < depth, realizable with a
+    reorder buffer of ``depth`` messages."""
+    links = {}
+    for src in range(n_ranks):
+        for dst in range(n_ranks):
+            if src == dst:
+                continue
+            sends = []
+            for seq in range(n_msgs):
+                tag = int(rng.choice(TAG_POOL))
+                size = int(rng.integers(1, 64))
+                payload = np.full(size, seq, dtype=np.int64)
+                sends.append((tag, payload))
+            # sorting i + u, u in [0, depth), displaces every index < depth
+            keys = np.arange(n_msgs) + rng.uniform(0, depth, n_msgs)
+            recv_order = list(np.argsort(keys, kind="stable"))
+            assert max(abs(int(p) - i) for i, p in enumerate(recv_order)) \
+                < depth
+            links[(src, dst)] = (sends, recv_order)
+    return links
+
+
+def _run_fuzz(transports, links, depth, n_ranks):
+    """Drive the schedule: one sender thread per rank (interleaving its
+    outbound links), one receiver thread per link.  Per-link receivers
+    keep every link draining independently — with that topology a
+    bounded-displacement receive order provably cannot deadlock, which is
+    exactly what the joins (with timeout) check."""
+    for (src, dst) in links:
+        transports[dst].set_depth(src, dst, max_msgs=depth)
+    got = {key: [] for key in links}
+    errs = []
+
+    def sender(rank):
+        try:
+            my = [(k, v) for k, v in links.items() if k[0] == rank]
+            rng = np.random.default_rng(1000 + rank)
+            cursors = {k: 0 for k, _ in my}
+            pending = {k: s for k, (s, _) in my}
+            while any(cursors[k] < len(pending[k]) for k, _ in my):
+                k = my[rng.integers(len(my))][0]
+                if cursors[k] < len(pending[k]):
+                    tag, payload = pending[k][cursors[k]]
+                    transports[k[0]].send(k[0], k[1], tag, payload)
+                    cursors[k] += 1
+        except Exception as e:  # pragma: no cover - surfaced by the test
+            errs.append(e)
+
+    def receiver(key):
+        try:
+            sends, order = links[key]
+            # FIFO-per-tag fabric: receiving "send position i" means
+            # receiving the next undelivered message of i's tag
+            by_tag = {}
+            for i, (tag, _) in enumerate(sends):
+                by_tag.setdefault(tag, []).append(i)
+            taken = {tag: 0 for tag in by_tag}
+            for want in order:
+                tag = sends[want][0]
+                data = transports[key[1]].recv(key[0], key[1], tag,
+                                               timeout=JOIN_S)
+                send_pos = by_tag[tag][taken[tag]]
+                taken[tag] += 1
+                got[key].append((tag, send_pos, data))
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=sender, args=(r,), daemon=True)
+               for r in range(n_ranks)]
+    threads += [threading.Thread(target=receiver, args=(k,), daemon=True)
+                for k in links]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=JOIN_S)
+    assert not any(t.is_alive() for t in threads), \
+        "transport fuzz deadlocked (threads still alive)"
+    assert not errs, errs
+
+    # closing barrier completes on every rank
+    group = list(range(n_ranks))
+    bt = [threading.Thread(
+        target=lambda r=r: transports[r].barrier(r, group), daemon=True)
+        for r in group]
+    for t in bt:
+        t.start()
+    for t in bt:
+        t.join(timeout=JOIN_S)
+    assert not any(t.is_alive() for t in bt), "barrier deadlocked"
+    return got
+
+
+def _check_results(transports, links, got, depth, n_ranks):
+    # exact send-side accounting per (src, dst, tag)
+    for src in range(n_ranks):
+        stats = transports[src].stats()
+        for (s, d), (sends, _) in links.items():
+            if s != src:
+                continue
+            for tag in TAG_POOL:
+                mine = [p for t, p in sends if t == tag]
+                key = (s, d, tag)
+                if not mine:
+                    assert key not in stats
+                    continue
+                assert stats[key].messages == len(mine)
+                assert stats[key].bytes == sum(p.nbytes for p in mine)
+    for key, (sends, _) in links.items():
+        # everything arrived, with the right payload for its send slot
+        assert len(got[key]) == len(sends)
+        for tag, send_pos, data in got[key]:
+            assert sends[send_pos][0] == tag
+            assert np.array_equal(data, sends[send_pos][1])
+        # FIFO per tag: send positions per tag arrive increasing
+        for tag in TAG_POOL:
+            pos = [p for t, p, _ in got[key] if t == tag]
+            assert pos == sorted(pos)
+    # the depth bound actually held (high-water mark, receive side)
+    for rank in range(n_ranks):
+        for (s, d), rs in transports[rank].reorder_stats().items():
+            if (s, d) in links and d == rank:
+                assert rs.peak_msgs <= depth
+                assert rs.pending_msgs == 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(3, 5), st.integers(2, 6), st.integers(0, 2**32 - 1))
+def test_inproc_all_to_all_fuzz(n_ranks, depth, seed):
+    rng = np.random.default_rng(seed)
+    links = _schedule(rng, n_ranks, n_msgs=30, depth=depth)
+    tx = InprocTransport(n_ranks)
+    transports = {r: tx for r in range(n_ranks)}
+    try:
+        got = _run_fuzz(transports, links, depth, n_ranks)
+        _check_results(transports, links, got, depth, n_ranks)
+    finally:
+        tx.close()
+
+
+@pytest.mark.parametrize("n_ranks,depth,seed", [(3, 3, 0), (4, 2, 7)])
+def test_tcp_all_to_all_fuzz(n_ranks, depth, seed):
+    """Same schedule over a real localhost TCP fleet (one endpoint per
+    rank, co-hosted), exercising the reader threads, the per-link
+    ``set_depth`` backpressure path and the socket close path."""
+    rng = np.random.default_rng(seed)
+    links = _schedule(rng, n_ranks, n_msgs=12, depth=depth)
+    addrs = [f"127.0.0.1:{p}" for p in pick_free_ports(n_ranks)]
+    transports = {r: TcpTransport(r, addrs) for r in range(n_ranks)}
+    try:
+        for t in transports.values():
+            t.listen()
+        # co-hosted ranks block on each other's inbound connections:
+        # dial concurrently (what Fabric.connect does)
+        ct = [threading.Thread(target=t.connect, daemon=True)
+              for t in transports.values()]
+        for t in ct:
+            t.start()
+        for t in ct:
+            t.join(timeout=JOIN_S)
+        assert not any(t.is_alive() for t in ct)
+        got = _run_fuzz(transports, links, depth, n_ranks)
+        _check_results(transports, links, got, depth, n_ranks)
+    finally:
+        for t in transports.values():
+            t.close()
